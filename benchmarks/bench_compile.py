@@ -1,0 +1,86 @@
+"""Figure 8: total elapsed time including compilation (cold plan cache).
+
+Froid adds binding/algebrization/rewrite + a bigger query tree to compile;
+the paper's claim is that this overhead is dwarfed by execution gains.
+We measure (bind+optimize+compile+run) cold for froid ON vs the iterative
+baselines.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from benchmarks.bench_factor import UDF_QUERIES, _register
+from repro.core import Database
+
+N_ROWS = 10_000
+N_INTERP = 200
+
+
+def run(quick: bool = False):
+    rng = np.random.default_rng(0)
+    names = list(UDF_QUERIES)[:3] if quick else list(UDF_QUERIES)
+    for name in names:
+        db = Database()
+        db.create_table(
+            "detail",
+            d_key=rng.integers(0, 400, 30_000),
+            d_val=rng.uniform(0, 10, 30_000).astype(np.float32),
+        )
+        db.create_table(
+            "T",
+            d=rng.integers(8_000, 20_000, N_ROWS),
+            diff=rng.integers(0, 60, N_ROWS),
+            a=rng.integers(0, 500, N_ROWS),
+            b=rng.integers(0, 500, N_ROWS),
+            major=rng.integers(1, 20, N_ROWS),
+            minor=rng.integers(0, 300, N_ROWS),
+        )
+        _register(db)
+        q = UDF_QUERIES[name]()
+
+        t0 = time.perf_counter()
+        plan_t0 = time.perf_counter()
+        fn, _ = db.run_compiled(q, froid=True)  # bind + rewrite
+        fn()  # compile + run
+        t_cold = time.perf_counter() - t0
+        emit(f"fig8/{name}/froid_on_cold", t_cold * 1e6, "bind+compile+run")
+
+        # iterative cold (per-statement plans compiled on first rows)
+        from repro.tables.table import Column, Table
+
+        t_tab = db.catalog["T"]
+        db.catalog["T_sub"] = Table(
+            {n: Column(c.data[:N_INTERP], None, c.dictionary)
+             for n, c in t_tab.columns.items()}
+        )
+        from repro.core import scan as _scan
+
+        q_sub = _scan("T_sub").node
+        # rebuild the same compute on the subset table
+        import copy
+
+        q2 = UDF_QUERIES[name]()
+        q2.node = _retarget(q2.node, "T", "T_sub")
+        t0 = time.perf_counter()
+        db.run(q2, froid=False, mode="python")
+        t_off = (time.perf_counter() - t0) * N_ROWS / N_INTERP
+        emit(f"fig8/{name}/froid_off_cold", t_off * 1e6,
+             f"gain={t_off/t_cold:.0f}x (extrapolated)")
+
+
+def _retarget(plan, old, new):
+    from repro.core import relalg as R
+
+    def fix(node):
+        if isinstance(node, R.Scan) and node.table == old:
+            return R.Scan(new)
+        return None
+
+    return R.transform_plan(plan, fix)
+
+
+if __name__ == "__main__":
+    run()

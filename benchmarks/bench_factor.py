@@ -1,0 +1,154 @@
+"""Figures 11/12: factor of improvement per UDF (W1/W2-style workloads).
+
+UDFs adapted from the paper's §9 real-world examples (structure preserved):
+date bucketing (BeginOfHour/DayOfWeek), report bracketing (RptBracket),
+threshold flags with EXISTS lookups (F1/F2 style), and numeric parsing
+stand-ins.  Factor = iterative (interpreted, per-row) / froid ON, measured
+at N rows.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_run
+from repro.core import (
+    Database,
+    UdfBuilder,
+    case,
+    col,
+    count_,
+    datepart,
+    exists,
+    func,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+
+N_ROWS = 20_000
+N_INTERP = 300  # interpreted-mode sample size
+
+
+def _register(db):
+    # dbo.DayOfWeek
+    u = UdfBuilder("day_of_week", [("d", "date")], "int32")
+    u.return_(datepart("dw", param("d")))
+    db.create_function(u.build())
+
+    # dbo.RptBracket (two RETURNs + arithmetic)
+    u = UdfBuilder("rpt_bracket", [("mydiff", "int32"), ("ndays", "int32")],
+                   "int32")
+    with u.if_(param("mydiff") >= 5 * param("ndays")):
+        u.return_(5 * param("ndays"))
+    u.return_((param("mydiff") // param("ndays")) * param("ndays"))
+    db.create_function(u.build())
+
+    # F2-style lookup flag (EXISTS over a detail table)
+    u = UdfBuilder("has_rows", [("k", "int32")], "bool")
+    u.declare("flag", "bool")
+    with u.if_(exists(scan("detail").filter(col("d_key") == param("k")))
+               | param("k").is_null()):
+        u.set("flag", lit(True))
+    with u.else_():
+        u.set("flag", lit(False))
+    u.return_(var("flag"))
+    db.create_function(u.build())
+
+    # F1-style conjunction of nested calls
+    u = UdfBuilder("all_present", [("a", "int32"), ("b", "int32")], "bool")
+    with u.if_((udf("has_rows", param("a")) == lit(True))
+               & (udf("has_rows", param("b")) == lit(True))):
+        u.return_(lit(True))
+    u.return_(lit(False))
+    db.create_function(u.build())
+
+    # version-as-float stand-in (pure arithmetic slicing)
+    u = UdfBuilder("ver_float", [("major", "int32"), ("minor", "int32")],
+                   "float32")
+    with u.if_(param("major").is_null()):
+        u.return_(lit(0.0))
+    u.declare("m", "float32", param("minor") * 1.0)
+    with u.if_(var("m") >= 100.0):
+        u.set("m", var("m") / 100.0)
+    with u.else_():
+        with u.if_(var("m") >= 10.0):
+            u.set("m", var("m") / 10.0)
+    u.return_(param("major") + var("m") / 10.0)
+    db.create_function(u.build())
+
+    # aggregating UDF (inner query per row — the expensive class)
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    u.return_(func("least", var("s"), lit(1e6)))
+    db.create_function(u.build())
+
+
+UDF_QUERIES = {
+    "day_of_week": lambda: scan("T").compute(v=udf("day_of_week", col("d"))),
+    "rpt_bracket": lambda: scan("T").compute(
+        v=udf("rpt_bracket", col("diff"), lit(7))
+    ),
+    "has_rows": lambda: scan("T").compute(v=udf("has_rows", col("a"))),
+    "all_present": lambda: scan("T").compute(
+        v=udf("all_present", col("a"), col("b"))
+    ),
+    "ver_float": lambda: scan("T").compute(
+        v=udf("ver_float", col("major"), col("minor"))
+    ),
+    "key_total": lambda: scan("T").compute(v=udf("key_total", col("a"))),
+}
+
+
+def run(quick: bool = False, n_rows: int = N_ROWS):
+    db = Database()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, 30_000),
+        d_val=rng.uniform(0, 10, 30_000).astype(np.float32),
+    )
+    db.create_table(
+        "T",
+        d=rng.integers(8_000, 20_000, n_rows),
+        diff=rng.integers(0, 60, n_rows),
+        a=rng.integers(0, 500, n_rows),
+        b=rng.integers(0, 500, n_rows),
+        major=rng.integers(1, 20, n_rows),
+        minor=rng.integers(0, 300, n_rows),
+    )
+    _register(db)
+
+    names = list(UDF_QUERIES)[:3] if quick else list(UDF_QUERIES)
+    for name in names:
+        q = UDF_QUERIES[name]()
+        fn_on, _ = db.run_compiled(q, froid=True)
+        t_on = time_run(fn_on)
+
+        # interpreted per-row cost from a sample, extrapolated
+        sub = Database()
+        sub.catalog = dict(db.catalog)
+        from repro.tables.table import Column, Table
+
+        t_tab = db.catalog["T"]
+        sub.catalog["T"] = Table(
+            {n: Column(c.data[:N_INTERP], None, c.dictionary)
+             for n, c in t_tab.columns.items()}
+        )
+        _register(sub)
+        r = sub.run(q, froid=False, mode="python")
+        t_off = r.elapsed_s * n_rows / N_INTERP
+
+        fn_nat, _ = db.run_compiled(q, froid=False, mode="scan")
+        t_nat = time_run(fn_nat, warmup=1, iters=1)
+        emit(f"fig11/{name}", t_on * 1e6,
+             f"factor_vs_interpreted={t_off/t_on:.0f}x "
+             f"factor_vs_native_iter={t_nat/t_on:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

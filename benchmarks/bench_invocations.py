@@ -1,0 +1,93 @@
+"""Figure 7: time vs number of UDF invocations (cardinality of T).
+
+Three series, as in the paper:
+  * froid OFF, interpreted          (solid line)   — python mode
+  * froid OFF, natively compiled    (Table 5 mode) — scan mode
+  * froid ON                        (dashed line)  — set-oriented plan
+
+The UDF is F1-style: calls a second UDF and runs a lookup query per
+invocation, so froid OFF does O(N·M) work.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_run
+from repro.core import (
+    Database,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+
+CARDINALITIES = (10, 100, 1_000, 10_000, 100_000)
+PYTHON_MODE_CAP = 1_000  # interpreted per-row execution gets slow fast
+M_ROWS = 20_000  # inner table size
+
+
+def _setup(n_keys=500):
+    db = Database()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, n_keys, M_ROWS),
+        d_val=rng.uniform(0, 100, M_ROWS).astype(np.float32),
+    )
+
+    u = UdfBuilder("F2", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+
+    u = UdfBuilder("F1", [("a", "int32"), ("b", "float32")], "float32")
+    u.declare("total", "float32")
+    u.set("total", udf("F2", param("a")))
+    with u.if_(var("total") > 1000.0):
+        u.return_(var("total") * param("b"))
+    u.return_(var("total"))
+    db.create_function(u.build())
+    return db, n_keys
+
+
+def run(quick: bool = False):
+    db, n_keys = _setup()
+    rng = np.random.default_rng(1)
+    cards = CARDINALITIES[:3] if quick else CARDINALITIES
+    for n in cards:
+        db.create_table(
+            "T",
+            a=rng.integers(0, n_keys, n),
+            b=rng.uniform(0.5, 1.5, n).astype(np.float32),
+        )
+        q = scan("T").compute(v=udf("F1", col("a"), col("b"))).project("v")
+
+        # warm plan cache (paper: cached plans, compile excluded)
+        fn_on, _ = db.run_compiled(q, froid=True)
+        t_on = time_run(fn_on)
+        emit(f"fig7/froid_on/N={n}", t_on * 1e6, f"{t_on*1e9/max(n,1):.0f} ns/row")
+
+        fn_scan, _ = db.run_compiled(q, froid=False, mode="scan")
+        t_scan = time_run(fn_scan, warmup=1, iters=1 if n >= 10_000 else 3)
+        emit(f"fig7/native_iterative/N={n}", t_scan * 1e6,
+             f"speedup_vs_froid={t_scan/t_on:.0f}x")
+
+        if n <= PYTHON_MODE_CAP:
+            t_py = time_run(
+                lambda: db.run(q, froid=False, mode="python").masked.mask,
+                warmup=0, iters=1,
+            )
+            emit(f"fig7/interpreted/N={n}", t_py * 1e6,
+                 f"speedup_vs_froid={t_py/t_on:.0f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,72 @@
+"""Table 5 (Hekaton native compilation): the 2×2 of
+{interpreted, natively compiled} × {froid OFF, froid ON} on an
+inner-query UDF (where native compilation alone cannot remove the
+iterative O(N·M) work — the paper's point)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, time_run
+from repro.core import Database, UdfBuilder, col, param, scan, sum_, udf, var
+
+N = 2_000
+M = 20_000
+N_INTERP = 200
+
+
+def run(quick: bool = False):
+    db = Database()
+    rng = np.random.default_rng(0)
+    db.create_table("detail", d_key=rng.integers(0, 500, M),
+                    d_val=rng.uniform(0, 100, M).astype(np.float32))
+    db.create_table("T", a=rng.integers(0, 500, N))
+    u = UdfBuilder("fare_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    q = scan("T").compute(v=udf("fare_total", col("a")))
+
+    # interpreted + froid OFF (classic)
+    sub_q = scan("T").filter(col("a") >= 0).compute(v=udf("fare_total", col("a")))
+    r = db.run(
+        scan("T").compute(v=udf("fare_total", col("a"))) if N <= N_INTERP
+        else _cap(db, q), froid=False, mode="python",
+    )
+    t_interp = r.elapsed_s * (N / min(N, N_INTERP))
+    emit("table5/interpreted_froid_off", t_interp * 1e6, "extrapolated")
+
+    # native (compiled) + froid OFF: still iterative
+    fn, _ = db.run_compiled(q, froid=False, mode="scan")
+    t_native_off = time_run(fn, warmup=1, iters=2)
+    emit("table5/native_froid_off", t_native_off * 1e6,
+         f"vs_interpreted={t_interp/t_native_off:.1f}x")
+
+    # interpreted query + froid ON (plan built each call, no caching)
+    t_on_interp = time_run(lambda: db.run(q, froid=True).masked.mask,
+                           warmup=1, iters=2)
+    emit("table5/interpreted_froid_on", t_on_interp * 1e6, "")
+
+    # native + froid ON: compiled set-oriented plan
+    fn_on, _ = db.run_compiled(q, froid=True)
+    t_on = time_run(fn_on)
+    emit("table5/native_froid_on", t_on * 1e6,
+         f"total_gain={t_interp/t_on:.0f}x")
+
+
+def _cap(db, q):
+    from repro.tables.table import Column, Table
+
+    t = db.catalog["T"]
+    db.catalog["T_cap"] = Table(
+        {n: Column(c.data[:N_INTERP], None, c.dictionary)
+         for n, c in t.columns.items()}
+    )
+    from repro.core import scan as _scan, udf as _udf, col as _col
+
+    return _scan("T_cap").compute(v=_udf("fare_total", _col("a")))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+ROWS: list[tuple] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def time_run(fn, *, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds over ``iters`` after ``warmup`` runs."""
+    for _ in range(warmup):
+        r = fn()
+        jax.block_until_ready(jax.tree.leaves(r)) if r is not None else None
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn()
+        if r is not None:
+            jax.block_until_ready([x for x in jax.tree.leaves(r)
+                                   if hasattr(x, "block_until_ready")] or [0])
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run_query(db, q, froid, mode="python", **kw):
+    res = db.run(q, froid=froid, mode=mode, **kw)
+    return res

@@ -1,0 +1,57 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,fig9,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced cardinalities / query subsets")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig7,fig8,fig9,fig11,fig13,table4,table5")
+    args, _ = ap.parse_known_args()
+
+    from benchmarks import (
+        bench_batchmode,
+        bench_compile,
+        bench_factor,
+        bench_invocations,
+        bench_native,
+        bench_resources,
+        bench_tpch,
+    )
+
+    suites = {
+        "fig7": bench_invocations.run,     # invocation-count sweep
+        "fig8": bench_compile.run,         # cold-cache compile overhead
+        "fig9": bench_tpch.run,            # TPC-H queries with UDFs
+        "fig11": bench_factor.run,         # factor of improvement (W1/W2)
+        "fig13": bench_resources.run,      # CPU time + logical reads (fig14)
+        "table4": bench_batchmode.run,     # batch mode / relagg kernel
+        "table5": bench_native.run,        # native compilation quadrant
+    }
+    only = args.only.split(",") if args.only else list(suites)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for key in only:
+        try:
+            suites[key](quick=args.quick)
+        except Exception as e:
+            failed.append(key)
+            print(f"{key}/ERROR,0,{type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark suites failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+# Froid in JAX — the paper's primary contribution: an optimization framework
+# that algebrizes imperative UDFs into relational expressions, inlines them
+# into calling queries at binding time, and executes set-oriented vectorized
+# plans (paper: "Optimization of Imperative Programs in a Relational
+# Database", PVLDB 11(4), 2017).
+from repro.core.algebrizer import AlgebrizeError, algebrize
+from repro.core.binder import Binder, InlineConstraints
+from repro.core.database import Database, RunResult
+from repro.core.executor import Executor, MaskedTable
+from repro.core.frontend import (
+    Q,
+    UdfBuilder,
+    avg_,
+    between,
+    case,
+    cast,
+    coalesce,
+    col,
+    count_,
+    dateadd,
+    datepart,
+    exists,
+    func,
+    in_list,
+    isnull,
+    like,
+    lit,
+    max_,
+    min_,
+    not_exists,
+    param,
+    scalar_subquery,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.core.interpreter import Interpreter
+from repro.core.ir import Assign, Declare, IfElse, Return, UdfDef
+from repro.core.optimizer import explain, optimize
+
+__all__ = [
+    "AlgebrizeError", "algebrize", "Binder", "InlineConstraints", "Database",
+    "RunResult", "Executor", "MaskedTable", "Q", "UdfBuilder", "avg_",
+    "between", "case", "cast", "coalesce", "col", "count_", "dateadd",
+    "datepart", "exists", "func", "in_list", "isnull", "like", "lit", "max_",
+    "min_", "not_exists", "param", "scalar_subquery", "scan", "sum_", "udf",
+    "var", "Interpreter", "Assign", "Declare", "IfElse", "Return", "UdfDef",
+    "explain", "optimize",
+]

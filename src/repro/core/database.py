@@ -1,0 +1,157 @@
+"""The engine facade: catalog + UDF registry + query execution modes.
+
+Execution modes (paper experiment axes):
+
+* ``froid=True``  (default): bind-time UDF inlining + rewrite rules +
+  set-oriented vectorized execution — the paper's contribution.
+* ``froid=False, mode="python"``: iterative interpreted UDFs (the classic
+  evaluation the paper §2 describes).
+* ``froid=False, mode="scan"``: natively-compiled-but-still-iterative UDFs
+  (Hekaton analogue, Table 5).
+
+``run_compiled`` returns a jitted callable over the catalog arrays — the
+"cached plan" used for warm-cache benchmark runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import optimizer as O
+from repro.core import relalg as R
+from repro.core.binder import Binder, InlineConstraints
+from repro.core.executor import Executor, MaskedTable
+from repro.core.frontend import Q
+from repro.core.interpreter import Interpreter
+from repro.core.ir import UdfDef
+from repro.tables.table import Table
+
+
+@dataclasses.dataclass
+class RunResult:
+    table: Table  # compacted result rows
+    masked: MaskedTable  # raw masked result (jit-friendly form)
+    plan: R.RelNode  # the executed plan (post-binding/optimization)
+    elapsed_s: float
+    stats: dict
+
+
+class Database:
+    def __init__(self, constraints: InlineConstraints | None = None):
+        self.catalog: dict[str, Table] = {}
+        self.registry: dict[str, UdfDef] = {}
+        self.constraints = constraints or InlineConstraints()
+
+    # -- DDL ---------------------------------------------------------------
+    def create_table(self, name: str, table: Table | None = None, **arrays):
+        t = table if table is not None else Table.from_arrays(**arrays)
+        t.compute_stats()  # histograms for the optimizer (§Perf)
+        self.catalog[name] = t
+        return t
+
+    def create_function(self, udf: UdfDef):
+        self.registry[udf.name] = udf
+        return udf
+
+    # -- planning ------------------------------------------------------------
+    def plan_for(self, query, froid: bool = True, optimize: bool = True) -> R.RelNode:
+        plan = query.node if isinstance(query, Q) else query
+        # the query's intended output schema (before inlining widens rows)
+        try:
+            wanted = R.output_columns(plan, self.catalog)
+        except Exception:
+            wanted = None
+        if froid:
+            binder = Binder(self.registry, self.constraints)
+            plan = binder.bind(plan)
+        if optimize:
+            plan = O.optimize(plan, self.catalog, required=set(wanted) if wanted else None)
+        if wanted is not None:
+            try:
+                have = R.output_columns(plan, self.catalog)
+            except Exception:
+                have = None
+            if have is not None and have != wanted:
+                plan = R.Project(plan, wanted)
+        return plan
+
+    def explain(self, query, froid: bool = True, optimize: bool = True) -> str:
+        return O.explain(self.plan_for(query, froid, optimize))
+
+    # -- execution -------------------------------------------------------------
+    def run(
+        self,
+        query,
+        froid: bool = True,
+        mode: str = "python",
+        optimize: bool = True,
+        params: dict | None = None,
+        jit_statements: bool = True,
+        pallas_agg: bool = False,
+    ) -> RunResult:
+        plan = self.plan_for(query, froid, optimize)
+        interp = Interpreter(
+            self.catalog, self.registry, mode=mode, jit_statements=jit_statements
+        )
+        executor = Executor(
+            self.catalog,
+            udf_column_evaluator=interp.eval_udf_call,
+            use_pallas_agg=pallas_agg,
+        )
+        t0 = time.perf_counter()
+        masked = executor.execute(plan, params=params)
+        jax.block_until_ready(masked.mask)
+        elapsed = time.perf_counter() - t0
+        stats = {**executor._stats, **interp.stats}
+        return RunResult(masked.compact(), masked, plan, elapsed, stats)
+
+    def run_compiled(self, query, froid: bool = True, mode: str = "scan",
+                     optimize: bool = True):
+        """Compile the whole plan once (the cached plan); returns
+        ``fn() -> (mask, {col: (data, valid)})`` plus the plan.
+
+        Table columns are passed as *arguments* to the jitted function (not
+        closed-over constants) so XLA cannot constant-fold the query away —
+        warm calls measure real execution.
+
+        With froid=False the UDF columns go through the iterative 'scan'
+        interpreter *inside* the compiled plan, matching "interpreted query
+        + native UDF" as closely as a tensor runtime can."""
+        from repro.tables.table import Column as _Column, Table as _Table
+
+        plan = self.plan_for(query, froid, optimize)
+        interp = Interpreter(self.catalog, self.registry, mode=mode)
+        hook = None if froid else interp.eval_udf_call
+
+        # host-side metadata (dictionaries) stays captured; data goes by arg
+        meta = {
+            tname: {c: col.dictionary for c, col in t.columns.items()}
+            for tname, t in self.catalog.items()
+        }
+
+        def raw(args):
+            catalog = {
+                tname: _Table(
+                    {
+                        c: _Column(data, valid, meta[tname][c])
+                        for c, (data, valid) in cols.items()
+                    }
+                )
+                for tname, cols in args.items()
+            }
+            ex = Executor(catalog, udf_column_evaluator=hook)
+            out = ex.execute(plan)
+            cols = {
+                n: (c.data, c.validity()) for n, c in out.table.columns.items()
+            }
+            return out.mask, cols
+
+        jitted = jax.jit(raw)
+        args = {
+            tname: {c: (col.data, col.validity()) for c, col in t.columns.items()}
+            for tname, t in self.catalog.items()
+        }
+        return (lambda: jitted(args)), plan

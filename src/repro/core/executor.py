@@ -1,0 +1,727 @@
+"""Set-oriented, vectorized plan executor.
+
+Design (TPU adaptation of the paper's set-oriented plans, DESIGN.md §2):
+
+* **Selection vectors, not compaction** — a plan value is a
+  :class:`MaskedTable` (full-width columns + bool row mask).  Filters AND
+  into the mask; no operator has a data-dependent output shape, so whole
+  plans trace under ``jax.jit`` / ``vmap`` (which is how correlated Apply
+  falls back to vectorized evaluation instead of a row loop).
+* **Joins** — sort + ``searchsorted`` (sort-merge) on the build side; the
+  build side must be key-unique (dimension semantics).  No hash tables: TPU
+  sorts are fast, random scatter is not.
+* **Group-by** — sort-based segmenting + ``jax.ops.segment_sum`` with a
+  *static* group capacity (default: the row count), or the fused Pallas
+  ``relagg`` kernel for the single-pass filter+project+aggregate hot path.
+* **CSE for free** — node results are memoized per execution, which is the
+  relational version of common-subexpression elimination (paper §6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.tables.table import Column, Table
+
+_F32_MAX = jnp.finfo(jnp.float32).max
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass
+class MaskedTable:
+    table: Table
+    mask: jnp.ndarray  # bool (n,)
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.mask.shape[0])
+
+    def env(self) -> dict[str, S.Value]:
+        return {
+            n: S.Value(c.data, c.valid, c.dictionary)
+            for n, c in self.table.columns.items()
+        }
+
+    def compact(self) -> Table:
+        """Host-side materialization of selected rows (not jit-safe; used
+        only at result-delivery time)."""
+        import numpy as np
+
+        idx = np.nonzero(np.asarray(self.mask))[0]
+        return self.table.gather(jnp.asarray(idx))
+
+
+def _value_to_column(v: S.Value, n: int) -> Column:
+    b = v.broadcast(n)
+    return Column(b.data, b.valid, b.dictionary)
+
+
+def _sort_key_for(col: Column, mask: jnp.ndarray) -> jnp.ndarray:
+    """Key array with masked/NULL rows pushed to the end (+inf sentinel)."""
+    data = col.data
+    ok = mask & col.validity()
+    if jnp.issubdtype(data.dtype, jnp.floating):
+        return jnp.where(ok, data, _F32_MAX)
+    return jnp.where(ok, data.astype(jnp.int32), _I32_MAX)
+
+
+class Executor:
+    """Evaluates relational plans over a catalog of named Tables."""
+
+    def __init__(
+        self,
+        catalog: dict[str, Table],
+        udf_column_evaluator: Callable | None = None,
+        use_pallas_agg: bool = False,
+    ):
+        self.catalog = catalog
+        # froid-OFF hook: computes a whole column by iterating the UDF per
+        # row (repro.core.interpreter wires this in)
+        self.udf_column_evaluator = udf_column_evaluator
+        self.use_pallas_agg = use_pallas_agg
+        self._stats = {"bytes_scanned": 0, "rows_scanned": 0}
+
+    # -- public API --------------------------------------------------------
+    def execute(self, plan: R.RelNode, params=None, outer=None, vars=None) -> MaskedTable:
+        ctx = S.EvalContext(
+            executor=self, params=params or {}, outer=outer or {}, vars=vars or {}
+        )
+        memo: dict[int, MaskedTable] = {}
+        return self._exec(plan, ctx, memo)
+
+    # -- node dispatch -----------------------------------------------------
+    def _exec(self, node: R.RelNode, ctx, memo) -> MaskedTable:
+        key = node.node_id
+        if key in memo:
+            return memo[key]
+        out = self._exec_node(node, ctx, memo)
+        memo[key] = out
+        return out
+
+    def _exec_node(self, node: R.RelNode, ctx, memo) -> MaskedTable:
+        if isinstance(node, R.Scan):
+            t = self.catalog[node.table]
+            self._stats["bytes_scanned"] += t.nbytes()
+            self._stats["rows_scanned"] += t.num_rows
+            n = t.num_rows
+            return MaskedTable(t, jnp.ones((n,), bool))
+
+        if isinstance(node, R.ConstantScan):
+            return MaskedTable(Table({}), jnp.ones((1,), bool))
+
+        if isinstance(node, R.Compute):
+            child = self._exec(node.child, ctx, memo)
+            n = child.num_rows
+            env = child.env()
+            cctx = S.EvalContext(self, n, ctx.params, ctx.outer, ctx.vars)
+            cctx.row_mask = child.mask  # for subquery short-circuits
+            table = child.table
+            for name, expr in node.computed.items():
+                v = S.eval_scalar(expr, env, cctx)
+                col = _value_to_column(v, n)
+                table = table.with_column(name, col)
+                env[name] = S.Value(col.data, col.valid, col.dictionary)
+            return MaskedTable(table, child.mask)
+
+        if isinstance(node, R.Project):
+            child = self._exec(node.child, ctx, memo)
+            cols = {new: child.table.columns[old] for new, old in node.cols.items()}
+            return MaskedTable(Table(cols), child.mask)
+
+        if isinstance(node, R.Filter):
+            child = self._exec(node.child, ctx, memo)
+            cctx = S.EvalContext(self, child.num_rows, ctx.params, ctx.outer, ctx.vars)
+            cctx.row_mask = child.mask
+            v = S.eval_scalar(node.pred, child.env(), cctx)
+            b = v.broadcast(child.num_rows)
+            pred = b.data.astype(bool) & b.validity()  # NULL -> false
+            return MaskedTable(child.table, child.mask & pred)
+
+        if isinstance(node, R.Join):
+            return self._exec_join(node, ctx, memo)
+
+        if isinstance(node, R.Apply):
+            return self._exec_apply(node, ctx, memo)
+
+        if isinstance(node, R.GroupAgg):
+            return self._exec_groupagg(node, ctx, memo)
+
+        if isinstance(node, R.Sort):
+            child = self._exec(node.child, ctx, memo)
+            n = child.num_rows
+            order = jnp.arange(n)
+            for colname, asc in reversed(node.keys):
+                col = child.table.columns[colname]
+                k = _sort_key_for(col, child.mask)
+                k = jnp.take(k, order)
+                if not asc:
+                    if jnp.issubdtype(k.dtype, jnp.floating):
+                        k = jnp.where(k == _F32_MAX, k, -k)
+                    else:
+                        k = jnp.where(k == _I32_MAX, k, -k)
+                order = jnp.take(order, jnp.argsort(k, stable=True))
+            # push masked-out rows last regardless of key values
+            mask_sorted = jnp.take(child.mask, order)
+            order = jnp.take(order, jnp.argsort(~mask_sorted, stable=True))
+            t = child.table.gather(order)
+            m = jnp.take(child.mask, order)
+            if node.limit is not None:
+                keep = jnp.arange(n) < node.limit
+                m = m & keep
+            return MaskedTable(t, m)
+
+        raise TypeError(f"unknown plan node {type(node).__name__}")
+
+    # -- join --------------------------------------------------------------
+    def _exec_join(self, node: R.Join, ctx, memo) -> MaskedTable:
+        if len(node.on) != 1:
+            raise NotImplementedError(
+                "multi-key joins: pre-Compute a packed key column (see DESIGN.md)"
+            )
+        lcol, rcol = node.on[0]
+        left = self._exec(node.left, ctx, memo)
+        right = self._exec(node.right, ctx, memo)
+
+        lk = left.table.columns[lcol]
+        rk = right.table.columns[rcol]
+        rkeys = _sort_key_for(rk, right.mask)
+        perm = jnp.argsort(rkeys, stable=True)
+        sorted_keys = jnp.take(rkeys, perm)
+
+        lkeys = _sort_key_for(lk, left.mask)
+        pos = jnp.searchsorted(sorted_keys, lkeys)
+        pos = jnp.clip(pos, 0, sorted_keys.shape[0] - 1)
+        hit = (jnp.take(sorted_keys, pos) == lkeys) & (lkeys != _key_sentinel(lkeys))
+        ridx = jnp.take(perm, pos)
+
+        if node.kind == "semi":
+            return MaskedTable(left.table, left.mask & hit)
+        if node.kind == "anti":
+            return MaskedTable(left.table, left.mask & ~hit)
+
+        rgathered = right.table.gather(ridx, valid=hit)
+        cols = dict(left.table.columns)
+        for name, col in rgathered.columns.items():
+            if name == rcol and rcol == lcol:
+                continue
+            if name in cols and name != rcol:
+                raise ValueError(f"join column collision: {name}")
+            cols[name] = col
+        mask = left.mask & hit if node.kind == "inner" else left.mask
+        return MaskedTable(Table(cols), mask)
+
+    # -- apply -------------------------------------------------------------
+    def _exec_apply(self, node: R.Apply, ctx, memo) -> MaskedTable:
+        left = self._exec(node.left, ctx, memo)
+        n = left.num_rows
+        correlated = _plan_has_outer(node.right)
+
+        if not correlated:
+            right = self._exec(node.right, ctx, memo)
+            if right.num_rows != 1:
+                raise NotImplementedError("uncorrelated Apply with multi-row right")
+            cols = dict(left.table.columns)
+            rvalid = right.mask[0]
+            for name, c in right.table.columns.items():
+                data = jnp.broadcast_to(c.data[0], (n,) + c.data.shape[1:])
+                valid = jnp.broadcast_to(c.validity()[0] & rvalid, (n,))
+                cols[name] = Column(data, valid, c.dictionary)
+            return MaskedTable(Table(cols), left.mask)
+
+        # Correlated right side rooted at ConstantScan (the algebrizer's
+        # region derived-tables): evaluate its Computes directly against the
+        # left columns — this is exactly "apply removal" performed at
+        # execution time, fully vectorized.
+        if _is_scalar_region(node.right):
+            return self._exec_region_apply(node, left, ctx, memo)
+
+        # Generic correlated apply: vmap the right plan over left rows.
+        return self._exec_vmap_apply(node, left, ctx, memo)
+
+    def _exec_region_apply(self, node, left: MaskedTable, ctx, memo) -> MaskedTable:
+        """Vectorized evaluation of a single-row derived table (an algebrized
+        region) against every left row at once: Outer(c) binds to the left
+        column c, ColRef(c) binds to region-local computed columns.  This is
+        the set-oriented execution of ``Apply`` — no per-row loop exists."""
+        n = left.num_rows
+        chain: list[R.RelNode] = []
+        cur = node.right
+        while isinstance(cur, (R.Compute, R.Project)):
+            chain.append(cur)
+            cur = cur.child
+        assert isinstance(cur, R.ConstantScan)
+
+        pt = None
+        if node.passthrough is not None:
+            v = S.eval_scalar(
+                node.passthrough,
+                left.env(),
+                S.EvalContext(self, n, ctx.params, ctx.outer, ctx.vars),
+            )
+            b = v.broadcast(n)
+            pt = b.data.astype(bool) & b.validity()
+
+        outer = {**ctx.outer, **left.env()}
+        env: dict[str, S.Value] = {}
+        cctx = S.EvalContext(self, n, ctx.params, outer, ctx.vars)
+        cctx.row_mask = left.mask
+        for nd in reversed(chain):
+            if isinstance(nd, R.Compute):
+                for name, expr in nd.computed.items():
+                    env[name] = S.eval_scalar(expr, env, cctx).broadcast(n)
+            else:  # Project
+                env = {new: env[old] for new, old in nd.cols.items()}
+
+        cols = dict(left.table.columns)
+        for name, v in env.items():
+            b = v.broadcast(n)
+            valid = b.validity()
+            if pt is not None:  # pass-through rows keep NULL right side
+                valid = valid & ~pt
+            cols[name] = Column(b.data, valid, b.dictionary)
+        return MaskedTable(Table(cols), left.mask)
+
+    def _exec_vmap_apply(self, node, left: MaskedTable, ctx, memo) -> MaskedTable:
+        n = left.num_rows
+        lenv = left.env()
+        names = list(lenv)
+        dicts = {m: lenv[m].dictionary for m in names}
+
+        captured_dicts: dict = {}
+
+        def one_row(scalars):
+            outer = {
+                m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names
+            }
+            outer = {**ctx.outer, **outer}
+            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+            res = sub.execute(node.right, params=ctx.params, outer=outer, vars=ctx.vars)
+            out = {}
+            for cname, c in res.table.columns.items():
+                found = jnp.any(res.mask)
+                idx = jnp.argmax(res.mask)
+                captured_dicts[cname] = c.dictionary  # host metadata
+                out[cname] = (
+                    jnp.take(c.data, idx, axis=0),
+                    jnp.take(c.validity(), idx) & found,
+                )
+            out["__exists"] = (jnp.any(res.mask), jnp.ones((), bool))
+            return out
+
+        args = {
+            m: (lenv[m].broadcast(n).data, lenv[m].broadcast(n).validity())
+            for m in names
+        }
+        mapped = jax.vmap(one_row)(args)
+
+        if node.kind == "semi":
+            return MaskedTable(left.table, left.mask & mapped["__exists"][0])
+        if node.kind == "anti":
+            return MaskedTable(left.table, left.mask & ~mapped["__exists"][0])
+
+        cols = dict(left.table.columns)
+        for cname, (data, valid) in mapped.items():
+            if cname == "__exists":
+                continue
+            cols[cname] = Column(data, valid, captured_dicts.get(cname))
+        mask = left.mask
+        if node.kind == "cross":
+            mask = mask & mapped["__exists"][0]
+        return MaskedTable(Table(cols), mask)
+
+    # -- group-by ----------------------------------------------------------
+    def _exec_groupagg(self, node: R.GroupAgg, ctx, memo) -> MaskedTable:
+        child = self._exec(node.child, ctx, memo)
+        n = child.num_rows
+        env = child.env()
+        cctx = S.EvalContext(self, n, ctx.params, ctx.outer, ctx.vars)
+
+        # Pre-evaluate aggregate input expressions (vectorized).
+        agg_inputs: dict[str, S.Value] = {}
+        for name, spec in node.aggs.items():
+            if spec.expr is not None:
+                agg_inputs[name] = S.eval_scalar(spec.expr, env, cctx).broadcast(n)
+
+        if not node.keys:
+            # full-table aggregate -> single row
+            cols = {}
+            for name, spec in node.aggs.items():
+                cols[name] = _full_agg(spec.fn, agg_inputs.get(name), child.mask)
+            return MaskedTable(Table(cols), jnp.ones((1,), bool))
+
+        # batch-mode path (paper §8.2.6): single dictionary/dense-int key and
+        # matmul-friendly aggregates -> fused relagg Pallas kernel (one-hot ×
+        # MXU partial aggregation; no sort)
+        if self.use_pallas_agg and len(node.keys) == 1:
+            out = self._try_relagg(node, child, agg_inputs)
+            if out is not None:
+                return out
+
+        # stats-driven dense-key path (§Perf hillclimb 3): key densely
+        # covers [lo, hi] -> gid = key - lo segmenting, NO sort
+        if node.dense_range is not None and len(node.keys) == 1:
+            out = self._dense_groupagg(node, child, agg_inputs)
+            if out is not None:
+                return out
+
+        # sort-based grouping with static capacity
+        cap = node.capacity or n
+        order = jnp.arange(n)
+        for k in reversed(node.keys):
+            keys = _sort_key_for(child.table.columns[k], child.mask)
+            keys = jnp.take(keys, order)
+            order = jnp.take(order, jnp.argsort(keys, stable=True))
+        mask_o = jnp.take(child.mask, order)
+        order = jnp.take(order, jnp.argsort(~mask_o, stable=True))
+        mask_o = jnp.take(child.mask, order)
+
+        sorted_keys = [
+            jnp.take(_sort_key_for(child.table.columns[k], child.mask), order)
+            for k in node.keys
+        ]
+        newgrp = jnp.zeros((n,), bool).at[0].set(True)
+        for sk in sorted_keys:
+            newgrp = newgrp | (sk != jnp.roll(sk, 1)).at[0].set(True)
+        newgrp = newgrp & mask_o
+        gid = jnp.cumsum(newgrp.astype(jnp.int32)) - 1
+        gid = jnp.where(mask_o, jnp.clip(gid, 0, cap - 1), cap)  # overflow slot
+
+        num_groups = jnp.max(jnp.where(mask_o, gid, -1)) + 1
+        occupied = jnp.arange(cap) < num_groups
+
+        cols: dict[str, Column] = {}
+        ones = jnp.ones((n,), jnp.float32)
+        for kname in node.keys:
+            kc = child.table.columns[kname]
+            kdata = jnp.take(kc.data, order)
+            if jnp.issubdtype(kdata.dtype, jnp.floating):
+                fill = jnp.asarray(-jnp.inf, kdata.dtype)
+            else:
+                fill = jnp.asarray(jnp.iinfo(kdata.dtype).min, kdata.dtype)
+            slot = jax.ops.segment_max(
+                jnp.where(mask_o, kdata, fill), gid, num_segments=cap + 1
+            )[:cap]
+            cols[kname] = Column(slot, occupied, kc.dictionary)
+
+        for name, spec in node.aggs.items():
+            if spec.fn == "count_star":
+                cnt = jax.ops.segment_sum(
+                    jnp.where(mask_o, ones, 0.0), gid, num_segments=cap + 1
+                )[:cap]
+                cols[name] = Column(cnt.astype(jnp.int32), occupied)
+                continue
+            v = agg_inputs[name]
+            data = jnp.take(v.data, order)
+            vvalid = jnp.take(v.validity(), order) & mask_o
+            if spec.fn in ("sum", "avg", "count"):
+                s = jax.ops.segment_sum(
+                    jnp.where(vvalid, data.astype(jnp.float32), 0.0),
+                    gid,
+                    num_segments=cap + 1,
+                )[:cap]
+                c = jax.ops.segment_sum(
+                    jnp.where(vvalid, 1.0, 0.0), gid, num_segments=cap + 1
+                )[:cap]
+                if spec.fn == "sum":
+                    cols[name] = Column(s, occupied & (c > 0))
+                elif spec.fn == "count":
+                    cols[name] = Column(c.astype(jnp.int32), occupied)
+                else:
+                    cols[name] = Column(
+                        s / jnp.where(c == 0, 1.0, c), occupied & (c > 0)
+                    )
+            elif spec.fn in ("min", "max"):
+                seg = jax.ops.segment_min if spec.fn == "min" else jax.ops.segment_max
+                sent = jnp.inf if spec.fn == "min" else -jnp.inf
+                m = seg(
+                    jnp.where(vvalid, data.astype(jnp.float32), sent),
+                    gid,
+                    num_segments=cap + 1,
+                )[:cap]
+                any_v = (
+                    jax.ops.segment_sum(
+                        jnp.where(vvalid, 1.0, 0.0), gid, num_segments=cap + 1
+                    )[:cap]
+                    > 0
+                )
+                cols[name] = Column(m, occupied & any_v)
+            else:
+                raise NotImplementedError(spec.fn)
+        return MaskedTable(Table(cols), occupied)
+
+    def _dense_groupagg(self, node: R.GroupAgg, child: MaskedTable, agg_inputs):
+        """Sort-free grouped aggregation for a dense int key range
+        [lo, hi]: gid = key - lo, segment ops sized to the range."""
+        key = node.keys[0]
+        kc = child.table.columns[key]
+        if not jnp.issubdtype(kc.dtype, jnp.integer):
+            return None
+        lo, hi = node.dense_range
+        cap = hi - lo + 1
+        n = child.num_rows
+        gid = kc.data.astype(jnp.int32) - lo
+        inside = (gid >= 0) & (gid < cap) & child.mask & kc.validity()
+        gid = jnp.where(inside, gid, cap)  # overflow slot
+
+        cols: dict[str, Column] = {}
+        cnt_rows = jax.ops.segment_sum(
+            inside.astype(jnp.float32), gid, num_segments=cap + 1
+        )[:cap]
+        occupied = cnt_rows > 0
+        cols[key] = Column(
+            (jnp.arange(cap, dtype=jnp.int32) + lo).astype(kc.data.dtype),
+            occupied,
+            kc.dictionary,
+        )
+        for name, spec in node.aggs.items():
+            if spec.fn == "count_star":
+                cols[name] = Column(cnt_rows.astype(jnp.int32), occupied)
+                continue
+            v = agg_inputs[name]
+            vvalid = v.validity() & inside
+            data = v.data
+            if spec.fn in ("sum", "avg", "count"):
+                s = jax.ops.segment_sum(
+                    jnp.where(vvalid, data.astype(jnp.float32), 0.0),
+                    gid, num_segments=cap + 1,
+                )[:cap]
+                c = jax.ops.segment_sum(
+                    jnp.where(vvalid, 1.0, 0.0), gid, num_segments=cap + 1
+                )[:cap]
+                if spec.fn == "sum":
+                    cols[name] = Column(s, occupied & (c > 0))
+                elif spec.fn == "count":
+                    cols[name] = Column(c.astype(jnp.int32), occupied)
+                else:
+                    cols[name] = Column(
+                        s / jnp.where(c == 0, 1.0, c), occupied & (c > 0)
+                    )
+            elif spec.fn in ("min", "max"):
+                seg = jax.ops.segment_min if spec.fn == "min" else jax.ops.segment_max
+                sent = jnp.inf if spec.fn == "min" else -jnp.inf
+                m = seg(
+                    jnp.where(vvalid, data.astype(jnp.float32), sent),
+                    gid, num_segments=cap + 1,
+                )[:cap]
+                any_v = jax.ops.segment_sum(
+                    jnp.where(vvalid, 1.0, 0.0), gid, num_segments=cap + 1
+                )[:cap] > 0
+                cols[name] = Column(m, occupied & any_v)
+            else:
+                return None
+        return MaskedTable(Table(cols), occupied)
+
+    def _try_relagg(self, node: R.GroupAgg, child: MaskedTable, agg_inputs):
+        """Fused group-by via the relagg kernel.  Applicable when the key is
+        dictionary-encoded (G = vocab size) or a capacity hint bounds a
+        non-negative int key, and all aggs are sum/avg/count/count_star."""
+        from repro.kernels.relagg.ops import grouped_aggregate
+
+        key = node.keys[0]
+        kc = child.table.columns[key]
+        if kc.dictionary is not None:
+            G = len(kc.dictionary)
+        elif node.capacity is not None and jnp.issubdtype(kc.dtype, jnp.integer):
+            G = int(node.capacity)
+        else:
+            return None
+        if not all(a.fn in ("sum", "avg", "count", "count_star")
+                   for a in node.aggs.values()):
+            return None
+
+        n = child.num_rows
+        mask = child.mask & kc.validity() & (kc.data >= 0) & (kc.data < G)
+        cols_spec: list[tuple[str, str, int, int]] = []  # (name, fn, vi, ci)
+        mats = []
+        for name, spec in node.aggs.items():
+            if spec.fn == "count_star":
+                cols_spec.append((name, spec.fn, -1, -1))
+                continue
+            v = agg_inputs[name]
+            vv = v.validity()
+            data = jnp.where(vv, v.data.astype(jnp.float32), 0.0)
+            mats.append(data)
+            vi = len(mats) - 1
+            mats.append(jnp.where(vv, 1.0, 0.0))  # per-agg valid count
+            cols_spec.append((name, spec.fn, vi, vi + 1))
+        vals = (
+            jnp.stack(mats, axis=1)
+            if mats
+            else jnp.zeros((n, 1), jnp.float32)
+        )
+        sums, counts = grouped_aggregate(
+            kc.data.astype(jnp.int32), mask, vals, G
+        )
+        occupied = counts > 0
+        out_cols: dict[str, Column] = {
+            key: Column(jnp.arange(G, dtype=kc.data.dtype), occupied, kc.dictionary)
+        }
+        for name, fn, vi, ci in cols_spec:
+            if fn == "count_star":
+                out_cols[name] = Column(counts.astype(jnp.int32), occupied)
+            elif fn == "count":
+                out_cols[name] = Column(sums[:, ci].astype(jnp.int32), occupied)
+            elif fn == "sum":
+                out_cols[name] = Column(sums[:, vi], occupied & (sums[:, ci] > 0))
+            else:  # avg
+                c = sums[:, ci]
+                out_cols[name] = Column(
+                    sums[:, vi] / jnp.where(c == 0, 1.0, c),
+                    occupied & (c > 0),
+                )
+        return MaskedTable(Table(out_cols), occupied)
+
+    # -- scalar-subquery hooks (called from scalar.eval_scalar) -------------
+    def eval_scalar_subquery(self, expr: S.ScalarSubquery, env, ctx) -> S.Value:
+        correlated = _plan_has_outer(expr.plan)
+        if not correlated:
+            res = self.execute(expr.plan, params=ctx.params, outer=ctx.outer, vars=ctx.vars)
+            return _extract_scalar(res, expr.column)
+        # correlated: vmap the whole subplan over outer rows
+        n = ctx.num_rows
+        names = sorted(
+            _plan_outer_refs(expr.plan) & set(env.keys() | ctx.outer.keys())
+        )
+        dicts = {}
+        cols = {}
+        for m in names:
+            v = env.get(m, ctx.outer.get(m))
+            b = v.broadcast(n)
+            cols[m] = (b.data, b.validity())
+            dicts[m] = v.dictionary
+
+        captured: dict = {}
+
+        def one(scalars):
+            outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}
+            outer = {**ctx.outer, **outer}
+            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+            res = sub.execute(expr.plan, params=ctx.params, outer=outer, vars=ctx.vars)
+            v = _extract_scalar(res, expr.column)
+            captured["dict"] = v.dictionary  # host metadata, set at trace time
+            return v.data, v.validity()
+
+        data, valid = jax.vmap(one)(cols)
+        return S.Value(data, valid, captured.get("dict"))
+
+    def eval_exists(self, expr: S.Exists, env, ctx) -> S.Value:
+        correlated = _plan_has_outer(expr.plan)
+        if not correlated:
+            res = self.execute(expr.plan, params=ctx.params, outer=ctx.outer, vars=ctx.vars)
+            v = jnp.any(res.mask)
+            return S.Value(~v if expr.negated else v)
+        n = ctx.num_rows
+        names = sorted(
+            _plan_outer_refs(expr.plan) & set(env.keys() | ctx.outer.keys())
+        )
+        dicts = {m: env.get(m, ctx.outer.get(m)).dictionary for m in names}
+        cols = {}
+        for m in names:
+            v = env.get(m, ctx.outer.get(m))
+            b = v.broadcast(n)
+            cols[m] = (b.data, b.validity())
+
+        def one(scalars):
+            outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}
+            outer = {**ctx.outer, **outer}
+            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+            res = sub.execute(expr.plan, params=ctx.params, outer=outer, vars=ctx.vars)
+            return jnp.any(res.mask)
+
+        data = jax.vmap(one)(cols)
+        return S.Value(~data if expr.negated else data)
+
+    def eval_udf_call(self, expr: S.UdfCall, env, ctx) -> S.Value:
+        if self.udf_column_evaluator is None:
+            raise RuntimeError(
+                f"UDF {expr.name!r} not inlined and no iterative evaluator "
+                "attached (enable froid, or run via the interpreter)"
+            )
+        return self.udf_column_evaluator(expr, env, ctx)
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _key_sentinel(keys: jnp.ndarray):
+    return _F32_MAX if jnp.issubdtype(keys.dtype, jnp.floating) else _I32_MAX
+
+
+def _full_agg(fn: str, v: S.Value | None, mask: jnp.ndarray) -> Column:
+    n = mask.shape[0]
+    if fn == "count_star":
+        return Column(jnp.sum(mask).astype(jnp.int32)[None], jnp.ones((1,), bool))
+    assert v is not None
+    sel = mask & v.validity()
+    data = v.data
+    if fn == "count":
+        return Column(jnp.sum(sel).astype(jnp.int32)[None], jnp.ones((1,), bool))
+    if fn == "sum":
+        s = jnp.sum(jnp.where(sel, data.astype(jnp.float32), 0.0))
+        return Column(s[None], jnp.any(sel)[None])
+    if fn == "avg":
+        s = jnp.sum(jnp.where(sel, data.astype(jnp.float32), 0.0))
+        c = jnp.sum(sel)
+        return Column((s / jnp.where(c == 0, 1, c))[None], (c > 0)[None])
+    if fn == "min":
+        m = jnp.min(jnp.where(sel, data.astype(jnp.float32), jnp.inf))
+        return Column(m[None], jnp.any(sel)[None])
+    if fn == "max":
+        m = jnp.max(jnp.where(sel, data.astype(jnp.float32), -jnp.inf))
+        return Column(m[None], jnp.any(sel)[None])
+    raise NotImplementedError(fn)
+
+
+def _extract_scalar(res: MaskedTable, column: str | None) -> S.Value:
+    names = res.table.names()
+    if column is None:
+        if len(names) != 1:
+            raise ValueError(f"scalar subquery must produce 1 column, got {names}")
+        column = names[0]
+    c = res.table.columns[column]
+    found = jnp.any(res.mask)
+    idx = jnp.argmax(res.mask)
+    return S.Value(
+        jnp.take(c.data, idx, axis=0),
+        jnp.take(c.validity(), idx) & found,
+        c.dictionary,
+    )
+
+
+def _plan_has_outer(plan: R.RelNode) -> bool:
+    return len(_plan_outer_refs(plan)) > 0
+
+
+def _plan_outer_refs(plan: R.RelNode) -> set[str]:
+    out: set[str] = set()
+    for node in R.walk_plan(plan):
+        for e in node.exprs():
+            out |= S.free_outer(e)
+        if isinstance(node, R.Compute):
+            for e in node.computed.values():
+                out |= S.free_outer(e)
+                for sub in S.walk(e):
+                    if isinstance(sub, (S.ScalarSubquery, S.Exists)):
+                        out |= _plan_outer_refs(sub.plan)
+        for e in node.exprs():
+            for sub in S.walk(e):
+                if isinstance(sub, (S.ScalarSubquery, S.Exists)):
+                    out |= _plan_outer_refs(sub.plan)
+    return out
+
+
+def _is_scalar_region(plan: R.RelNode) -> bool:
+    """True if ``plan`` is Compute/Project/Filter-over-ConstantScan — i.e. a
+    single-row derived table (an algebrized region)."""
+    node = plan
+    while isinstance(node, (R.Compute, R.Project)):
+        node = node.child
+    return isinstance(node, R.ConstantScan)
+

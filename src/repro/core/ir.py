@@ -1,0 +1,172 @@
+"""Imperative UDF IR: statements, regions, and function definitions.
+
+Mirrors the paper's supported constructs (§3.4, Table 1):
+DECLARE / SET / SELECT-assign / IF-ELSE (arbitrary nesting) / RETURN
+(single or multiple) / nested UDF calls / EXISTS / ISNULL.  Loops are
+deliberately unsupported (the paper disabled them too, §4.2.1).
+
+Region construction (§4.1): a statement list splits into a hierarchy of
+*sequential* regions (maximal runs of straight-line statements) and
+*conditional* regions (IF-ELSE), each of which the algebrizer turns into one
+single-row derived table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core import scalar as S
+
+
+# ---------------------------------------------------------------------------
+# Statements
+# ---------------------------------------------------------------------------
+
+
+class Statement:
+    pass
+
+
+@dataclasses.dataclass
+class Declare(Statement):
+    name: str
+    dtype: str = "float32"  # float32 | int32 | bool | str | date
+    init: S.Scalar | None = None  # None => NULL (paper §4.2.1)
+
+
+@dataclasses.dataclass
+class Assign(Statement):
+    """SET @name = expr  (also models single-variable SELECT-assign; the
+    frontend lowers multi-assign SELECTs to several Assigns — paper §4.2.1
+    notes Froid does exactly this and relies on CSE for the duplication)."""
+
+    name: str
+    expr: S.Scalar
+
+
+@dataclasses.dataclass
+class IfElse(Statement):
+    pred: S.Scalar
+    then_body: list[Statement]
+    else_body: list[Statement]
+
+
+@dataclasses.dataclass
+class Return(Statement):
+    expr: S.Scalar
+
+
+# ---------------------------------------------------------------------------
+# Regions (paper §4.1)
+# ---------------------------------------------------------------------------
+
+
+class Region:
+    pass
+
+
+@dataclasses.dataclass
+class SeqRegion(Region):
+    """A maximal straight-line run of Declare/Assign/Return statements."""
+
+    statements: list[Statement]
+
+
+@dataclasses.dataclass
+class CondRegion(Region):
+    pred: S.Scalar
+    then_regions: list[Region]
+    else_regions: list[Region]
+
+
+def build_regions(body: Sequence[Statement]) -> list[Region]:
+    """Single pass over the UDF body (paper: 'Regions can be constructed in
+    a single pass')."""
+    out: list[Region] = []
+    run: list[Statement] = []
+
+    def flush():
+        nonlocal run
+        if run:
+            out.append(SeqRegion(run))
+            run = []
+
+    for st in body:
+        if isinstance(st, IfElse):
+            flush()
+            out.append(
+                CondRegion(
+                    st.pred, build_regions(st.then_body), build_regions(st.else_body)
+                )
+            )
+        else:
+            run.append(st)
+            if isinstance(st, Return):
+                # statements after an unconditional RETURN are unreachable —
+                # drop them (dead-code elimination at region construction)
+                flush()
+                return out
+    flush()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Function definition
+# ---------------------------------------------------------------------------
+
+_DTYPES = {"float32", "int32", "bool", "str", "date"}
+
+
+@dataclasses.dataclass
+class UdfDef:
+    name: str
+    params: list[tuple[str, str]]  # (name, dtype)
+    return_dtype: str
+    body: list[Statement]
+
+    def __post_init__(self):
+        for _, dt in self.params:
+            assert dt in _DTYPES, dt
+        assert self.return_dtype in _DTYPES
+
+    def regions(self) -> list[Region]:
+        return build_regions(self.body)
+
+    # -- analyses ------------------------------------------------------------
+    def all_exprs(self):
+        def rec(stmts):
+            for st in stmts:
+                if isinstance(st, Declare) and st.init is not None:
+                    yield st.init
+                elif isinstance(st, Assign):
+                    yield st.expr
+                elif isinstance(st, Return):
+                    yield st.expr
+                elif isinstance(st, IfElse):
+                    yield st.pred
+                    yield from rec(st.then_body)
+                    yield from rec(st.else_body)
+
+        yield from rec(self.body)
+
+    def is_deterministic(self) -> bool:
+        return all(S.is_deterministic(e) for e in self.all_exprs())
+
+    def called_udfs(self) -> set[str]:
+        out = set()
+        for e in self.all_exprs():
+            for node in S.walk(e):
+                if isinstance(node, S.UdfCall):
+                    out.add(node.name)
+        return out
+
+    def statement_count(self) -> int:
+        def count(stmts):
+            n = 0
+            for st in stmts:
+                n += 1
+                if isinstance(st, IfElse):
+                    n += count(st.then_body) + count(st.else_body)
+            return n
+
+        return count(self.body)

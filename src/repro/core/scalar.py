@@ -1,0 +1,733 @@
+"""Scalar expression IR with SQL NULL semantics, vectorized over columns.
+
+Every expression evaluates to a whole column (a :class:`Value`: data array +
+validity + optional string dictionary).  This is the "set-oriented" scalar
+subsystem: where SQL Server's scalar evaluator is invoked once per row
+(paper §2.2), ours evaluates each expression once per *column* on the VPU.
+
+Three-valued logic (Kleene) is implemented for AND/OR/NOT; WHERE treats
+NULL as false, exactly as in SQL.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.tables.table import (
+    DictEncoding,
+    date_add,
+    date_part,
+)
+
+# ---------------------------------------------------------------------------
+# Runtime value
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Value:
+    """A vectorized scalar value: data + validity (+ dictionary for strings).
+
+    ``data`` has shape ``()`` (a not-yet-broadcast constant) or ``(n,)``.
+    ``valid`` is None (all valid), or a bool array broadcastable to data.
+    """
+
+    data: jnp.ndarray
+    valid: jnp.ndarray | None = None
+    dictionary: DictEncoding | None = None
+
+    def validity(self) -> jnp.ndarray:
+        if self.valid is None:
+            return jnp.ones(jnp.shape(self.data), dtype=bool)
+        return jnp.broadcast_to(self.valid, jnp.shape(self.data))
+
+    def broadcast(self, n: int) -> "Value":
+        data = jnp.broadcast_to(self.data, (n,) if jnp.ndim(self.data) == 0 else jnp.shape(self.data))
+        valid = None
+        if self.valid is not None:
+            valid = jnp.broadcast_to(self.valid, jnp.shape(data))
+        return Value(data, valid, self.dictionary)
+
+
+def null_value(dtype=jnp.float32) -> Value:
+    return Value(jnp.zeros((), dtype=dtype), jnp.zeros((), dtype=bool))
+
+
+def _and_valid(*vals: Value) -> jnp.ndarray | None:
+    masks = [v.valid for v in vals if v.valid is not None]
+    if not masks:
+        return None
+    out = masks[0]
+    for m in masks[1:]:
+        out = out & m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Expression nodes
+# ---------------------------------------------------------------------------
+
+
+class Scalar:
+    """Base class.  Operator overloads build the IR fluently."""
+
+    def __add__(self, o):
+        return BinOp("+", self, wrap(o))
+
+    def __radd__(self, o):
+        return BinOp("+", wrap(o), self)
+
+    def __sub__(self, o):
+        return BinOp("-", self, wrap(o))
+
+    def __rsub__(self, o):
+        return BinOp("-", wrap(o), self)
+
+    def __mul__(self, o):
+        return BinOp("*", self, wrap(o))
+
+    def __rmul__(self, o):
+        return BinOp("*", wrap(o), self)
+
+    def __truediv__(self, o):
+        return BinOp("/", self, wrap(o))
+
+    def __rtruediv__(self, o):
+        return BinOp("/", wrap(o), self)
+
+    def __floordiv__(self, o):
+        return BinOp("//", self, wrap(o))
+
+    def __mod__(self, o):
+        return BinOp("%", self, wrap(o))
+
+    def __neg__(self):
+        return BinOp("-", Const(0), self)
+
+    def __eq__(self, o):  # type: ignore[override]
+        return Cmp("==", self, wrap(o))
+
+    def __ne__(self, o):  # type: ignore[override]
+        return Cmp("!=", self, wrap(o))
+
+    def __lt__(self, o):
+        return Cmp("<", self, wrap(o))
+
+    def __le__(self, o):
+        return Cmp("<=", self, wrap(o))
+
+    def __gt__(self, o):
+        return Cmp(">", self, wrap(o))
+
+    def __ge__(self, o):
+        return Cmp(">=", self, wrap(o))
+
+    def __and__(self, o):
+        return BoolOp("and", [self, wrap(o)])
+
+    def __or__(self, o):
+        return BoolOp("or", [self, wrap(o)])
+
+    def __invert__(self):
+        return BoolOp("not", [self])
+
+    def __hash__(self):  # nodes are identity-hashed (needed since __eq__ builds IR)
+        return id(self)
+
+    def is_null(self):
+        return IsNull(self)
+
+    def children(self) -> list["Scalar"]:
+        return []
+
+    def with_children(self, kids: list["Scalar"]) -> "Scalar":
+        assert not kids
+        return self
+
+
+def wrap(x) -> Scalar:
+    if isinstance(x, Scalar):
+        return x
+    return Const(x)
+
+
+class Const(Scalar):
+    def __init__(self, value: Any, dtype=None):
+        self.value = value
+        self.dtype = dtype
+
+    def __repr__(self):
+        return f"Const({self.value!r})"
+
+
+class ColRef(Scalar):
+    """Reference to a column of the current row environment."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Col({self.name})"
+
+
+class Outer(Scalar):
+    """Correlated reference: a column of the *outer* row inside an Apply /
+    correlated subquery (the paper's correlating parameter)."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Outer({self.name})"
+
+
+class Param(Scalar):
+    """UDF formal parameter; replaced by actual argument at substitution."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Param({self.name})"
+
+
+class Var(Scalar):
+    """UDF local variable reference (imperative scope).  The algebrizer
+    rewrites these into ColRef/Outer column references; the iterative
+    interpreter binds them from its variable environment."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Var({self.name})"
+
+
+class BinOp(Scalar):
+    def __init__(self, op: str, l: Scalar, r: Scalar):
+        self.op, self.l, self.r = op, l, r
+
+    def children(self):
+        return [self.l, self.r]
+
+    def with_children(self, kids):
+        return BinOp(self.op, *kids)
+
+    def __repr__(self):
+        return f"({self.l!r} {self.op} {self.r!r})"
+
+
+class Cmp(Scalar):
+    def __init__(self, op: str, l: Scalar, r: Scalar):
+        self.op, self.l, self.r = op, l, r
+
+    def children(self):
+        return [self.l, self.r]
+
+    def with_children(self, kids):
+        return Cmp(self.op, *kids)
+
+    def __repr__(self):
+        return f"({self.l!r} {self.op} {self.r!r})"
+
+
+class BoolOp(Scalar):
+    def __init__(self, op: str, args: Sequence[Scalar]):
+        self.op = op
+        self.args = list(args)
+
+    def children(self):
+        return list(self.args)
+
+    def with_children(self, kids):
+        return BoolOp(self.op, kids)
+
+    def __repr__(self):
+        return f"{self.op}({', '.join(map(repr, self.args))})"
+
+
+class Case(Scalar):
+    """CASE WHEN p1 THEN v1 [WHEN p2 THEN v2 ...] ELSE e END."""
+
+    def __init__(self, whens: Sequence[tuple[Scalar, Scalar]], else_: Scalar):
+        self.whens = [(wrap(p), wrap(v)) for p, v in whens]
+        self.else_ = wrap(else_)
+
+    def children(self):
+        out = []
+        for p, v in self.whens:
+            out += [p, v]
+        out.append(self.else_)
+        return out
+
+    def with_children(self, kids):
+        n = len(self.whens)
+        whens = [(kids[2 * i], kids[2 * i + 1]) for i in range(n)]
+        return Case(whens, kids[-1])
+
+    def __repr__(self):
+        w = "; ".join(f"{p!r}->{v!r}" for p, v in self.whens)
+        return f"Case({w}; else {self.else_!r})"
+
+
+class Cast(Scalar):
+    def __init__(self, expr: Scalar, dtype):
+        self.expr, self.dtype = wrap(expr), dtype
+
+    def children(self):
+        return [self.expr]
+
+    def with_children(self, kids):
+        return Cast(kids[0], self.dtype)
+
+
+class Func(Scalar):
+    """Intrinsic function call (deterministic unless listed otherwise)."""
+
+    NON_DETERMINISTIC = {"rand", "getdate", "newid"}
+
+    def __init__(self, name: str, args: Sequence[Scalar]):
+        self.name = name.lower()
+        self.args = [wrap(a) for a in args]
+
+    def children(self):
+        return list(self.args)
+
+    def with_children(self, kids):
+        return Func(self.name, kids)
+
+    def __repr__(self):
+        return f"{self.name}({', '.join(map(repr, self.args))})"
+
+
+class IsNull(Scalar):
+    def __init__(self, expr: Scalar):
+        self.expr = wrap(expr)
+
+    def children(self):
+        return [self.expr]
+
+    def with_children(self, kids):
+        return IsNull(kids[0])
+
+
+class Coalesce(Scalar):
+    def __init__(self, args: Sequence[Scalar]):
+        self.args = [wrap(a) for a in args]
+
+    def children(self):
+        return list(self.args)
+
+    def with_children(self, kids):
+        return Coalesce(kids)
+
+
+class Like(Scalar):
+    def __init__(self, expr: Scalar, pattern: str):
+        self.expr, self.pattern = wrap(expr), pattern
+
+    def children(self):
+        return [self.expr]
+
+    def with_children(self, kids):
+        return Like(kids[0], self.pattern)
+
+
+class InList(Scalar):
+    def __init__(self, expr: Scalar, options: Sequence[Any]):
+        self.expr = wrap(expr)
+        self.options = list(options)
+
+    def children(self):
+        return [self.expr]
+
+    def with_children(self, kids):
+        return InList(kids[0], self.options)
+
+
+class Between(Scalar):
+    def __init__(self, expr: Scalar, lo, hi):
+        self.expr, self.lo, self.hi = wrap(expr), wrap(lo), wrap(hi)
+
+    def children(self):
+        return [self.expr, self.lo, self.hi]
+
+    def with_children(self, kids):
+        return Between(*kids)
+
+
+class ScalarSubquery(Scalar):
+    """A relational plan producing a single column; evaluated to one scalar
+    per outer row (correlated via Outer refs) or once (uncorrelated)."""
+
+    def __init__(self, plan, column: str | None = None, agg_default=None):
+        self.plan = plan
+        self.column = column  # None: the plan's single output column
+        # value when the subquery yields zero rows (SQL: NULL)
+        self.agg_default = agg_default
+
+    def children(self):
+        return []
+
+    def with_children(self, kids):
+        return self
+
+    def __repr__(self):
+        return f"ScalarSubquery({self.plan!r})"
+
+
+class Exists(Scalar):
+    def __init__(self, plan, negated: bool = False):
+        self.plan = plan
+        self.negated = negated
+
+    def children(self):
+        return []
+
+    def with_children(self, kids):
+        return self
+
+    def __repr__(self):
+        return f"{'Not' if self.negated else ''}Exists({self.plan!r})"
+
+
+class UdfCall(Scalar):
+    """Call of a registered scalar UDF.  The binder (froid ON) replaces this
+    with the algebrized body; the iterative interpreter (froid OFF)
+    evaluates it row by row."""
+
+    def __init__(self, name: str, args: Sequence[Scalar]):
+        self.name = name
+        self.args = [wrap(a) for a in args]
+
+    def children(self):
+        return list(self.args)
+
+    def with_children(self, kids):
+        return UdfCall(self.name, kids)
+
+    def __repr__(self):
+        return f"UdfCall({self.name}, {self.args!r})"
+
+
+# ---------------------------------------------------------------------------
+# Traversal helpers
+# ---------------------------------------------------------------------------
+
+
+def walk(expr: Scalar):
+    yield expr
+    for c in expr.children():
+        yield from walk(c)
+    if isinstance(expr, (ScalarSubquery, Exists)):
+        # walk into subquery scalar expressions too
+        from repro.core import relalg
+
+        for node in relalg.walk_plan(expr.plan):
+            for e in relalg.node_exprs(node):
+                yield from walk(e)
+
+
+def transform(expr: Scalar, fn: Callable[[Scalar], Scalar | None]) -> Scalar:
+    """Bottom-up rewrite: fn returns replacement or None to keep.
+
+    NB: comparison must be by identity — ``Scalar.__eq__`` builds IR."""
+    old = expr.children()
+    kids = [transform(c, fn) for c in old]
+    if any(a is not b for a, b in zip(kids, old)):
+        expr = expr.with_children(kids)
+    out = fn(expr)
+    return expr if out is None else out
+
+
+def free_cols(expr: Scalar) -> set[str]:
+    return {e.name for e in walk(expr) if isinstance(e, ColRef)}
+
+
+def free_outer(expr: Scalar) -> set[str]:
+    return {e.name for e in walk(expr) if isinstance(e, Outer)}
+
+
+def contains_subquery(expr: Scalar) -> bool:
+    return any(isinstance(e, (ScalarSubquery, Exists)) for e in walk(expr))
+
+
+def is_deterministic(expr: Scalar) -> bool:
+    return not any(
+        isinstance(e, Func) and e.name in Func.NON_DETERMINISTIC for e in walk(expr)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+_ARITH = {
+    "+": jnp.add,
+    "-": jnp.subtract,
+    "*": jnp.multiply,
+    "%": jnp.mod,
+}
+
+_CMPS = {
+    "==": jnp.equal,
+    "!=": jnp.not_equal,
+    "<": jnp.less,
+    "<=": jnp.less_equal,
+    ">": jnp.greater,
+    ">=": jnp.greater_equal,
+}
+
+
+def _encode_const_for(dictionary: DictEncoding | None, value):
+    if dictionary is not None and isinstance(value, str):
+        return jnp.asarray(dictionary.lookup(value), jnp.int32)
+    return None
+
+
+def _harmonize(values: list[Value]) -> list[Value]:
+    """Give string Values a shared dictionary (union + remap)."""
+    dicts = [v.dictionary for v in values if v.dictionary is not None]
+    if not dicts:
+        return values
+    union = DictEncoding()
+    for d in dicts:
+        for i in range(len(d)):
+            union.code(d.decode(i))
+    out = []
+    for v in values:
+        if v.dictionary is None or v.dictionary is union:
+            out.append(Value(v.data, v.valid, union))
+            continue
+        remap = np.array(
+            [union.code(v.dictionary.decode(i)) for i in range(len(v.dictionary))],
+            dtype=np.int32,
+        )
+        out.append(Value(jnp.take(jnp.asarray(remap), v.data, mode="clip"), v.valid, union))
+    return out
+
+
+class EvalContext:
+    """Everything scalar evaluation needs from the engine."""
+
+    def __init__(
+        self, executor=None, num_rows: int = 1, params=None, outer=None, vars=None
+    ):
+        self.executor = executor  # repro.core.executor.Executor (for subqueries)
+        self.num_rows = num_rows
+        self.params = params or {}  # name -> Value (scalar)
+        self.outer = outer or {}  # name -> Value (for correlated refs)
+        self.vars = vars or {}  # name -> Value (interpreter variable frame)
+
+
+def eval_scalar(expr: Scalar, env: dict[str, Value], ctx: EvalContext) -> Value:
+    """Vectorized evaluation of ``expr`` over the row environment ``env``."""
+    memo: dict[int, Value] = {}
+
+    def ev(e: Scalar) -> Value:
+        key = id(e)
+        if key in memo:
+            return memo[key]
+        out = _eval(e)
+        memo[key] = out
+        return out
+
+    def _eval(e: Scalar) -> Value:
+        if isinstance(e, Const):
+            if e.value is None:
+                return null_value()
+            if isinstance(e.value, str):
+                enc = DictEncoding([e.value])
+                return Value(jnp.asarray(0, jnp.int32), None, enc)
+            if isinstance(e.value, bool):
+                return Value(jnp.asarray(e.value, bool))
+            if isinstance(e.value, int):
+                return Value(jnp.asarray(e.value, jnp.int32))
+            return Value(jnp.asarray(e.value, e.dtype or jnp.float32))
+        if isinstance(e, ColRef):
+            if e.name not in env:
+                raise KeyError(f"unbound column {e.name!r}; have {sorted(env)}")
+            return env[e.name]
+        if isinstance(e, Outer):
+            if e.name not in ctx.outer:
+                raise KeyError(f"unbound outer ref {e.name!r}")
+            return ctx.outer[e.name]
+        if isinstance(e, Param):
+            if e.name not in ctx.params:
+                raise KeyError(f"unbound parameter {e.name!r}")
+            return ctx.params[e.name]
+        if isinstance(e, Var):
+            if e.name in ctx.vars:
+                return ctx.vars[e.name]
+            if e.name in ctx.params:  # T-SQL: @params share the namespace
+                return ctx.params[e.name]
+            raise KeyError(f"unbound variable {e.name!r}")
+        if isinstance(e, BinOp):
+            l, r = ev(e.l), ev(e.r)
+            if e.op == "+" and (l.dictionary is not None or r.dictionary is not None):
+                raise NotImplementedError(
+                    "dynamic string concatenation is not supported on device; "
+                    "return components separately (see DESIGN.md)"
+                )
+            if e.op == "/":
+                # SQL: x / 0 yields NULL (we fold divide-by-zero into validity)
+                ld = l.data.astype(jnp.float32)
+                rd = r.data.astype(jnp.float32)
+                zero = jnp.broadcast_to(rd == 0, jnp.shape(ld + rd))
+                data = ld / jnp.where(rd == 0, 1.0, rd)
+                valid = _and_valid(l, r)
+                base = (
+                    jnp.ones(jnp.shape(data), bool)
+                    if valid is None
+                    else jnp.broadcast_to(valid, jnp.shape(data))
+                )
+                return Value(data, base & ~zero)
+            if e.op == "//":
+                rd = jnp.where(r.data == 0, 1, r.data)
+                return Value(l.data // rd, _and_valid(l, r))
+            fn = _ARITH[e.op]
+            return Value(fn(l.data, r.data), _and_valid(l, r))
+        if isinstance(e, Cmp):
+            l, r = _harmonize([ev(e.l), ev(e.r)])
+            return Value(_CMPS[e.op](l.data, r.data), _and_valid(l, r))
+        if isinstance(e, BoolOp):
+            vals = [ev(a) for a in e.args]
+            if e.op == "not":
+                (v,) = vals
+                return Value(~v.data.astype(bool), v.valid)
+            datas = [v.data.astype(bool) for v in vals]
+            valids = [v.validity() for v in vals]
+            if e.op == "and":
+                known_false = False
+                for d, m in zip(datas, valids):
+                    known_false = known_false | (m & ~d)
+                all_known = valids[0]
+                for m in valids[1:]:
+                    all_known = all_known & m
+                res = datas[0]
+                for d in datas[1:]:
+                    res = res & d
+                return Value(res & ~known_false, all_known | known_false)
+            if e.op == "or":
+                known_true = False
+                for d, m in zip(datas, valids):
+                    known_true = known_true | (m & d)
+                all_known = valids[0]
+                for m in valids[1:]:
+                    all_known = all_known & m
+                res = datas[0]
+                for d in datas[1:]:
+                    res = res | d
+                return Value(res | known_true, all_known | known_true)
+            raise ValueError(e.op)
+        if isinstance(e, Case):
+            vals = [ev(v) for _, v in e.whens] + [ev(e.else_)]
+            vals = _harmonize(vals)
+            preds = [ev(p) for p, _ in e.whens]
+            out = vals[-1]
+            # fold right-to-left so earlier WHENs win
+            for p, v in zip(reversed(preds), reversed(vals[:-1])):
+                hit = p.data.astype(bool) & p.validity()  # NULL pred == false
+                data = jnp.where(hit, v.data, out.data)
+                valid = jnp.where(hit, v.validity(), out.validity())
+                out = Value(data, valid, vals[-1].dictionary)
+            return out
+        if isinstance(e, Cast):
+            v = ev(e.expr)
+            return Value(v.data.astype(e.dtype), v.valid, None)
+        if isinstance(e, IsNull):
+            v = ev(e.expr)
+            return Value(~v.validity(), None)
+        if isinstance(e, Coalesce):
+            vals = _harmonize([ev(a) for a in e.args])
+            out = vals[-1]
+            for v in reversed(vals[:-1]):
+                ok = v.validity()
+                out = Value(
+                    jnp.where(ok, v.data, out.data),
+                    ok | out.validity(),
+                    vals[-1].dictionary,
+                )
+            return out
+        if isinstance(e, Like):
+            v = ev(e.expr)
+            if v.dictionary is None:
+                raise TypeError("LIKE requires a string (dictionary) column")
+            mask = jnp.asarray(v.dictionary.like_mask(e.pattern))
+            safe = jnp.clip(v.data, 0, len(v.dictionary) - 1)
+            return Value(jnp.take(mask, safe), v.valid)
+        if isinstance(e, InList):
+            v = ev(e.expr)
+            acc = None
+            for opt in e.options:
+                enc = _encode_const_for(v.dictionary, opt)
+                c = enc if enc is not None else jnp.asarray(opt)
+                hit = v.data == c
+                acc = hit if acc is None else (acc | hit)
+            return Value(acc, v.valid)
+        if isinstance(e, Between):
+            v, lo, hi = ev(e.expr), ev(e.lo), ev(e.hi)
+            return Value(
+                (v.data >= lo.data) & (v.data <= hi.data), _and_valid(v, lo, hi)
+            )
+        if isinstance(e, Func):
+            return _eval_func(e)
+        if isinstance(e, ScalarSubquery):
+            if ctx.executor is None:
+                raise RuntimeError("subquery evaluation requires an executor")
+            return ctx.executor.eval_scalar_subquery(e, env, ctx)
+        if isinstance(e, Exists):
+            if ctx.executor is None:
+                raise RuntimeError("subquery evaluation requires an executor")
+            return ctx.executor.eval_exists(e, env, ctx)
+        if isinstance(e, UdfCall):
+            if ctx.executor is None:
+                raise RuntimeError(
+                    f"UDF {e.name!r} reached the vectorized executor without "
+                    "being inlined; run the binder (froid) or the interpreter"
+                )
+            return ctx.executor.eval_udf_call(e, env, ctx)
+        raise TypeError(f"unknown scalar node {type(e).__name__}")
+
+    def _eval_func(e: Func) -> Value:
+        args = [ev(a) for a in e.args]
+        n = e.name
+        if n == "abs":
+            return Value(jnp.abs(args[0].data), args[0].valid)
+        if n == "floor":
+            return Value(jnp.floor(args[0].data), args[0].valid)
+        if n == "ceiling":
+            return Value(jnp.ceil(args[0].data), args[0].valid)
+        if n == "round":
+            return Value(jnp.round(args[0].data), args[0].valid)
+        if n == "sqrt":
+            return Value(jnp.sqrt(jnp.maximum(args[0].data, 0)), args[0].valid)
+        if n == "exp":
+            return Value(jnp.exp(args[0].data), args[0].valid)
+        if n == "log":
+            return Value(jnp.log(jnp.maximum(args[0].data, 1e-30)), args[0].valid)
+        if n == "power":
+            return Value(jnp.power(args[0].data, args[1].data), _and_valid(*args))
+        if n == "sign":
+            return Value(jnp.sign(args[0].data), args[0].valid)
+        if n in ("min2", "least"):
+            return Value(jnp.minimum(args[0].data, args[1].data), _and_valid(*args))
+        if n in ("max2", "greatest"):
+            return Value(jnp.maximum(args[0].data, args[1].data), _and_valid(*args))
+        if n == "dateadd":
+            part = e.args[0].value  # must be a literal part
+            return Value(date_add(part, args[1].data, args[2].data), _and_valid(args[1], args[2]))
+        if n == "datepart":
+            part = e.args[0].value
+            return Value(date_part(part, args[1].data), args[1].valid)
+        if n == "datediff_days":
+            return Value(
+                args[2].data.astype(jnp.int32) - args[1].data.astype(jnp.int32),
+                _and_valid(args[1], args[2]),
+            )
+        raise NotImplementedError(f"intrinsic {n!r}")
+
+    return ev(expr)

@@ -1,0 +1,332 @@
+"""A T-SQL-subset parser frontend (paper §7.3: the framework is
+language-agnostic — adding a surface language is a parser plus calls into
+the construct classes).
+
+Supported grammar (enough for the paper's §9 example shapes)::
+
+    CREATE FUNCTION name(@p TYPE, ...) RETURNS TYPE AS
+    BEGIN
+        DECLARE @v TYPE [= expr];
+        SET @v = expr;
+        SELECT @v = AGG(col) FROM table WHERE pred;
+        IF (pred) BEGIN ... END [ELSE BEGIN ... END]
+        RETURN expr;
+    END
+
+Expressions: numbers, 'strings', @vars, identifiers (columns), + - * /,
+comparisons (= <> < <= > >=), AND/OR/NOT, parentheses, CASE WHEN ... THEN
+... ELSE ... END, and function calls (intrinsics).  Types: INT, FLOAT,
+BIT, DATE, VARCHAR/CHAR(n).
+"""
+from __future__ import annotations
+
+import re
+
+from repro.core import frontend as F
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.ir import UdfDef
+
+_TOKEN = re.compile(
+    r"\s*(?:(?P<num>\d+\.\d+|\d+)|(?P<str>'[^']*')|(?P<var>@\w+)"
+    r"|(?P<id>[A-Za-z_][\w.]*)|(?P<op><=|>=|<>|!=|[=<>+\-*/(),;]))"
+)
+
+_TYPES = {
+    "int": "int32", "bigint": "int32", "bit": "bool", "float": "float32",
+    "real": "float32", "decimal": "float32", "money": "float32",
+    "date": "date", "datetime": "date", "varchar": "str", "char": "str",
+    "nvarchar": "str",
+}
+
+_AGGS = {"sum": F.sum_, "count": F.count_, "min": F.min_, "max": F.max_,
+         "avg": F.avg_}
+
+
+def _tokenize(src: str):
+    out, pos = [], 0
+    src = re.sub(r"--[^\n]*", "", src)
+    while pos < len(src):
+        m = _TOKEN.match(src, pos)
+        if not m:
+            if src[pos:].strip() == "":
+                break
+            raise SyntaxError(f"bad token at: {src[pos:pos+40]!r}")
+        pos = m.end()
+        for kind in ("num", "str", "var", "id", "op"):
+            v = m.group(kind)
+            if v is not None:
+                out.append((kind, v.lower() if kind == "id" else v))
+                break
+    out.append(("eof", ""))
+    return out
+
+
+class _Parser:
+    def __init__(self, tokens):
+        self.toks = tokens
+        self.i = 0
+
+    def peek(self, k=0):
+        return self.toks[self.i + k]
+
+    def next(self):
+        t = self.toks[self.i]
+        self.i += 1
+        return t
+
+    def expect(self, value=None, kind=None):
+        k, v = self.next()
+        if value is not None and v.lower() != value.lower():
+            raise SyntaxError(f"expected {value!r}, got {v!r}")
+        if kind is not None and k != kind:
+            raise SyntaxError(f"expected {kind}, got {k}:{v}")
+        return v
+
+    def accept(self, value):
+        if self.peek()[1].lower() == value.lower():
+            self.next()
+            return True
+        return False
+
+    # ---------------------------------------------------------------- types
+    def parse_type(self) -> str:
+        name = self.expect(kind="id")
+        if self.accept("("):  # char(50), decimal(12,2)
+            while not self.accept(")"):
+                self.next()
+        if name not in _TYPES:
+            raise SyntaxError(f"unsupported type {name!r}")
+        return _TYPES[name]
+
+    # ----------------------------------------------------------- expressions
+    def parse_expr(self) -> S.Scalar:
+        return self._or()
+
+    def _or(self):
+        left = self._and()
+        while self.peek()[1].lower() == "or":
+            self.next()
+            left = S.BoolOp("or", [left, self._and()])
+        return left
+
+    def _and(self):
+        left = self._not()
+        while self.peek()[1].lower() == "and":
+            self.next()
+            left = S.BoolOp("and", [left, self._not()])
+        return left
+
+    def _not(self):
+        if self.peek()[1].lower() == "not":
+            self.next()
+            return S.BoolOp("not", [self._not()])
+        return self._cmp()
+
+    def _cmp(self):
+        left = self._add()
+        k, v = self.peek()
+        ops = {"=": "==", "<>": "!=", "!=": "!=", "<": "<", "<=": "<=",
+               ">": ">", ">=": ">="}
+        if v in ops:
+            self.next()
+            return S.Cmp(ops[v], left, self._add())
+        if v.lower() == "is":
+            self.next()
+            neg = self.accept("not")
+            self.expect("null")
+            e = S.IsNull(left)
+            return S.BoolOp("not", [e]) if neg else e
+        if v.lower() == "between":
+            self.next()
+            lo = self._add()
+            self.expect("and")
+            return S.Between(left, lo, self._add())
+        if v.lower() == "in":
+            self.next()
+            self.expect("(")
+            opts = [self._literal_value()]
+            while self.accept(","):
+                opts.append(self._literal_value())
+            self.expect(")")
+            return S.InList(left, opts)
+        if v.lower() == "like":
+            self.next()
+            pat = self.expect(kind="str")
+            return S.Like(left, pat.strip("'"))
+        return left
+
+    def _literal_value(self):
+        k, v = self.next()
+        if k == "num":
+            return float(v) if "." in v else int(v)
+        if k == "str":
+            return v.strip("'")
+        raise SyntaxError(f"expected literal, got {v!r}")
+
+    def _add(self):
+        left = self._mul()
+        while self.peek()[1] in ("+", "-"):
+            op = self.next()[1]
+            left = S.BinOp(op, left, self._mul())
+        return left
+
+    def _mul(self):
+        left = self._unary()
+        while self.peek()[1] in ("*", "/"):
+            op = self.next()[1]
+            left = S.BinOp(op, left, self._unary())
+        return left
+
+    def _unary(self):
+        if self.peek()[1] == "-":
+            self.next()
+            return S.BinOp("-", S.Const(0), self._unary())
+        return self._atom()
+
+    def _atom(self) -> S.Scalar:
+        k, v = self.next()
+        if k == "num":
+            return S.Const(float(v) if "." in v else int(v))
+        if k == "str":
+            return S.Const(v.strip("'"))
+        if k == "var":
+            return S.Var(v[1:])
+        if v == "(":
+            e = self.parse_expr()
+            self.expect(")")
+            return e
+        if k == "id":
+            name = v
+            if name == "null":
+                return S.Const(None)
+            if name == "case":
+                return self._case()
+            if self.peek()[1] == "(":  # function call
+                self.next()
+                args = []
+                if self.peek()[1] != ")":
+                    args.append(self.parse_expr())
+                    while self.accept(","):
+                        args.append(self.parse_expr())
+                self.expect(")")
+                base = name.split(".")[-1]
+                if base in ("dateadd", "datepart"):
+                    # first arg is a part keyword parsed as ColRef
+                    part = args[0]
+                    pname = part.name if isinstance(part, S.ColRef) else part.value
+                    return S.Func(base, [S.Const(pname)] + args[1:])
+                if "." in name:  # dbo.func -> UDF call
+                    return S.UdfCall(base, args)
+                return S.Func(base, args)
+            return S.ColRef(name)
+        raise SyntaxError(f"unexpected {v!r}")
+
+    def _case(self) -> S.Scalar:
+        whens = []
+        while self.accept("when"):
+            p = self.parse_expr()
+            self.expect("then")
+            whens.append((p, self.parse_expr()))
+        else_ = S.Const(None)
+        if self.accept("else"):
+            else_ = self.parse_expr()
+        self.expect("end")
+        return S.Case(whens, else_)
+
+    # ------------------------------------------------------------ statements
+    def parse_block(self, u: F.UdfBuilder):
+        self.expect("begin")
+        while not self.accept("end"):
+            self.parse_statement(u)
+
+    def parse_statement(self, u: F.UdfBuilder):
+        k, v = self.peek()
+        word = v.lower()
+        if word == "declare":
+            self.next()
+            name = self.expect(kind="var")[1:]
+            dtype = self.parse_type()
+            init = None
+            if self.accept("="):
+                init = self.parse_expr()
+            self.accept(";")
+            u.declare(name, dtype, init)
+        elif word == "set":
+            self.next()
+            name = self.expect(kind="var")[1:]
+            self.expect("=")
+            u.set(name, self.parse_expr())
+            self.accept(";")
+        elif word == "select":
+            self.next()
+            name = self.expect(kind="var")[1:]
+            self.expect("=")
+            expr = self.parse_expr()
+            frm = None
+            where = None
+            if self.accept("from"):
+                table = self.expect(kind="id").split(".")[-1]
+                frm = F.scan(table)
+                if self.accept("where"):
+                    where = self.parse_expr()
+            self.accept(";")
+            if frm is None:
+                u.set(name, expr)
+            else:
+                agg = self._as_agg(expr)
+                u.select({name: agg}, frm=frm, where=where)
+        elif word == "if":
+            self.next()
+            pred = self.parse_expr()
+            with u.if_(pred):
+                if self.peek()[1].lower() == "begin":
+                    self.parse_block(u)
+                else:
+                    self.parse_statement(u)
+            if self.accept("else"):
+                with u.else_():
+                    if self.peek()[1].lower() == "begin":
+                        self.parse_block(u)
+                    else:
+                        self.parse_statement(u)
+        elif word == "return":
+            self.next()
+            u.return_(self.parse_expr())
+            self.accept(";")
+        elif v == ";":
+            self.next()
+        else:
+            raise SyntaxError(f"unsupported statement at {v!r}")
+
+    def _as_agg(self, expr: S.Scalar):
+        if isinstance(expr, S.Func) and expr.name in _AGGS:
+            arg = expr.args[0] if expr.args else None
+            if expr.name == "count":
+                return F.count_(arg)
+            return _AGGS[expr.name](arg)
+        return expr
+
+
+def parse_udf(src: str) -> UdfDef:
+    """Parse a CREATE FUNCTION statement into a UdfDef.
+
+    In the UDF body, bare identifiers inside FROM/WHERE are table columns;
+    @names are variables/parameters — matching T-SQL scoping."""
+    p = _Parser(_tokenize(src))
+    p.expect("create")
+    p.expect("function")
+    name = p.expect(kind="id").split(".")[-1]
+    p.expect("(")
+    params = []
+    while not p.accept(")"):
+        pname = p.expect(kind="var")[1:]
+        ptype = p.parse_type()
+        params.append((pname, ptype))
+        p.accept(",")
+    p.expect("returns")
+    rtype = p.parse_type()
+    p.accept("as")
+    u = F.UdfBuilder(name, params, rtype)
+    p.parse_block(u)
+    return u.build()

@@ -1,0 +1,53 @@
+"""Public jit'd wrapper for flash_attention (auto-interpret off-TPU)."""
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import (
+    flash_attention_chunked,
+    flash_attention_ref,
+)
+
+# above this many score-matrix elements per (batch, head), off-TPU lowering
+# switches to the chunked online-softmax form (kernel-like O(S·bk) memory)
+_CHUNKED_THRESHOLD = 512 * 512
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "sm_scale", "bq", "bk",
+                     "interpret", "use_kernel"),
+)
+def flash_attention(q, k, v, causal=True, window=None, q_offset=0,
+                    sm_scale=None, bq=128, bk=128, interpret=None,
+                    use_kernel=None):
+    """Attention entry point used by the model zoo.
+
+    On TPU: the Pallas kernel.  Off-TPU (this container): the jnp reference
+    for small shapes, the chunked online-softmax form for big ones — so
+    CPU dry-run lowering shows kernel-like memory (never (Sq, Sk) scores).
+    The Pallas kernel itself is validated by the interpret-mode sweeps.
+    Pass use_kernel=True to force the kernel."""
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if not use_kernel:
+        if q.shape[2] * k.shape[2] > _CHUNKED_THRESHOLD:
+            return flash_attention_chunked(
+                q, k, v, causal=causal, window=window, q_offset=q_offset,
+                sm_scale=sm_scale, bk=max(bk, 512),
+            )
+        return flash_attention_ref(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            sm_scale=sm_scale,
+        )
+    if interpret is None:
+        interpret = not _on_tpu()
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        sm_scale=sm_scale, bq=bq, bk=bk, interpret=interpret,
+    )

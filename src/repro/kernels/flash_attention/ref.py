@@ -1,0 +1,98 @@
+"""Pure-jnp oracle for flash_attention (+ a chunked online-softmax variant
+with flash-style O(S·bk) memory, used when lowering off-TPU so dry-runs
+reflect kernel-like memory behaviour)."""
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None, q_offset=0,
+                        sm_scale=None):
+    B, Hq, Sq, D = q.shape
+    _, Hk, Sk, _ = k.shape
+    n_rep = Hq // Hk
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    k = jnp.repeat(k, n_rep, axis=1)
+    v = jnp.repeat(v, n_rep, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(mask[None, None], p, 0.0)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(denom > 0, denom, 1.0)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_chunked(q, k, v, *, causal=True, window=None, q_offset=0,
+                            sm_scale=None, bk=512):
+    """Online-softmax attention via lax.scan over key blocks — the pure-jnp
+    twin of the Pallas kernel's memory behaviour (never materializes the
+    (Sq, Sk) score matrix).  Used for off-TPU lowering of big shapes."""
+    B, Hq, Sq, D = q.shape
+    _, Hk, Sk, _ = k.shape
+    n_rep = Hq // Hk
+    if sm_scale is None:
+        sm_scale = D ** -0.5
+    bk = min(bk, Sk)
+    pad = (-Sk) % bk
+    kv_len = Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nk = (Sk + pad) // bk
+    kb = k.reshape(B, Hk, nk, bk, D).transpose(2, 0, 1, 3, 4)
+    vb = v.reshape(B, Hk, nk, bk, D).transpose(2, 0, 1, 3, 4)
+
+    qf = q.astype(jnp.float32) * sm_scale
+    if n_rep > 1:
+        qf = qf.reshape(B, Hk, n_rep, Sq, D)
+    qpos = q_offset + jnp.arange(Sq)
+
+    @jax.checkpoint  # flash backward: recompute p per block
+    def step(carry, blk):
+        m, l, acc, kk = carry
+        kc, vc = blk  # (B, Hk, bk, D)
+        kc = kc.astype(jnp.float32)
+        vc = vc.astype(jnp.float32)
+        if n_rep > 1:
+            s = jnp.einsum("bhrqd,bhkd->bhrqk", qf, kc)
+        else:
+            s = jnp.einsum("bhqd,bhkd->bhqk", qf, kc)
+        kpos = kk * bk + jnp.arange(bk)
+        mask = jnp.broadcast_to(kpos[None, :] < kv_len, (Sq, bk))
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        # mask is (Sq, bk): broadcasts against the trailing dims of s
+        s = jnp.where(mask, s, -1e30)
+        m_cur = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_cur)
+        p = jnp.exp(s - m_new[..., None])
+        p = jnp.where(mask, p, 0.0)
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if n_rep > 1:
+            upd = jnp.einsum("bhrqk,bhkd->bhrqd", p, vc)
+        else:
+            upd = jnp.einsum("bhqk,bhkd->bhqd", p, vc)
+        acc_new = acc * alpha[..., None] + upd
+        return (m_new, l_new, acc_new, kk + 1), 0
+
+    shape_ml = (B, Hk, n_rep, Sq) if n_rep > 1 else (B, Hq, Sq)
+    m0 = jnp.full(shape_ml, -1e30, jnp.float32)
+    l0 = jnp.zeros(shape_ml, jnp.float32)
+    acc0 = jnp.zeros(shape_ml + (D,), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, acc0, 0), (kb, vb))
+    out = acc / jnp.where(l > 0, l, 1.0)[..., None]
+    if n_rep > 1:
+        out = out.reshape(B, Hq, Sq, D)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.relagg.ops import grouped_aggregate
+
+__all__ = ["grouped_aggregate"]

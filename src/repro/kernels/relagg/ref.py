@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the relagg kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def grouped_aggregate_ref(gid, mask, vals, num_groups):
+    """sums: (G, n_aggs); counts: (G,) — NULL/filtered rows excluded."""
+    sel = mask
+    safe_gid = jnp.where(sel, gid, num_groups)  # overflow slot
+    sums = jax.ops.segment_sum(
+        jnp.where(sel[:, None], vals.astype(jnp.float32), 0.0),
+        safe_gid,
+        num_segments=num_groups + 1,
+    )[:num_groups]
+    counts = jax.ops.segment_sum(
+        sel.astype(jnp.float32), safe_gid, num_segments=num_groups + 1
+    )[:num_groups]
+    return sums, counts

@@ -1,0 +1,97 @@
+"""Fused filter + project + grouped-aggregate Pallas TPU kernel.
+
+This is the hot loop of every set-oriented plan Froid produces (the paper's
+TPC-H experiments bottom out in exactly this op), adapted to the TPU:
+
+* hash tables are a poor fit for the MXU/VPU, so grouping is done as
+  **one-hot × matmul partial aggregation**: for a VMEM tile of rows, build
+  the (rows × groups) one-hot matrix of group ids (masked by the fused
+  filter), then ``onehot.T @ values`` on the MXU accumulates per-group sums
+  for the whole tile in one systolic pass;
+* the row stream is tiled ``(BLOCK_ROWS,)`` through VMEM; the accumulator
+  ``(groups, n_aggs)`` lives in the output block which stays resident in
+  VMEM across the sequential grid (TPU grids iterate the last axis
+  innermost and revisit the same output block).
+
+Count aggregation falls out of the same matmul by appending a column of
+ones to the value matrix.
+
+VMEM budget: BLOCK_ROWS×(n_aggs+2)×4 B for the tile + groups×n_aggs×4 B for
+the accumulator + BLOCK_ROWS×groups×4 B for the one-hot. With
+BLOCK_ROWS=1024, groups≤2048, n_aggs≤8: ≈ 1024·2048·4 ≈ 8 MiB one-hot —
+fits the 16 MiB v5e VMEM with room; MXU dims (1024×2048×8) are
+128-aligned when groups and BLOCK_ROWS are multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 1024
+
+
+def _relagg_kernel(gid_ref, mask_ref, vals_ref, out_ref, *, num_groups: int):
+    """Grid: (num_row_tiles,).  out_ref block: (num_groups, n_aggs+1)."""
+    t = pl.program_id(0)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    gid = gid_ref[...]  # (BLOCK_ROWS,) int32
+    mask = mask_ref[...]  # (BLOCK_ROWS,) bool — the fused filter
+    vals = vals_ref[...]  # (BLOCK_ROWS, n_aggs) f32
+
+    # one-hot group matrix, filter fused in (masked rows hit no group)
+    groups = jax.lax.broadcasted_iota(jnp.int32, (gid.shape[0], num_groups), 1)
+    onehot = (gid[:, None] == groups) & mask[:, None]
+    onehot = onehot.astype(jnp.float32)
+
+    # append a ones column -> counts fall out of the same MXU pass
+    ones = jnp.ones((vals.shape[0], 1), jnp.float32)
+    vals_and_ones = jnp.concatenate([vals, ones], axis=1)
+
+    # (G, rows) @ (rows, n_aggs+1) on the MXU
+    partial = jax.lax.dot_general(
+        onehot,
+        vals_and_ones,
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    out_ref[...] += partial
+
+
+def relagg_pallas(
+    gid: jnp.ndarray,  # (n,) int32 group ids in [0, num_groups)
+    mask: jnp.ndarray,  # (n,) bool
+    vals: jnp.ndarray,  # (n, n_aggs) f32
+    num_groups: int,
+    block_rows: int = BLOCK_ROWS,
+    interpret: bool = False,
+):
+    n, n_aggs = vals.shape
+    n_pad = (-n) % block_rows
+    if n_pad:
+        gid = jnp.pad(gid, (0, n_pad))
+        mask = jnp.pad(mask, (0, n_pad))  # pads False: no contribution
+        vals = jnp.pad(vals, ((0, n_pad), (0, 0)))
+    tiles = (n + n_pad) // block_rows
+
+    out = pl.pallas_call(
+        functools.partial(_relagg_kernel, num_groups=num_groups),
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda t: (t,)),
+            pl.BlockSpec((block_rows,), lambda t: (t,)),
+            pl.BlockSpec((block_rows, n_aggs), lambda t: (t, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (num_groups, n_aggs + 1), lambda t: (0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_groups, n_aggs + 1), jnp.float32),
+        interpret=interpret,
+    )(gid, mask, vals)
+    return out[:, :n_aggs], out[:, n_aggs]  # (sums, counts)

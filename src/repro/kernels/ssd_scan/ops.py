@@ -1,0 +1,68 @@
+"""Public jit'd wrapper for the SSD scan: fuses dt into x and A, reshapes
+(B, L, H, P) model-layout tensors into kernel layout, auto-interpret off-TPU.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ref import ssd_scan_chunked, ssd_scan_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret", "use_kernel"))
+def ssd_scan(x, dt, A, B, C, chunk=128, interpret=None, use_kernel=None):
+    """Mamba-2 SSD selective scan.
+
+    x:  (B, L, H, P)   sequence input per head
+    dt: (B, L, H)      positive step sizes (post-softplus)
+    A:  (H,)           negative per-head decay rates
+    B:  (B, L, G, N)   input projection (G groups, shared across H//G heads)
+    C:  (B, L, G, N)   output projection
+    returns y: (B, L, H, P)
+    """
+    Bb, L, H, P = x.shape
+    _, _, G, N = B.shape
+    n_rep = H // G
+
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(Bb * H, L, P)
+    dtA = (dt * A[None, None, :]).transpose(0, 2, 1).reshape(Bb * H, L)
+    Bk = B.transpose(0, 2, 1, 3).reshape(Bb * G, L, N)
+    Ck = C.transpose(0, 2, 1, 3).reshape(Bb * G, L, N)
+
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        if interpret is None:
+            interpret = not _on_tpu()
+        y = ssd_scan_pallas(xdt, dtA, Bk, Ck, n_rep, chunk=chunk,
+                            interpret=interpret)
+    elif L > 64:
+        # off-TPU big shapes: chunked jnp form (kernel-like cost/memory)
+        y = ssd_scan_chunked(xdt, dtA, Bk, Ck, n_rep, chunk=chunk)
+    else:
+        y = ssd_scan_ref(xdt, dtA, Bk, Ck, n_rep)
+    return y.reshape(Bb, H, L, P).transpose(0, 2, 1, 3)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """Single-token SSD update for serving.
+
+    state: (B, H, N, P); x_t: (B, H, P); dt_t: (B, H); A: (H,);
+    B_t, C_t: (B, G, N).  Returns (new_state, y_t (B, H, P))."""
+    Bb, H, N, P = state.shape
+    G = B_t.shape[1]
+    n_rep = H // G
+    Bx = jnp.repeat(B_t, n_rep, axis=1)  # (B, H, N)
+    Cx = jnp.repeat(C_t, n_rep, axis=1)
+    decay = jnp.exp(A[None, :] * dt_t)  # (B, H)
+    xdt = x_t * dt_t[..., None]  # (B, H, P)
+    new_state = (
+        decay[..., None, None] * state + Bx[..., :, None] * xdt[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", Cx, new_state)
+    return new_state, y

@@ -1,0 +1,122 @@
+"""Mamba-2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The SSD recurrence (per batch b, head h, state dim N, head dim P):
+
+    S_t = exp(A_h·dt_t) · S_{t-1} + B_t ⊗ (dt_t · x_t)
+    y_t = C_t · S_t
+
+is evaluated chunk-by-chunk (chunk length Q): the *within-chunk* part is the
+quadratic "attention-like" form `(C Bᵀ ∘ decay) @ (dt·x)` — two MXU matmuls
+— and the *cross-chunk* part threads the (N, P) state through VMEM scratch
+across the sequential chunk axis of the grid.  This is the TPU-native
+realization of the paper's duality: the MXU does the quadratic form, the
+scratch carry does the linear recurrence (no per-timestep loop ever runs).
+
+Grid: (B·H, L/Q) with the chunk axis sequential.  VMEM per step:
+Q·P (x) + Q·N (B,C) + N·P (state) + Q² (decay) floats — with Q=128,
+P=64..128, N=128 well under 2 MiB.
+
+Inputs are pre-fused by ops.py: ``xdt = x·dt`` and ``dtA = A_h·dt`` so the
+kernel sees only tensors (no per-head scalar lookup inside the kernel).
+Numerical note: A<0, dt>0 ⟹ all exponents are ≤ 0, every exp() ≤ 1 — the
+chunked form is self-stabilizing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+
+
+def _ssd_kernel(xdt_ref, dtA_ref, b_ref, c_ref, y_ref, state_ref, *, chunk):
+    c_idx = pl.program_id(1)
+
+    @pl.when(c_idx == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    xdt = xdt_ref[0].astype(jnp.float32)  # (Q, P)
+    dtA = dtA_ref[0].astype(jnp.float32)  # (Q,)
+    Bc = b_ref[0].astype(jnp.float32)  # (Q, N)
+    Cc = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    cum = jnp.cumsum(dtA)  # (Q,)
+    # decay(i<-j) = exp(cum_i - cum_j), lower-triangular (j <= i)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    tri = ii >= jj
+    decay = jnp.where(tri, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+
+    # within-chunk (quadratic / "attention" form) on the MXU
+    scores = jax.lax.dot_general(
+        Cc, Bc, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * decay  # (Q, Q)
+    y = jax.lax.dot_general(
+        scores, xdt, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (Q, P)
+
+    # cross-chunk: contribution of the carried state
+    state = state_ref[...]  # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        Cc, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # state update: each source decays to the chunk end
+    decay_to_end = jnp.exp(cum[-1] - cum)  # (Q,)
+    state_ref[...] = jnp.exp(cum[-1]) * state + jax.lax.dot_general(
+        Bc, xdt * decay_to_end[:, None],
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan_pallas(
+    xdt: jnp.ndarray,  # (BH, L, P)  — x * dt, pre-fused
+    dtA: jnp.ndarray,  # (BH, L)     — A_h * dt, pre-fused
+    B: jnp.ndarray,  # (BG, L, N)
+    C: jnp.ndarray,  # (BG, L, N)
+    n_rep: int,  # heads per B/C group (BH == BG * n_rep per batch)
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = False,
+):
+    BH, L, P = xdt.shape
+    BG, _, N = B.shape
+    assert BH % n_rep == 0
+    chunk = min(chunk, L)
+    pad = (-L) % chunk
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0)))
+        dtA = jnp.pad(dtA, ((0, 0), (0, pad)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    n_chunks = (L + pad) // chunk
+
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+            pl.BlockSpec((1, chunk), lambda bh, c: (bh, c)),
+            pl.BlockSpec(
+                (1, chunk, N), lambda bh, c, n_rep=n_rep: (bh // n_rep, c, 0)
+            ),
+            pl.BlockSpec(
+                (1, chunk, N), lambda bh, c, n_rep=n_rep: (bh // n_rep, c, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, P), lambda bh, c: (bh, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, L + pad, P), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ) if hasattr(pltpu, "CompilerParams") else None,
+    )(xdt, dtA, B, C)
+    return out[:, :L]

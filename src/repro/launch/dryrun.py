@@ -1,0 +1,293 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST precede any jax import (device count locks on
+# first init).
+#
+# Multi-pod dry-run: lower + compile every (architecture × input shape)
+# for the production meshes and record memory / cost / collective stats.
+#
+#     PYTHONPATH=src python -m repro.launch.dryrun --arch granite3_2b \
+#         --shape train_4k --mesh single
+#     PYTHONPATH=src python -m repro.launch.dryrun --all --out experiments/dryrun
+#
+# Each cell lowers the real step function (train_step / prefill /
+# serve_step) with ShapeDtypeStruct inputs — no arrays are ever allocated —
+# and must ``.lower().compile()`` cleanly on the 16×16 (single-pod) and
+# 2×16×16 (multi-pod) meshes.  Failures here (sharding mismatch, OOM at
+# compile, unsupported collective) are bugs in the system.
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, config_for
+from repro.dist.activations import clear_activation_mesh, set_activation_mesh
+from repro.dist.sharding import (
+    batch_specs,
+    cache_specs,
+    param_specs,
+    shardings_for,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    model_flops_decode,
+    model_flops_train,
+    roofline_from_compiled,
+)
+from repro.models.config import SHAPES
+from repro.models.model_zoo import (
+    build_model,
+    input_specs,
+    memory_len_for,
+    shape_supported,
+)
+from repro.train.optim import AdamWConfig, adamw_init
+from repro.train.train_loop import TrainState, make_train_step
+
+
+def _shardings(tree, specs, mesh):
+    return shardings_for(specs, mesh)
+
+
+def _serving_dtype(param_shapes):
+    """Serving deployments store bf16 weights (inference checkpoints)."""
+    import jax.numpy as jnp
+
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        if (s.dtype == jnp.float32 and len(s.shape) >= 2)
+        else s,
+        param_shapes,
+    )
+
+
+RESIDUAL_BUDGET = 4 * 2**30  # per-device budget for the remat carry stack
+
+
+def auto_microbatches(cfg, shape, dp: int) -> int:
+    """Smallest microbatch count whose remat residual stack
+    (n_repeats × B_local × S × D × 6 B, the bf16+f32 stacking) fits the
+    budget.  Must divide the global batch and keep B/mb ≥ dp."""
+    reps = cfg.n_repeats + cfg.n_encoder_layers
+    for mb in (1, 2, 4, 8, 16):
+        if shape.global_batch % mb or (shape.global_batch // mb) % dp:
+            continue
+        b_local = shape.global_batch // mb // dp
+        stack = reps * b_local * shape.seq_len * cfg.d_model * 6
+        if stack <= RESIDUAL_BUDGET:
+            return mb
+    return 16
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                microbatches: int = 1, remat: bool = True,
+                int8_kv: bool = False) -> dict:
+    import dataclasses as _dc
+
+    cfg = config_for(arch)
+    if int8_kv:
+        cfg = _dc.replace(cfg, kv_cache_int8=True)
+    shape = SHAPES[shape_name]
+    ok, why = shape_supported(cfg, shape)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "status": "skip",
+    }
+    if not ok:
+        rec["reason"] = why
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    set_activation_mesh(mesh)
+    chips = 512 if multi_pod else 256
+    dp = chips // 16  # data(*pod) degree
+    if microbatches == 0 and shape.kind == "train":
+        microbatches = auto_microbatches(cfg, shape, dp)
+    rec["microbatches"] = microbatches if shape.kind == "train" else None
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.perf_counter()
+    with mesh:
+        if shape.kind == "train":
+            opt_cfg = AdamWConfig()
+            param_shapes = model.init_shapes()
+            opt_shapes = jax.eval_shape(
+                lambda p: adamw_init(p, opt_cfg), param_shapes
+            )
+            state_shapes = TrainState(param_shapes, opt_shapes, None)
+            p_specs = param_specs(param_shapes, mesh, cfg)
+            o_specs = {
+                "m": p_specs,
+                "v": p_specs,
+                "step": jax.sharding.PartitionSpec(),
+            }
+            state_sh = TrainState(
+                shardings_for(p_specs, mesh),
+                shardings_for(o_specs, mesh),
+                None,
+            )
+            b_specs = batch_specs(specs, mesh, cfg)
+            batch_sh = shardings_for(b_specs, mesh)
+            step = make_train_step(model, opt_cfg, microbatches=microbatches,
+                                   remat=remat)
+            lowered = jax.jit(
+                step,
+                in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=0,
+            ).lower(state_shapes, specs)
+            flops_model = model_flops_train(
+                cfg, shape.global_batch * shape.seq_len
+            )
+        elif shape.kind == "prefill":
+            param_shapes = _serving_dtype(model.init_shapes())
+            # NB: mode="serve" (TP-only weights) was tried and REFUTED for
+            # B=1 decode: replicated weights cost more HBM reads than the
+            # FSDP all-gather they remove (EXPERIMENTS.md §Perf).
+            p_specs = param_specs(param_shapes, mesh, cfg)
+            param_sh = shardings_for(p_specs, mesh)
+            b_specs = batch_specs(specs, mesh, cfg)
+            batch_sh = shardings_for(b_specs, mesh)
+
+            def prefill_fn(params, batch):
+                return model.prefill(
+                    params, batch["tokens"], batch.get("memory"),
+                    max_len=shape.seq_len,
+                )
+
+            lowered = jax.jit(
+                prefill_fn, in_shardings=(param_sh, batch_sh)
+            ).lower(param_shapes, specs)
+            flops_model = 2.0 * cfg.active_param_count() * (
+                shape.global_batch * shape.seq_len
+            )
+        else:  # decode
+            param_shapes = _serving_dtype(model.init_shapes())
+            # NB: mode="serve" (TP-only weights) was tried and REFUTED for
+            # B=1 decode: replicated weights cost more HBM reads than the
+            # FSDP all-gather they remove (EXPERIMENTS.md §Perf).
+            p_specs = param_specs(param_shapes, mesh, cfg)
+            param_sh = shardings_for(p_specs, mesh)
+            cache_shapes = specs["cache"]
+            c_specs = cache_specs(cache_shapes, mesh, cfg)
+            cache_sh = shardings_for(c_specs, mesh)
+            tok_sh = shardings_for(
+                batch_specs({"tokens": specs["tokens"]}, mesh, cfg), mesh
+            )["tokens"]
+
+            def serve_step(params, cache, tokens):
+                return model.decode_step(params, cache, tokens)
+
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, cache_sh, tok_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=1,
+            ).lower(param_shapes, cache_shapes, specs["tokens"])
+            flops_model = model_flops_decode(cfg, shape.global_batch)
+
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+
+    clear_activation_mesh()
+    mem = compiled.memory_analysis()
+    roof, colls = roofline_from_compiled(compiled, chips)
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        memory={
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "per_device_total": int(
+                mem.argument_size_in_bytes
+                + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes
+                - mem.alias_size_in_bytes
+            ),
+        },
+        roofline=roof.as_dict(),
+        collectives={
+            "bytes": colls.bytes_by_kind,
+            "count": colls.count_by_kind,
+        },
+        model_flops_global=flops_model,
+        model_flops_per_chip=flops_model / chips,
+        useful_flop_ratio=(
+            flops_model / chips / roof.flops if roof.flops else None
+        ),
+        params=cfg.param_count(),
+        active_params=cfg.active_param_count(),
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=0)  # 0 = auto
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--int8-kv", action="store_true",
+                    help="int8 KV cache variant (§Perf)")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch}.{shape}.{'multi' if multi else 'single'}"
+                if args.int8_kv:
+                    tag += ".int8kv"
+                path = os.path.join(args.out, tag + ".json")
+                try:
+                    rec = dryrun_cell(arch, shape, multi,
+                                      microbatches=args.microbatches,
+                                      remat=not args.no_remat,
+                                      int8_kv=args.int8_kv)
+                except Exception as e:
+                    rec = {
+                        "arch": arch, "shape": shape,
+                        "mesh": "2x16x16" if multi else "16x16",
+                        "status": "fail", "error": f"{type(e).__name__}: {e}",
+                        "trace": traceback.format_exc()[-2000:],
+                    }
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    m = rec["memory"]["per_device_total"] / 2**30
+                    d = rec["roofline"]["dominant"]
+                    extra = (f" mem/dev={m:.2f}GiB dom={d} "
+                             f"compile={rec['compile_s']:.0f}s")
+                elif status == "fail":
+                    extra = " " + rec["error"][:120]
+                print(f"[{status:4s}] {tag}{extra}", flush=True)
+                gc.collect()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

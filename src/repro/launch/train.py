@@ -1,0 +1,80 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite3_2b --smoke \
+        --steps 100 --batch 8 --seq 64 --ckpt /tmp/ckpt
+
+Production launch (multi-host) uses the same entry point under
+``jax.distributed.initialize`` with the 16x16 (or 2x16x16) mesh; this
+container is 1-CPU so --smoke reduced configs are the runnable path.
+Fault tolerance: every run resumes from the newest verifiable checkpoint;
+straggler stats print at the end (feed the eviction set to an elastic
+restart, see repro.train.elastic).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import config_for, smoke_config_for
+from repro.data.pipeline import DataPipeline
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optim import AdamWConfig
+from repro.train.straggler import StragglerTracker
+from repro.train.train_loop import TrainState, init_state, train_loop
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite3_2b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 error-feedback gradient compression")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config_for(args.arch) if args.smoke else config_for(args.arch)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 10 + 1),
+                          total_steps=args.steps)
+
+    mgr = None
+    state = None
+    if args.ckpt:
+        mgr = CheckpointManager(args.ckpt, keep_n=3)
+        step, restored = mgr.restore_latest()
+        if restored is not None:
+            print(f"resuming from checkpoint step {step}")
+            state = TrainState(restored["params"], restored["opt"], None)
+    if state is None:
+        state = init_state(model, jax.random.PRNGKey(args.seed), opt_cfg,
+                           compress=args.compress)
+
+    pipe = DataPipeline(batch=args.batch, seq_len=args.seq, vocab=cfg.vocab,
+                        seed=args.seed)
+    straggler = StragglerTracker()
+    state = train_loop(
+        model, state, iter(pipe), opt_cfg, steps=args.steps,
+        checkpoint_mgr=mgr, checkpoint_every=args.checkpoint_every,
+        straggler=straggler, microbatches=args.microbatches,
+        compress=args.compress,
+    )
+    if mgr is not None:
+        mgr.save(args.steps, {"params": state.params, "opt": state.opt})
+        mgr.wait()
+    if straggler.should_evict():
+        print(f"straggler eviction candidates: {straggler.should_evict()}")
+    print(f"done at step {int(state.opt['step'])}")
+
+
+if __name__ == "__main__":
+    main()

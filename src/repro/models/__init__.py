@@ -1,0 +1,5 @@
+from repro.models.config import SHAPES, ArchConfig, LayerSpec, ShapeConfig
+from repro.models.model_zoo import Model, build_model, input_specs
+
+__all__ = ["SHAPES", "ArchConfig", "LayerSpec", "ShapeConfig", "Model",
+           "build_model", "input_specs"]

@@ -1,0 +1,279 @@
+"""Attention mixers: GQA self-attention (full / sliding-window), MLA
+(multi-head latent attention, MiniCPM3), and cross-attention (vision /
+encoder memory) — with both sequence-form (train/prefill, flash kernel)
+and single-token decode (KV cache) entry points.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.models.config import ArchConfig, MLAConfig
+from repro.models.layers import _dense_init, apply_rope, init_rmsnorm, rmsnorm
+
+
+# ------------------------------------------------------------- GQA
+def init_attention(key, cfg: ArchConfig):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": _dense_init(k1, (D, H * hd)),
+        "wk": _dense_init(k2, (D, Hkv * hd)),
+        "wv": _dense_init(k3, (D, Hkv * hd)),
+        "wo": _dense_init(k4, (H * hd, D), scale=(H * hd) ** -0.5),
+    }
+
+
+def attention_seq(params, x, cfg: ArchConfig, *, window=None, positions=None,
+                  q_offset: int = 0, causal: bool = True):
+    """Sequence-form attention (train / prefill).  Returns (out, (k, v))."""
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    if positions is None:
+        positions = q_offset + jnp.arange(S)[None, :]
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(dt)).reshape(B, S, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(dt)).reshape(B, S, Hkv, hd)
+    q = apply_rope(q.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta)
+    v = v.swapaxes(1, 2)  # (B, Hkv, S, hd)
+    o = flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    o = o.swapaxes(1, 2).reshape(B, S, H * hd)
+    return jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt)), (k, v)
+
+
+def quantize_kv(x):
+    """Per-(batch, head, position) symmetric int8 over the head dim.
+    x: (..., hd) -> (int8 (..., hd), f32 scale (...))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def attention_decode(params, x, cache, pos, cfg: ArchConfig, *, window=None):
+    """Single-token decode.  cache: (k, v) each (B, Hkv, S_cache, hd), or
+    the int8 form (kq, ks, vq, vs) when cfg.kv_cache_int8;
+    ``pos``: scalar current position.  Returns (out, new_cache).
+
+    For windowed layers the cache is a ring buffer of size ``window``."""
+    B, _, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    int8_cache = len(cache) == 4
+    if int8_cache:
+        k_cache, k_scale, v_cache, v_scale = cache
+    else:
+        k_cache, v_cache = cache
+    S_cache = k_cache.shape[2]
+
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt)).reshape(B, 1, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"].astype(dt)).reshape(B, 1, Hkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"].astype(dt)).reshape(B, 1, Hkv, hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q.swapaxes(1, 2), posv[:, None, :], cfg.rope_theta)  # (B,H,1,hd)
+    k = apply_rope(k.swapaxes(1, 2), posv[:, None, :], cfg.rope_theta)
+    v = v.swapaxes(1, 2)
+
+    slot = pos % S_cache if window is not None else pos
+    if int8_cache:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, kq, slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, vq, slot, axis=2)
+        k_scale = jax.lax.dynamic_update_slice_in_dim(k_scale, ks, slot, axis=2)
+        v_scale = jax.lax.dynamic_update_slice_in_dim(v_scale, vs, slot, axis=2)
+        k_full = dequantize_kv(k_cache, k_scale, jnp.float32)
+        v_full = dequantize_kv(v_cache, v_scale, jnp.float32)
+        new_cache = (k_cache, k_scale, v_cache, v_scale)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=2)
+        k_full, v_full = k_cache, v_cache
+        new_cache = (k_cache, v_cache)
+
+    # positions of cache slots (ring-aware) for masking
+    idx = jnp.arange(S_cache)
+    if window is not None:
+        wrap = (pos // S_cache) * S_cache
+        slot_pos = jnp.where(idx <= slot, wrap + idx, wrap - S_cache + idx)
+        valid = (slot_pos >= jnp.maximum(0, pos - window + 1)) & (slot_pos <= pos)
+    else:
+        valid = idx <= pos
+
+    n_rep = H // Hkv
+    kx = jnp.repeat(k_full, n_rep, axis=1)
+    vx = jnp.repeat(v_full, n_rep, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32)
+    ) * (hd ** -0.5)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(dt)
+    o = o.swapaxes(1, 2).reshape(B, 1, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt))
+    return out, new_cache
+
+
+# ------------------------------------------------------------- MLA
+def init_mla(key, cfg: ArchConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.n_heads
+    ks = jax.random.split(key, 6)
+    qh = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "w_dq": _dense_init(ks[0], (D, m.q_lora_rank)),
+        "q_norm": init_rmsnorm(m.q_lora_rank),
+        "w_uq": _dense_init(ks[1], (m.q_lora_rank, H * qh)),
+        "w_dkv": _dense_init(ks[2], (D, m.kv_lora_rank + m.qk_rope_head_dim)),
+        "kv_norm": init_rmsnorm(m.kv_lora_rank),
+        "w_ukv": _dense_init(
+            ks[3], (m.kv_lora_rank, H * (m.qk_nope_head_dim + m.v_head_dim))
+        ),
+        "wo": _dense_init(ks[4], (H * m.v_head_dim, D)),
+    }
+
+
+def mla_seq(params, x, cfg: ArchConfig, *, q_offset: int = 0):
+    """Multi-head latent attention, sequence form.  The cache is the
+    compressed latent (B, S, kv_rank + rope_dim) — the memory win that
+    makes MiniCPM3 long-context serving cheap.  Returns (out, latent)."""
+    m = cfg.mla
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dt = x.dtype
+    positions = q_offset + jnp.arange(S)[None, :]
+
+    cq = rmsnorm(
+        jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dt)), params["q_norm"],
+        cfg.norm_eps,
+    )
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"].astype(dt)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(
+        q_rope.swapaxes(1, 2), positions[:, None, :], cfg.rope_theta
+    ).swapaxes(1, 2)
+
+    latent = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    c_kv, k_rope = jnp.split(latent, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, params["w_ukv"].astype(dt)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope = apply_rope(
+        k_rope[:, :, None, :].swapaxes(1, 2), positions[:, None, :], cfg.rope_theta
+    ).swapaxes(1, 2)  # (B, S, 1, rope_dim) shared across heads
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1).swapaxes(1, 2)
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (m.qk_rope_head_dim,))],
+        axis=-1,
+    ).swapaxes(1, 2)
+    v = v.swapaxes(1, 2)
+    # v head dim may differ from qk head dim -> pad for the kernel
+    pad = q_full.shape[-1] - v.shape[-1]
+    v_p = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad))) if pad else v
+    o = flash_attention(q_full, k_full, v_p, causal=True, q_offset=q_offset)
+    o = o[..., : m.v_head_dim]
+    o = o.swapaxes(1, 2).reshape(B, S, H * m.v_head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt)), latent
+
+
+def mla_decode(params, x, latent_cache, pos, cfg: ArchConfig):
+    """Single-token MLA decode against the compressed latent cache
+    (B, S_cache, kv_rank + rope_dim)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    dt = x.dtype
+
+    new_latent = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"].astype(dt))
+    latent_cache = jax.lax.dynamic_update_slice_in_dim(
+        latent_cache, new_latent, pos, axis=1
+    )
+    S_cache = latent_cache.shape[1]
+    positions = jnp.arange(S_cache)[None, :]
+
+    cq = rmsnorm(
+        jnp.einsum("bsd,dr->bsr", x, params["w_dq"].astype(dt)), params["q_norm"],
+        cfg.norm_eps,
+    )
+    q = jnp.einsum("bsr,rh->bsh", cq, params["w_uq"].astype(dt)).reshape(
+        B, 1, H, m.qk_nope_head_dim + m.qk_rope_head_dim
+    )
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), posv[:, None, :], cfg.rope_theta)
+    q_nope = q_nope.swapaxes(1, 2)
+
+    c_kv, k_rope = jnp.split(latent_cache, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(c_kv, params["kv_norm"], cfg.norm_eps)
+    kv = jnp.einsum("bsr,rh->bsh", c_kv, params["w_ukv"].astype(dt)).reshape(
+        B, S_cache, H, m.qk_nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope = apply_rope(
+        k_rope[:, :, None, :].swapaxes(1, 2), positions[:, None, :], cfg.rope_theta
+    )  # (B, 1, S, rope)
+
+    s = (
+        jnp.einsum("bhqd,bshd->bhqs", q_nope.astype(jnp.float32),
+                   k_nope.astype(jnp.float32))
+        + jnp.einsum("bhqd,bzsd->bhqs", q_rope.astype(jnp.float32),
+                     k_rope.astype(jnp.float32))
+    ) * ((m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5)
+    valid = jnp.arange(S_cache) <= pos
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bshd->bhqd", p, v.astype(jnp.float32)).astype(dt)
+    o = o.swapaxes(1, 2).reshape(B, 1, H * m.v_head_dim)
+    return jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt)), latent_cache
+
+
+# ------------------------------------------------------------- cross-attn
+def init_cross_attention(key, cfg: ArchConfig):
+    p = init_attention(key, cfg)
+    p["gate"] = jnp.zeros((), jnp.float32)
+    return p
+
+
+def cross_attention(params, x, memory_kv, cfg: ArchConfig):
+    """x attends to a fixed memory (vision patches / encoder output).
+    memory_kv: precomputed (k, v) each (B, Hkv, M, hd)."""
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"].astype(dt)).reshape(
+        B, S, H, hd
+    ).swapaxes(1, 2)
+    k, v = memory_kv
+    o = flash_attention(q, k.astype(dt), v.astype(dt), causal=False)
+    o = o.swapaxes(1, 2).reshape(B, S, H * hd)
+    out = jnp.einsum("bsh,hd->bsd", o, params["wo"].astype(dt))
+    return jnp.tanh(params["gate"]).astype(dt) * out
+
+
+def cross_memory(params, memory, cfg: ArchConfig):
+    """Precompute cross-attention (k, v) from memory embeddings
+    (B, M, D) once per sequence (prefill)."""
+    B, M, D = memory.shape
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    dt = memory.dtype
+    k = jnp.einsum("bmd,dh->bmh", memory, params["wk"].astype(dt)).reshape(
+        B, M, Hkv, hd
+    ).swapaxes(1, 2)
+    v = jnp.einsum("bmd,dh->bmh", memory, params["wv"].astype(dt)).reshape(
+        B, M, Hkv, hd
+    ).swapaxes(1, 2)
+    return k, v

@@ -1,0 +1,174 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, MoE, rotary embeddings, losses.
+
+Pure-functional: params are nested dicts of jnp arrays; init functions
+take a PRNG key and return the dict.  Compute dtype is bf16 with f32
+accumulation (norms/softmax/loss in f32) — the TPU-native mixed precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) == 2 else shape[-2]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale)
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(
+        x.dtype
+    )
+
+
+def init_rmsnorm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ------------------------------------------------------------------ rope
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x, positions, theta: float = 10_000.0):
+    """x: (..., S, D) with D even; positions: broadcastable to (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------ MLP
+def init_mlp(key, d_model, d_ff):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": _dense_init(k1, (d_model, d_ff)),
+        "w_up": _dense_init(k2, (d_model, d_ff)),
+        "w_down": _dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp(params, x):
+    dt = x.dtype
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("...d,df->...f", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"].astype(dt))
+
+
+# ------------------------------------------------------------------ MoE
+def init_moe(key, d_model, d_ff, n_experts, storage_experts=None):
+    """``storage_experts`` >= n_experts pads the expert axis for clean
+    expert-parallel sharding; pad experts hold zeros and are never routed
+    to (router width stays n_experts)."""
+    E = storage_experts or n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    def padded(k, shape):
+        w = _dense_init(k, (n_experts,) + shape)
+        if E > n_experts:
+            w = jnp.concatenate(
+                [w, jnp.zeros((E - n_experts,) + shape, w.dtype)], axis=0
+            )
+        return w
+    return {
+        "router": _dense_init(k0, (d_model, n_experts)),
+        "w_gate": padded(k1, (d_model, d_ff)),
+        "w_up": padded(k2, (d_model, d_ff)),
+        "w_down": padded(k3, (d_ff, d_model)),
+    }
+
+
+def moe(params, x, top_k: int):
+    """Dense one-hot dispatch MoE (EP-shardable einsum form).
+
+    Every token's activation is contracted against every expert with a
+    top-k one-hot combine weight — dropless routing whose dispatch is two
+    einsums (MXU-friendly; the expert axis shards over the model axis for
+    expert parallelism).  FLOP cost is n_experts/top_k higher than ideal
+    a2a dispatch; see EXPERIMENTS.md §Perf for the a2a-free trade-off."""
+    dt = x.dtype
+    logits = jnp.einsum(
+        "...d,de->...e", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    weights = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(weights, top_k)  # (..., k)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    n_storage = params["w_gate"].shape[0]  # >= router width when padded
+    combine = jnp.sum(
+        jax.nn.one_hot(top_i, n_storage, dtype=jnp.float32)
+        * top_w[..., None],
+        axis=-2,
+    )  # (..., e) sparse combine weights (pad experts get weight 0)
+
+    g = jnp.einsum("...d,edf->...ef", x, params["w_gate"].astype(dt))
+    u = jnp.einsum("...d,edf->...ef", x, params["w_up"].astype(dt))
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(dt) * u
+    y = jnp.einsum("...ef,efd->...ed", h, params["w_down"].astype(dt))
+    return jnp.einsum("...ed,...e->...d", y, combine.astype(dt))
+
+
+def moe_aux_loss(params, x):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    logits = jnp.einsum(
+        "...d,de->...e", x.astype(jnp.float32), params["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    frac = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    hard = jax.nn.one_hot(jnp.argmax(probs, -1), probs.shape[-1])
+    load = jnp.mean(hard, axis=tuple(range(hard.ndim - 1)))
+    return probs.shape[-1] * jnp.sum(frac * load)
+
+
+# ------------------------------------------------------------------ losses
+def chunked_softmax_xent(x, w_head, labels, mask=None, chunk: int = 512):
+    """Next-token CE without materializing (B, S, V) logits: the sequence
+    is processed in chunks (lax.map), each chunk computing logits ->
+    logsumexp -> label logit and discarding the logits.  Differentiable
+    (map lowers to scan); with remat the backward recomputes per chunk.
+
+    x: (B, S, D); w_head: (D, V); labels: (B, S) int32.
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = (
+            jnp.pad(mask, ((0, 0), (0, pad)))
+            if mask is not None
+            else jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+        )
+    elif mask is None:
+        mask = jnp.ones((B, S), bool)
+    n_chunks = (S + pad) // chunk
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint  # backward recomputes each chunk's logits (O(chunk·V))
+    def one(args):
+        xi, li, mi = args  # (B, chunk, D), (B, chunk)
+        logits = jnp.einsum(
+            "bsd,dv->bsv", xi.astype(jnp.float32), w_head.astype(jnp.float32)
+        )
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mi
+        return jnp.sum(nll), jnp.sum(mi)
+
+    losses, counts = jax.lax.map(one, (xc, lc, mc))
+    total = jnp.sum(losses)
+    denom = jnp.maximum(jnp.sum(counts), 1.0)
+    return total / denom

@@ -1,0 +1,118 @@
+"""Model facade + input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for the dry-run; smoke tests use the same
+specs with real arrays on reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.models.config import SHAPES, ArchConfig, ShapeConfig
+from repro.models.layers import COMPUTE_DTYPE
+
+AUDIO_DECODE_MEMORY = 1536  # stub frame count for enc-dec decode shapes
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    def init(self, key):
+        return T.init_params(key, self.cfg)
+
+    def init_shapes(self):
+        return jax.eval_shape(
+            lambda: T.init_params(jax.random.PRNGKey(0), self.cfg)
+        )
+
+    def loss_fn(self, params, batch, remat=True):
+        return T.loss_fn(params, batch, self.cfg, remat=remat)
+
+    def forward(self, params, tokens, memory=None):
+        return T.forward(params, tokens, self.cfg, memory)
+
+    def lm_head(self, params, x):
+        return T.lm_head(params, x, self.cfg)
+
+    def prefill(self, params, tokens, memory=None, max_len=None):
+        return T.prefill(params, tokens, self.cfg, memory, max_len)
+
+    def decode_step(self, params, cache, tokens):
+        return T.decode_step(params, cache, tokens, self.cfg)
+
+    def init_cache(self, batch, max_len, memory_len=0):
+        return T.init_cache(self.cfg, batch, max_len, memory_len)
+
+    def cache_shapes(self, batch, max_len, memory_len=0):
+        return jax.eval_shape(
+            lambda: T.init_cache(self.cfg, batch, max_len, memory_len)
+        )
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch × shape)
+# ---------------------------------------------------------------------------
+
+
+def _memory_spec(cfg: ArchConfig, batch: int, seq_len: int):
+    if cfg.vision_tokens:
+        return jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.d_model), COMPUTE_DTYPE
+        )
+    if cfg.n_encoder_layers:
+        return jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model), COMPUTE_DTYPE)
+    return None
+
+
+def memory_len_for(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    if cfg.vision_tokens:
+        return cfg.vision_tokens
+    if cfg.n_encoder_layers:
+        return shape.seq_len if shape.kind != "decode" else AUDIO_DECODE_MEMORY
+    return 0
+
+
+def shape_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """long_500k needs sub-quadratic attention (DESIGN.md §5)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "full-attention arch: long_500k skipped (DESIGN.md §5)"
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig | str):
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    if shape.kind == "train":
+        specs = {"tokens": tok, "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        mem = _memory_spec(cfg, B, S)
+        if mem is not None:
+            specs["memory"] = mem
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": tok}
+        mem = _memory_spec(cfg, B, S)
+        if mem is not None:
+            specs["memory"] = mem
+        return specs
+    if shape.kind == "decode":
+        model = build_model(cfg)
+        mem_len = memory_len_for(cfg, shape)
+        cache = model.cache_shapes(B, S, mem_len)
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "cache": cache,
+        }
+    raise ValueError(shape.kind)

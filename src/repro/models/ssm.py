@@ -1,0 +1,138 @@
+"""Mamba-2 (SSD) mixer block: fused in-projection, short causal conv,
+SSD selective scan (Pallas kernel on TPU), gated RMSNorm, out-projection.
+Sequence form for train/prefill + single-token decode with (conv, ssd)
+state for serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ops import ssd_decode_step, ssd_scan
+from repro.models.config import ArchConfig
+from repro.models.layers import _dense_init, init_rmsnorm, rmsnorm
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.state_dim
+    return s, d_in, H, conv_dim
+
+
+def init_mamba(key, cfg: ArchConfig):
+    s, d_in, H, conv_dim = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        # fused in-proj: [z (gate), x, B, C, dt]
+        "w_in": _dense_init(
+            ks[0], (cfg.d_model, 2 * d_in + 2 * s.n_groups * s.state_dim + H)
+        ),
+        "conv_w": _dense_init(ks[1], (s.conv_kernel, conv_dim), scale=0.5),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": init_rmsnorm(d_in),
+        "w_out": _dense_init(ks[2], (d_in, cfg.d_model)),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, H, _ = _dims(cfg)
+    gN = s.n_groups * s.state_dim
+    z, xBC_dt = jnp.split(proj, [d_in], axis=-1)
+    xBC, dt_raw = jnp.split(xBC_dt, [d_in + 2 * gN], axis=-1)
+    return z, xBC, dt_raw
+
+
+def mamba_seq(params, x_in, cfg: ArchConfig):
+    """Sequence form.  Returns (out, (conv_state, ssd_state)) — final
+    states for cache handoff after prefill."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    B, S, D = x_in.shape
+    dt_ = x_in.dtype
+    gN = s.n_groups * s.state_dim
+
+    proj = jnp.einsum("bsd,dh->bsh", x_in, params["w_in"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+
+    # short causal depthwise conv over sequence
+    k = s.conv_kernel
+    xBC_pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        xBC_pad[:, i : i + S, :] * params["conv_w"][i][None, None, :].astype(dt_)
+        for i in range(k)
+    )
+    conv = jax.nn.silu(conv.astype(jnp.float32)).astype(dt_)
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + gN], axis=-1)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )  # (B, S, H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    xh = xs.reshape(B, S, H, s.head_dim)
+    Bm = Bm.reshape(B, S, s.n_groups, s.state_dim)
+    Cm = Cm.reshape(B, S, s.n_groups, s.state_dim)
+
+    y = ssd_scan(xh.astype(jnp.float32), dt, A, Bm.astype(jnp.float32),
+                 Cm.astype(jnp.float32))
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(dt_)
+
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(dt_)
+    out = jnp.einsum("bsh,hd->bsd", y, params["w_out"].astype(dt_))
+
+    conv_state = xBC[:, -(k - 1) :, :] if k > 1 else jnp.zeros((B, 0, conv_dim), dt_)
+    # exact final SSD state for the prefill->decode handoff:
+    #   S = Σ_s exp(cumA_S - cumA_s) · B_s ⊗ (dt_s x_s)
+    dtA = dt * A[None, None, :]  # (B, S, H)
+    cum = jnp.cumsum(dtA, axis=1)
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)  # (B, S, H)
+    n_rep = H // s.n_groups
+    B_rep = jnp.repeat(Bm.astype(jnp.float32), n_rep, axis=2)  # (B, S, H, N)
+    xdt = xh.astype(jnp.float32) * dt[..., None]  # (B, S, H, P)
+    ssd_state = jnp.einsum(
+        "bsh,bshn,bshp->bhnp", decay_end, B_rep, xdt
+    )  # (B, H, N, P)
+    return out, (conv_state, ssd_state)
+
+
+def mamba_decode(params, x_in, state, cfg: ArchConfig):
+    """Single-token decode.  state = (conv_state (B, k-1, conv_dim),
+    ssd_state (B, H, N, P))."""
+    s, d_in, H, conv_dim = _dims(cfg)
+    B, _, D = x_in.shape
+    dt_ = x_in.dtype
+    gN = s.n_groups * s.state_dim
+    conv_state, ssd_state = state
+
+    proj = jnp.einsum("bsd,dh->bsh", x_in, params["w_in"].astype(dt_))
+    z, xBC, dt_raw = _split_proj(cfg, proj)  # (B, 1, ·)
+
+    k = s.conv_kernel
+    window = jnp.concatenate([conv_state, xBC], axis=1)  # (B, k, conv_dim)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      params["conv_w"].astype(jnp.float32))
+    conv = jax.nn.silu(conv)[:, None, :].astype(dt_)
+    new_conv_state = window[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(conv[:, 0], [d_in, d_in + gN], axis=-1)
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"][None, :]
+    )  # (B, H)
+    A = -jnp.exp(params["A_log"])
+    xh = xs.reshape(B, H, s.head_dim).astype(jnp.float32)
+    Bt = Bm.reshape(B, s.n_groups, s.state_dim).astype(jnp.float32)
+    Ct = Cm.reshape(B, s.n_groups, s.state_dim).astype(jnp.float32)
+
+    new_ssd, y = ssd_decode_step(ssd_state, xh, dt, A, Bt, Ct)
+    y = y + params["D"][None, :, None] * xh
+    y = y.reshape(B, 1, d_in).astype(dt_)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps) * jax.nn.silu(
+        z.astype(jnp.float32)
+    ).astype(dt_)
+    out = jnp.einsum("bsh,hd->bsd", y, params["w_out"].astype(dt_))
+    return out, (new_conv_state, new_ssd)

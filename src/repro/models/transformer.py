@@ -1,0 +1,371 @@
+"""Model assembly: decoder / encoder / encoder-decoder stacks over
+heterogeneous super-blocks (attention incl. GQA/SWA/MLA, Mamba-2, MoE,
+cross-attention), with three entry points per model:
+
+  * ``loss_fn(params, batch)``       — next-token CE (chunked, no (B,S,V))
+  * ``prefill(params, tokens, …)``   — forward + KV/SSM cache construction
+  * ``decode_step(params, cache, t)``— single-token serve step
+
+Depth is folded into ``lax.scan`` over ``n_repeats`` stacked super-blocks
+(HLO size stays O(super-block) for 100-layer models); each super-block body
+is rematerialized (``jax.checkpoint``) for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.activations import shard_batch
+from repro.models import attention as ATT
+from repro.models import ssm as SSM
+from repro.models.config import ArchConfig, LayerSpec
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    _dense_init,
+    chunked_softmax_xent,
+    init_mlp,
+    init_moe,
+    init_rmsnorm,
+    mlp,
+    moe,
+    rmsnorm,
+)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(key, spec: LayerSpec, cfg: ArchConfig):
+    out = {}
+    ks = iter(jax.random.split(key, 8))
+    if spec.mixer == "attn":
+        out["norm1"] = init_rmsnorm(cfg.d_model)
+        out["attn"] = (
+            ATT.init_mla(next(ks), cfg) if cfg.mla else ATT.init_attention(next(ks), cfg)
+        )
+    elif spec.mixer == "cross":
+        out["norm1"] = init_rmsnorm(cfg.d_model)
+        out["attn"] = ATT.init_cross_attention(next(ks), cfg)
+    elif spec.mixer == "mamba":
+        out["norm1"] = init_rmsnorm(cfg.d_model)
+        out["mamba"] = SSM.init_mamba(next(ks), cfg)
+    if getattr(spec, "cross_memory", False):
+        out["norm_x"] = init_rmsnorm(cfg.d_model)
+        out["xattn"] = ATT.init_cross_attention(next(ks), cfg)
+    if spec.mlp == "dense":
+        out["norm2"] = init_rmsnorm(cfg.d_model)
+        out["mlp"] = init_mlp(next(ks), cfg.d_model, cfg.d_ff)
+    elif spec.mlp == "moe":
+        out["norm2"] = init_rmsnorm(cfg.d_model)
+        fe = cfg.moe.d_ff_expert or cfg.d_ff
+        out["moe"] = init_moe(next(ks), cfg.d_model, fe, cfg.moe.n_experts,
+                              cfg.moe.storage_experts)
+    return out
+
+
+def init_params(key, cfg: ArchConfig):
+    k_embed, k_blocks, k_head, k_enc = jax.random.split(key, 4)
+    params = {
+        "embed": _dense_init(k_embed, (cfg.vocab, cfg.d_model), scale=0.02),
+        "final_norm": init_rmsnorm(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense_init(k_head, (cfg.d_model, cfg.vocab))
+
+    def one_repeat(k):
+        lkeys = jax.random.split(k, len(cfg.super_block))
+        return {
+            f"layer{i}": _init_layer(lk, spec, cfg)
+            for i, (lk, spec) in enumerate(zip(lkeys, cfg.super_block))
+        }
+
+    rkeys = jax.random.split(k_blocks, cfg.n_repeats)
+    per = [one_repeat(k) for k in rkeys]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+    if cfg.n_encoder_layers:
+        enc_spec = LayerSpec(mixer="attn", mlp="dense")
+        ekeys = jax.random.split(k_enc, cfg.n_encoder_layers)
+        eper = [
+            {"layer0": _init_layer(k, enc_spec, cfg)} for k in ekeys
+        ]
+        params["encoder"] = {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *eper),
+            "final_norm": init_rmsnorm(cfg.d_model),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# sequence-form stack (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_seq(lp, spec: LayerSpec, x, cfg: ArchConfig, memory, q_offset,
+               causal=True):
+    cache_out = {}
+    if spec.mixer == "attn":
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        if cfg.mla:
+            o, latent = ATT.mla_seq(lp["attn"], h, cfg, q_offset=q_offset)
+            cache_out["latent"] = latent
+        else:
+            o, kv = ATT.attention_seq(
+                lp["attn"], h, cfg, window=spec.window, q_offset=q_offset,
+                causal=causal,
+            )
+            cache_out["kv"] = kv
+        x = x + o
+    elif spec.mixer == "cross":
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        mkv = ATT.cross_memory(lp["attn"], memory, cfg)
+        x = x + ATT.cross_attention(lp["attn"], h, mkv, cfg)
+        cache_out["memory_kv"] = mkv
+    elif spec.mixer == "mamba":
+        h = rmsnorm(x, lp["norm1"], cfg.norm_eps)
+        o, state = SSM.mamba_seq(lp["mamba"], h, cfg)
+        cache_out["ssm"] = state
+        x = x + o
+    if getattr(spec, "cross_memory", False):
+        h = rmsnorm(x, lp["norm_x"], cfg.norm_eps)
+        mkv = ATT.cross_memory(lp["xattn"], memory, cfg)
+        x = x + ATT.cross_attention(lp["xattn"], h, mkv, cfg)
+        cache_out["memory_kv"] = mkv
+    if spec.mlp == "dense":
+        x = x + mlp(lp["mlp"], rmsnorm(x, lp["norm2"], cfg.norm_eps))
+    elif spec.mlp == "moe":
+        x = x + moe(lp["moe"], rmsnorm(x, lp["norm2"], cfg.norm_eps),
+                    cfg.moe.top_k)
+    return x, cache_out
+
+
+def _stack_seq(blocks, x, cfg: ArchConfig, memory, q_offset, *,
+               collect_cache=False, remat=True, causal=True,
+               super_block=None):
+    super_block = super_block or cfg.super_block
+
+    def body(carry, bp):
+        h = shard_batch(carry)
+        caches = {}
+        for i, spec in enumerate(super_block):
+            h, c = _layer_seq(bp[f"layer{i}"], spec, h, cfg, memory, q_offset,
+                              causal)
+            caches[f"layer{i}"] = c
+        return shard_batch(h), (caches if collect_cache else 0)
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, caches = jax.lax.scan(body, x, blocks)
+    return x, caches
+
+
+def forward(params, tokens, cfg: ArchConfig, memory=None, *, remat=True):
+    """Token ids -> final hidden states (B, S, D) in COMPUTE_DTYPE."""
+    x = shard_batch(params["embed"].astype(COMPUTE_DTYPE)[tokens])
+    if cfg.n_encoder_layers and memory is not None:
+        memory = encode(params, memory, cfg, remat=remat)
+    if memory is not None:
+        memory = memory.astype(COMPUTE_DTYPE)
+    x, _ = _stack_seq(params["blocks"], x, cfg, memory, 0, remat=remat)
+    return rmsnorm(x, params["final_norm"], cfg.norm_eps)
+
+
+def encode(params, frames, cfg: ArchConfig, *, remat=True):
+    """Encoder stack over stub frontend embeddings (B, S_enc, D)."""
+    enc = params["encoder"]
+    x = frames.astype(COMPUTE_DTYPE)
+    spec = (LayerSpec(mixer="attn", mlp="dense"),)
+    x, _ = _stack_seq(enc["blocks"], x, cfg, None, 0, remat=remat,
+                      causal=False, super_block=spec)
+    return rmsnorm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def lm_head(params, x, cfg: ArchConfig):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return jnp.einsum(
+        "bsd,dv->bsv", x.astype(jnp.float32), w.astype(jnp.float32)
+    )
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, remat=True):
+    """batch: {tokens (B,S), labels (B,S)[, memory (B,M,D)]}"""
+    x = forward(params, batch["tokens"], cfg, batch.get("memory"), remat=remat)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    mask = batch.get("mask")
+    return chunked_softmax_xent(x, w, batch["labels"], mask)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def _cache_len(spec: LayerSpec, max_len: int) -> int:
+    if spec.mixer == "attn" and spec.window is not None:
+        return min(spec.window, max_len)
+    return max_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, memory_len: int = 0,
+               dtype=COMPUTE_DTYPE):
+    """Zero-initialized decoding cache pytree (stacked per super-block)."""
+    R = cfg.n_repeats
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    layers = {}
+    for i, spec in enumerate(cfg.super_block):
+        c = {}
+        if spec.mixer == "attn":
+            if cfg.mla:
+                m = cfg.mla
+                c["latent"] = jnp.zeros(
+                    (R, batch, max_len, m.kv_lora_rank + m.qk_rope_head_dim), dtype
+                )
+            else:
+                L = _cache_len(spec, max_len)
+                kv_shape = (R, batch, cfg.n_kv_heads, L, cfg.head_dim)
+                if cfg.kv_cache_int8:
+                    # int8 codes + per-(token, head) f32 scales (§Perf)
+                    c["kv"] = (
+                        jnp.zeros(kv_shape, jnp.int8),
+                        jnp.ones(kv_shape[:-1], jnp.float32),
+                        jnp.zeros(kv_shape, jnp.int8),
+                        jnp.ones(kv_shape[:-1], jnp.float32),
+                    )
+                else:
+                    c["kv"] = (
+                        jnp.zeros(kv_shape, dtype),
+                        jnp.zeros(kv_shape, dtype),
+                    )
+        elif spec.mixer == "mamba":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            conv_dim = d_in + 2 * s.n_groups * s.state_dim
+            c["ssm"] = (
+                jnp.zeros((R, batch, s.conv_kernel - 1, conv_dim), dtype),
+                jnp.zeros((R, batch, H, s.state_dim, s.head_dim), jnp.float32),
+            )
+        if spec.mixer == "cross" or getattr(spec, "cross_memory", False):
+            c["memory_kv"] = (
+                jnp.zeros(
+                    (R, batch, cfg.n_kv_heads, memory_len, cfg.head_dim), dtype
+                ),
+                jnp.zeros(
+                    (R, batch, cfg.n_kv_heads, memory_len, cfg.head_dim), dtype
+                ),
+            )
+        layers[f"layer{i}"] = c
+    cache["layers"] = layers
+    return cache
+
+
+def prefill(params, tokens, cfg: ArchConfig, memory=None, max_len=None,
+            *, remat=False):
+    """Forward over the prompt; returns (last-token logits, cache)."""
+    B, S = tokens.shape
+    max_len = max_len or cfg.max_seq_len
+    x = shard_batch(params["embed"].astype(COMPUTE_DTYPE)[tokens])
+    if cfg.n_encoder_layers and memory is not None:
+        memory = encode(params, memory, cfg, remat=remat)
+    if memory is not None:
+        memory = memory.astype(COMPUTE_DTYPE)
+    x, caches = _stack_seq(
+        params["blocks"], x, cfg, memory, 0, collect_cache=True, remat=remat
+    )
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x[:, -1:], cfg)[:, 0]
+
+    # assemble fixed-size decode cache from prefill products
+    cache = init_cache(cfg, B, max_len,
+                       memory.shape[1] if memory is not None else 0)
+    cache["pos"] = jnp.asarray(S, jnp.int32)
+    for i, spec in enumerate(cfg.super_block):
+        src = caches[f"layer{i}"]
+        dst = cache["layers"][f"layer{i}"]
+        if "kv" in dst:
+            L = dst["kv"][0].shape[3]
+            k, v = src["kv"]  # (R, B, Hkv, S, hd)
+            take = min(S, L)
+
+            def place(buf, arr):
+                upd = jax.lax.dynamic_update_slice_in_dim(
+                    buf, arr[:, :, :, S - take : S].astype(buf.dtype), 0, axis=3
+                )
+                if spec.window is not None:
+                    # ring alignment: key for absolute pos p sits at p % L
+                    upd = jnp.roll(upd, (S - take) % L, axis=3)
+                return upd
+
+            if cfg.kv_cache_int8:
+                kq, ks = ATT.quantize_kv(k)
+                vq, vs = ATT.quantize_kv(v)
+                dst["kv"] = (
+                    place(dst["kv"][0], kq), place(dst["kv"][1], ks),
+                    place(dst["kv"][2], vq), place(dst["kv"][3], vs),
+                )
+            else:
+                dst["kv"] = (place(dst["kv"][0], k), place(dst["kv"][1], v))
+        if "latent" in dst:
+            dst["latent"] = jax.lax.dynamic_update_slice_in_dim(
+                dst["latent"], src["latent"], 0, axis=2
+            )
+        if "ssm" in dst:
+            conv, ssd = src["ssm"]
+            dst["ssm"] = (conv.astype(dst["ssm"][0].dtype), ssd)
+        if "memory_kv" in dst and "memory_kv" in src:
+            dst["memory_kv"] = src["memory_kv"]
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ArchConfig):
+    """One serve step: tokens (B, 1) + cache -> (logits (B, V), cache')."""
+    pos = cache["pos"]
+    x = shard_batch(params["embed"].astype(COMPUTE_DTYPE)[tokens])
+
+    def body(carry, xs):
+        h = carry
+        bp, lc = xs
+        new_lc = {}
+        for i, spec in enumerate(cfg.super_block):
+            lp = bp[f"layer{i}"]
+            c = lc[f"layer{i}"]
+            nc = {}
+            if spec.mixer == "attn":
+                hh = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+                if cfg.mla:
+                    o, latent = ATT.mla_decode(lp["attn"], hh, c["latent"], pos, cfg)
+                    nc["latent"] = latent
+                else:
+                    o, kv = ATT.attention_decode(
+                        lp["attn"], hh, c["kv"], pos, cfg, window=spec.window
+                    )
+                    nc["kv"] = kv
+                h = h + o
+            elif spec.mixer == "cross":
+                hh = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+                h = h + ATT.cross_attention(lp["attn"], hh, c["memory_kv"], cfg)
+                nc["memory_kv"] = c["memory_kv"]
+            elif spec.mixer == "mamba":
+                hh = rmsnorm(h, lp["norm1"], cfg.norm_eps)
+                o, st = SSM.mamba_decode(lp["mamba"], hh, c["ssm"], cfg)
+                nc["ssm"] = st
+                h = h + o
+            if getattr(spec, "cross_memory", False):
+                hh = rmsnorm(h, lp["norm_x"], cfg.norm_eps)
+                h = h + ATT.cross_attention(lp["xattn"], hh, c["memory_kv"], cfg)
+                nc["memory_kv"] = c["memory_kv"]
+            if spec.mlp == "dense":
+                h = h + mlp(lp["mlp"], rmsnorm(h, lp["norm2"], cfg.norm_eps))
+            elif spec.mlp == "moe":
+                h = h + moe(lp["moe"], rmsnorm(h, lp["norm2"], cfg.norm_eps),
+                            cfg.moe.top_k)
+            new_lc[f"layer{i}"] = nc
+        return h, new_lc
+
+    x, new_layers = jax.lax.scan(body, x, (params["blocks"], cache["layers"]))
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = lm_head(params, x, cfg)[:, 0]
+    return logits, {"pos": pos + 1, "layers": new_layers}

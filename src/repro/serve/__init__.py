@@ -1,0 +1,4 @@
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.admission import AdmissionPolicy
+
+__all__ = ["Request", "ServeEngine", "AdmissionPolicy"]

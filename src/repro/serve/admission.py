@@ -1,0 +1,105 @@
+"""Request admission/routing rules as Froid-compiled UDFs.
+
+This is the paper's technique running inside the serving scheduler: each
+scheduler tick evaluates imperative per-request business rules (token
+budgeting, tier routing, temperature selection) over the *whole queued
+request table* as one set-oriented plan, instead of a Python loop over
+requests.  The rules are authored imperatively (UdfBuilder) and compiled
+by the same binder/optimizer as any other UDF.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Database,
+    UdfBuilder,
+    case,
+    col,
+    lit,
+    param,
+    scan,
+    udf,
+    var,
+)
+
+
+def default_rules(db: Database) -> None:
+    """The built-in admission rules (users register their own the same way).
+
+    token_budget(tier, prompt_len, requested) -> granted max_new_tokens
+    temp_for(tier, requested_temp)            -> effective temperature
+    admit(prompt_len, queue_depth)            -> bool
+    """
+    u = UdfBuilder("token_budget",
+                   [("tier", "int32"), ("plen", "int32"), ("req", "int32")],
+                   "int32")
+    u.declare("cap", "int32")
+    with u.if_(param("tier") >= 2):
+        u.set("cap", lit(4096))
+    with u.else_():
+        with u.if_(param("tier") == 1):
+            u.set("cap", lit(1024))
+        with u.else_():
+            u.set("cap", lit(256))
+    # long prompts eat into the budget
+    with u.if_(param("plen") > 2048):
+        u.set("cap", var("cap") // 2)
+    with u.if_(param("req") < var("cap")):
+        u.return_(param("req"))
+    u.return_(var("cap"))
+    db.create_function(u.build())
+
+    u = UdfBuilder("temp_for", [("tier", "int32"), ("t", "float32")], "float32")
+    with u.if_((param("t") < 0.0) | (param("t") > 2.0)):
+        u.return_(lit(0.7))  # out-of-range -> default
+    with u.if_(param("tier") == 0):
+        # free tier is clamped
+        u.return_(case([(param("t") > 1.0, lit(1.0))], param("t")))
+    u.return_(param("t"))
+    db.create_function(u.build())
+
+    u = UdfBuilder("admit", [("plen", "int32"), ("depth", "int32")], "bool")
+    with u.if_(param("plen") > 32768):
+        u.return_(lit(False))
+    with u.if_((param("depth") > 512) & (param("plen") > 8192)):
+        u.return_(lit(False))  # shed long prompts under pressure
+    u.return_(lit(True))
+    db.create_function(u.build())
+
+
+class AdmissionPolicy:
+    """Evaluates the rules over the queued-request table, set-oriented."""
+
+    def __init__(self, froid: bool = True):
+        self.db = Database()
+        default_rules(self.db)
+        self.froid = froid
+
+    def evaluate(self, requests: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """requests: columns tier, prompt_len, max_new_tokens, temperature.
+        Returns columns: admit (bool), granted (int32), temp (float32)."""
+        n = len(requests["tier"])
+        self.db.create_table(
+            "queue",
+            tier=requests["tier"].astype(np.int32),
+            plen=requests["prompt_len"].astype(np.int32),
+            req=requests["max_new_tokens"].astype(np.int32),
+            temp=requests["temperature"].astype(np.float32),
+            depth=np.full(n, n, np.int32),
+        )
+        q = (
+            scan("queue")
+            .compute(
+                admit=udf("admit", col("plen"), col("depth")),
+                granted=udf("token_budget", col("tier"), col("plen"), col("req")),
+                temp_eff=udf("temp_for", col("tier"), col("temp")),
+            )
+            .project("admit", "granted", "temp_eff")
+        )
+        res = self.db.run(q, froid=self.froid)
+        return {
+            "admit": np.asarray(res.table.columns["admit"].data).astype(bool),
+            "granted": np.asarray(res.table.columns["granted"].data).astype(np.int32),
+            "temp": np.asarray(res.table.columns["temp_eff"].data).astype(np.float32),
+        }

@@ -1,0 +1,130 @@
+"""Batched serving engine: fixed-slot continuous batching over the model's
+prefill/decode steps, with Froid-compiled admission (admission.py) and
+greedy/temperature sampling.
+
+Slots hold (cache row, remaining budget); finished slots are refilled from
+the admitted queue each tick.  Single-process reference implementation —
+the decode step itself is the pjit'd ``serve_step`` the dry-run lowers for
+the production mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.admission import AdmissionPolicy
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    tier: int = 1
+
+
+@dataclasses.dataclass
+class Completed:
+    rid: int
+    tokens: list
+    reason: str  # length | eos | rejected
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
+                 eos_id: int | None = None, froid_admission: bool = True,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.admission = AdmissionPolicy(froid=froid_admission)
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(model.decode_step)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: list[Request]) -> list[Completed]:
+        """Serve a request list to completion (batched, slot-filled)."""
+        verdict = self.admission.evaluate(
+            {
+                "tier": np.array([r.tier for r in requests]),
+                "prompt_len": np.array([len(r.prompt) for r in requests]),
+                "max_new_tokens": np.array([r.max_new_tokens for r in requests]),
+                "temperature": np.array([r.temperature for r in requests]),
+            }
+        )
+        queue = []
+        done: list[Completed] = []
+        for i, r in enumerate(requests):
+            if not verdict["admit"][i]:
+                done.append(Completed(r.rid, [], "rejected"))
+            else:
+                queue.append((r, int(verdict["granted"][i]),
+                              float(verdict["temp"][i])))
+
+        while queue:
+            batch = queue[: self.slots]
+            queue = queue[self.slots :]
+            done.extend(self._serve_batch(batch))
+        return done
+
+    # ------------------------------------------------------------------
+    def _serve_batch(self, batch) -> list[Completed]:
+        B = len(batch)
+        S = max(len(r.prompt) for r, _, _ in batch)
+        toks = np.zeros((B, S), np.int32)
+        for i, (r, _, _) in enumerate(batch):
+            toks[i, S - len(r.prompt) :] = r.prompt  # left-pad
+        budgets = np.array([b for _, b, _ in batch])
+        temps = np.array([t for _, _, t in batch], np.float32)
+
+        logits, cache = self.model.prefill(
+            self.params, jnp.asarray(toks), max_len=self.max_len
+        )
+        outs: list[list[int]] = [[] for _ in range(B)]
+        finished = np.zeros(B, bool)
+        next_tok = self._sample(logits, temps)
+        for i in range(B):
+            outs[i].append(int(next_tok[i]))
+
+        max_budget = int(budgets.max(initial=0))
+        for step in range(1, max_budget):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(next_tok)[:, None]
+            )
+            next_tok = self._sample(logits, temps)
+            for i in range(B):
+                if finished[i]:
+                    continue
+                if step >= budgets[i]:
+                    finished[i] = True
+                    continue
+                t = int(next_tok[i])
+                outs[i].append(t)
+                if self.eos_id is not None and t == self.eos_id:
+                    finished[i] = True
+            if finished.all():
+                break
+
+        out = []
+        for i, (r, b, _) in enumerate(batch):
+            reason = (
+                "eos"
+                if self.eos_id is not None and outs[i] and outs[i][-1] == self.eos_id
+                else "length"
+            )
+            out.append(Completed(r.rid, outs[i][:b], reason))
+        return out
+
+    def _sample(self, logits, temps):
+        self.key, sub = jax.random.split(self.key)
+        greedy = jnp.argmax(logits, axis=-1)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        sampled = jax.random.categorical(sub, scaled)
+        pick = jnp.where(jnp.asarray(temps) > 0, sampled, greedy)
+        return np.asarray(pick.astype(jnp.int32))

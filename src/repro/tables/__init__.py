@@ -1,0 +1,3 @@
+from repro.tables.table import Column, Table, DictEncoding, days_from_civil, civil_from_days
+
+__all__ = ["Column", "Table", "DictEncoding", "days_from_civil", "civil_from_days"]

@@ -1,0 +1,7 @@
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update, lr_schedule
+from repro.train.train_loop import TrainState, make_train_step, train_loop
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "lr_schedule",
+    "TrainState", "make_train_step", "train_loop",
+]

@@ -1,0 +1,66 @@
+"""Elastic scaling: re-mesh and re-shard after node count changes.
+
+On failure/scale events the job restarts from the newest checkpoint with a
+different device count.  Policy: the ``model`` axis is fixed by the
+architecture's TP layout, so elasticity happens on the ``data``(+``pod``)
+axes — the new data-parallel degree is ``devices // model_axis``.  State
+re-sharding is value-level: checkpoints store unsharded global leaves, so
+restoring onto the new mesh is just ``device_put`` with the new
+NamedShardings (same PartitionSpec rules, new mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from repro.dist.sharding import param_specs, shardings_for
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+    def build(self, devices=None) -> Mesh:
+        import numpy as np
+
+        devices = devices if devices is not None else jax.devices()
+        n = 1
+        for s in self.shape:
+            n *= s
+        arr = np.array(devices[:n]).reshape(self.shape)
+        return Mesh(arr, self.axes)
+
+
+def plan_remesh(n_devices: int, model_axis: int, pods: int = 1) -> MeshPlan:
+    """Largest usable mesh for ``n_devices`` keeping the TP degree.
+
+    Drops stragglers that don't fill a full data row; raises if fewer than
+    one model group survives."""
+    per_pod = n_devices // pods
+    data = per_pod // model_axis
+    if data < 1:
+        raise ValueError(
+            f"{n_devices} devices cannot host model_axis={model_axis}"
+        )
+    if pods > 1:
+        return MeshPlan((pods, data, model_axis), ("pod", "data", "model"))
+    return MeshPlan((data, model_axis), ("data", "model"))
+
+
+def usable_devices(n_devices: int, model_axis: int, pods: int = 1) -> int:
+    plan = plan_remesh(n_devices, model_axis, pods)
+    n = 1
+    for s in plan.shape:
+        n *= s
+    return n
+
+
+def reshard_state(state_tree, mesh: Mesh, cfg):
+    """device_put a (restored, host-global) state pytree onto ``mesh``
+    with the standard sharding rules — the elastic-restart hot path."""
+    specs = param_specs(state_tree, mesh, cfg)
+    shardings = shardings_for(specs, mesh)
+    return jax.tree.map(jax.device_put, state_tree, shardings)

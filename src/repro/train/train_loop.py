@@ -1,0 +1,132 @@
+"""Training step + loop: pjit'd step (donated state), microbatch gradient
+accumulation (lax.scan), optional cross-pod int8-EF gradient compression,
+straggler tracking, and fault-tolerant checkpoint/resume.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.compress import compress_tree, decompress_tree, init_error_tree
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    ef_error: Any = None  # error-feedback buffers (compression on)
+
+
+def make_train_step(
+    model,
+    opt_cfg: AdamWConfig,
+    microbatches: int = 1,
+    compress: bool = False,
+    remat: bool = True,
+):
+    """Returns step(state, batch) -> (state, metrics).
+
+    ``microbatches`` > 1 splits the per-step batch on the leading axis and
+    accumulates grads in a lax.scan (activation memory / HBM trade-off).
+    ``compress`` applies int8 error-feedback quantization to the grads
+    before the optimizer (the wire format of the cross-pod reduction)."""
+
+    def loss_fn(params, batch):
+        # mixed precision: cast the f32 master weights to bf16 ONCE per
+        # step (sharded, elementwise) so every FSDP weight all-gather moves
+        # bf16 — halves both the collective bytes and the gathered-weight
+        # temp memory.  Grads flow back in f32 through the cast's VJP.
+        compute_params = jax.tree.map(
+            lambda p: p.astype(jnp.bfloat16)
+            if (p.dtype == jnp.float32 and p.ndim >= 2)
+            else p,
+            params,
+        )
+        return model.loss_fn(compute_params, batch, remat=remat)
+
+    def grads_of(params, batch):
+        if microbatches == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def split(x):
+            return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+        mb = jax.tree.map(split, batch)
+
+        def body(carry, one):
+            acc_loss, acc_g = carry
+            l, g = jax.value_and_grad(loss_fn)(params, one)
+            return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), 0
+
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        (loss, grads), _ = jax.lax.scan(body, (0.0, zero_g), mb)
+        inv = 1.0 / microbatches
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(state: TrainState, batch):
+        loss, grads = grads_of(state.params, batch)
+        ef = state.ef_error
+        if compress:
+            payload, ef = compress_tree(grads, ef)
+            grads = decompress_tree(payload)
+        params, opt, metrics = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics["loss"] = loss
+        return TrainState(params, opt, ef), metrics
+
+    return step
+
+
+def init_state(model, key, opt_cfg: AdamWConfig, compress: bool = False):
+    params = model.init(key)
+    opt = adamw_init(params, opt_cfg)
+    ef = init_error_tree(params) if compress else None
+    return TrainState(params, opt, ef)
+
+
+def train_loop(
+    model,
+    state: TrainState,
+    batches,
+    opt_cfg: AdamWConfig,
+    *,
+    steps: int,
+    checkpoint_mgr=None,
+    checkpoint_every: int = 50,
+    straggler=None,
+    log_every: int = 10,
+    microbatches: int = 1,
+    compress: bool = False,
+    jit: bool = True,
+    log: Callable[[str], None] = print,
+):
+    """Drives ``steps`` optimizer steps; checkpoints / resumes; tracks
+    per-step wall time for straggler mitigation."""
+    step_fn = make_train_step(model, opt_cfg, microbatches, compress)
+    if jit:
+        step_fn = jax.jit(step_fn, donate_argnums=0)
+
+    start = int(state.opt["step"])
+    it = iter(batches)
+    for i in range(start, steps):
+        batch = next(it)
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        if straggler is not None:
+            straggler.record(host=0, step=i, seconds=dt)
+        if log_every and (i + 1) % log_every == 0:
+            log(
+                f"step {i+1}: loss={float(metrics['loss']):.4f} "
+                f"gnorm={float(metrics['grad_norm']):.3f} "
+                f"lr={float(metrics['lr']):.2e} {dt*1e3:.0f}ms"
+            )
+        if checkpoint_mgr is not None and (i + 1) % checkpoint_every == 0:
+            checkpoint_mgr.save(i + 1, {"params": state.params, "opt": state.opt})
+    return state

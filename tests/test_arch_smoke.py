@@ -1,0 +1,152 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train(loss/grad-lite) + one decode step on CPU; asserts shapes + finite.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, smoke_config_for
+from repro.models import build_model
+from repro.models.layers import COMPUTE_DTYPE
+
+
+def _batch_for(cfg, B=2, S=32):
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32),
+    }
+    if cfg.vision_tokens:
+        batch["memory"] = jnp.asarray(
+            rng.normal(size=(B, cfg.vision_tokens, cfg.d_model)) * 0.02,
+            COMPUTE_DTYPE,
+        )
+    elif cfg.n_encoder_layers:
+        batch["memory"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)) * 0.02, COMPUTE_DTYPE
+        )
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_loss_decode(arch):
+    cfg = smoke_config_for(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S)
+
+    # forward: shape + finite
+    x = model.forward(params, batch["tokens"], batch.get("memory"))
+    assert x.shape == (B, S, cfg.d_model)
+    assert bool(jnp.isfinite(x.astype(jnp.float32)).all()), arch
+
+    # loss: finite scalar
+    loss = model.loss_fn(params, batch, remat=False)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), (arch, loss)
+
+    # prefill + one decode step
+    logits, cache = model.prefill(
+        params, batch["tokens"], batch.get("memory"), max_len=S + 8
+    )
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all()), arch
+    nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = model.decode_step(params, cache, nxt)
+    assert logits2.shape == (B, cfg.vocab)
+    assert bool(jnp.isfinite(logits2).all()), arch
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+@pytest.mark.parametrize("arch", ["granite3_2b", "mamba2_370m"])
+def test_arch_grad_step(arch):
+    """Full grad through the reduced model (one SGD step, loss finite)."""
+    cfg = smoke_config_for(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, batch))(params)
+    assert bool(jnp.isfinite(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat)
+    new_params = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2 = model.loss_fn(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+def test_param_counts_match_published_sizes():
+    """Analytic parameter counts are in range of the published sizes."""
+    from repro.configs import config_for
+
+    expect = {
+        "mamba2_370m": (0.25e9, 0.55e9),
+        "llama32_vision_90b": (75e9, 105e9),
+        "jamba15_large_398b": (330e9, 430e9),
+        "granite3_2b": (1.6e9, 3.3e9),
+        "minicpm3_4b": (2.8e9, 5.2e9),
+        "phi3_mini_38b": (3.0e9, 4.6e9),
+        "gemma3_12b": (9e9, 15e9),
+        "mixtral_8x7b": (40e9, 52e9),
+        "granite_moe_3b_a800m": (2.0e9, 4.2e9),
+        "seamless_m4t_large_v2": (0.9e9, 2.8e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = config_for(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_decode_matches_prefill_continuation():
+    """Teacher-forced decode equals forward() logits (cache correctness)."""
+    cfg = smoke_config_for("granite3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    rng = np.random.default_rng(3)
+    B, S = 2, 24
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+
+    x = model.forward(params, toks)
+    full_logits = model.lm_head(params, x)  # (B, S, V)
+
+    logits_p, cache = model.prefill(params, toks[:, :16], max_len=S)
+    np.testing.assert_allclose(
+        np.asarray(logits_p), np.asarray(full_logits[:, 15]), atol=2e-2, rtol=2e-2
+    )
+    logits_d, cache = model.decode_step(params, cache, toks[:, 16:17])
+    np.testing.assert_allclose(
+        np.asarray(logits_d), np.asarray(full_logits[:, 16]), atol=2e-2, rtol=2e-2
+    )
+    logits_d2, _ = model.decode_step(params, cache, toks[:, 17:18])
+    np.testing.assert_allclose(
+        np.asarray(logits_d2), np.asarray(full_logits[:, 17]), atol=2e-2, rtol=2e-2
+    )
+
+
+def test_int8_kv_cache_decode_close_to_bf16():
+    """§Perf hillclimb 2: int8 KV decode matches bf16 decode closely."""
+    import dataclasses
+
+    import jax
+
+    cfg = smoke_config_for("gemma3_12b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+
+    logits_a, cache_a = model.prefill(params, toks, max_len=24)
+    cfg8 = dataclasses.replace(cfg, kv_cache_int8=True)
+    model8 = build_model(cfg8)
+    logits_b, cache_b = model8.prefill(params, toks, max_len=24)
+
+    a = np.asarray(logits_a, np.float32)
+    b = np.asarray(logits_b, np.float32)
+    assert np.max(np.abs(a - b)) < 0.05 * (np.abs(a).max() + 1e-3)
+
+    nxt = jnp.argmax(logits_a, -1)[:, None].astype(jnp.int32)
+    da, _ = model.decode_step(params, cache_a, nxt)
+    db, _ = model8.decode_step(params, cache_b, nxt)
+    assert np.max(np.abs(np.asarray(da) - np.asarray(db))) < 0.05 * (
+        np.abs(np.asarray(da)).max() + 1e-3
+    )

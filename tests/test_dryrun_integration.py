@@ -1,0 +1,53 @@
+"""Multi-pod dry-run integration: one real cell through lower+compile in a
+subprocess (the 512-device XLA flag must not leak into this process), plus
+artifact-shape checks on the committed sweep results."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.mark.slow
+def test_dryrun_cell_subprocess(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "mamba2_370m",
+         "--shape", "decode_32k", "--mesh", "single", "--out", str(tmp_path)],
+        capture_output=True, text=True, timeout=900, env=env, cwd=ROOT,
+    )
+    assert proc.returncode == 0, proc.stdout[-2000:] + proc.stderr[-2000:]
+    (path,) = glob.glob(str(tmp_path / "*.json"))
+    rec = json.load(open(path))
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["flops"] > 0
+    assert rec["memory"]["per_device_total"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+def test_sweep_artifacts_complete():
+    """The committed 80-cell sweep: every (arch × shape × mesh) present,
+    nothing failed, skips are exactly the documented long_500k cells."""
+    d = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("sweep artifacts not present")
+    recs = [json.load(open(p)) for p in glob.glob(os.path.join(d, "*.json"))
+            if not p.endswith("int8kv.json")]
+    assert len(recs) >= 80
+    by_status = {}
+    for r in recs:
+        by_status.setdefault(r["status"], []).append(r)
+    assert "fail" not in by_status, [
+        (r["arch"], r["shape"], r.get("error")) for r in by_status["fail"]
+    ]
+    skips = {(r["arch"], r["shape"]) for r in by_status.get("skip", [])}
+    assert all(s == "long_500k" for _, s in skips)
+    full_attn = {"llama32_vision_90b", "granite3_2b", "minicpm3_4b",
+                 "phi3_mini_38b", "granite_moe_3b_a800m",
+                 "seamless_m4t_large_v2"}
+    assert {a for a, _ in skips} == full_attn

@@ -1,0 +1,295 @@
+"""End-to-end behaviour tests for the Froid core (the paper's system).
+
+Each test checks that the froid (algebrized + optimized + set-oriented)
+result equals the iterative interpreter result, and where the paper makes a
+structural claim (inferred joins, dead-code elimination, constant folding /
+dynamic slicing) asserts on the plan shape too.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Database,
+    InlineConstraints,
+    UdfBuilder,
+    case,
+    col,
+    count_,
+    exists,
+    lit,
+    param,
+    scalar_subquery,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.core import optimizer as O
+from repro.core import relalg as R
+from repro.core import scalar as S
+
+
+def _mkdb(rng, n_cust=50, n_ord=300):
+    db = Database()
+    db.create_table("customer", c_custkey=np.arange(n_cust))
+    db.create_table(
+        "orders",
+        o_custkey=rng.integers(0, n_cust, n_ord),
+        o_totalprice=rng.uniform(10, 1000, n_ord).astype(np.float32),
+        o_qty=rng.integers(1, 50, n_ord),
+    )
+    db.create_table(
+        "customer_prefs",
+        custkey=np.arange(n_cust),
+        currency=np.array(["USD" if i % 3 else "EUR" for i in range(n_cust)]),
+    )
+    db.create_table(
+        "xchg",
+        from_cur=np.array(["USD"]),
+        to_cur=np.array(["EUR"]),
+        rate=np.array([0.9], dtype=np.float32),
+    )
+    return db
+
+
+def _totals(db):
+    u = UdfBuilder("total_price", [("key", "int32")], "float32")
+    u.declare("price", "float32")
+    u.declare("pref_currency", "str")
+    u.declare("default_currency", "str", lit("USD"))
+    u.select({"price": sum_(col("o_totalprice"))}, frm=scan("orders"),
+             where=col("o_custkey") == param("key"))
+    u.select({"pref_currency": col("currency")}, frm=scan("customer_prefs"),
+             where=col("custkey") == param("key"))
+    with u.if_(var("pref_currency") != var("default_currency")):
+        u.set("price", var("price") * 0.9)
+    u.return_(var("price"))
+    return db.create_function(u.build())
+
+
+def _compare(db, q, rtol=1e-4, modes=("python", "scan")):
+    r_on = db.run(q, froid=True)
+    outs = {}
+    for m in modes:
+        r_off = db.run(q, froid=False, mode=m)
+        for name in r_on.table.names():
+            a, av = (
+                np.asarray(r_on.table.columns[name].data),
+                np.asarray(r_on.table.columns[name].validity()),
+            )
+            b, bv = (
+                np.asarray(r_off.table.columns[name].data),
+                np.asarray(r_off.table.columns[name].validity()),
+            )
+            assert (av == bv).all(), f"{m}:{name}: validity mismatch"
+            both = av & bv
+            np.testing.assert_allclose(
+                a[both].astype(np.float64),
+                b[both].astype(np.float64),
+                rtol=rtol,
+                err_msg=f"{m}:{name}",
+            )
+        outs[m] = r_off
+    return r_on, outs
+
+
+# ---------------------------------------------------------------------------
+
+
+def test_paper_figure1_total_price(rng):
+    db = _mkdb(rng)
+    _totals(db)
+    q = scan("customer").compute(total=udf("total_price", col("c_custkey")))
+    r_on, _ = _compare(db, q)
+    # structural claim (Figure 5): plan contains inferred Join + GroupAgg,
+    # and no Apply / correlated subquery remains
+    kinds = {type(n).__name__ for n in R.walk_plan(r_on.plan)}
+    assert "Join" in kinds and "GroupAgg" in kinds
+    assert "Apply" not in kinds
+
+
+def test_nested_udf_inlined(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("xchg_rate", [("frm", "str"), ("to", "str")], "float32")
+    u.return_(
+        scalar_subquery(
+            scan("xchg")
+            .filter((col("from_cur") == param("frm")) & (col("to_cur") == param("to")))
+            .compute(r=col("rate"))
+            .project("r"),
+            "r",
+        )
+    )
+    db.create_function(u.build())
+    u = UdfBuilder("conv", [("amount", "float32"), ("cur", "str")], "float32")
+    with u.if_(var("cur") != lit("USD")):
+        u.return_(var("amount") * udf("xchg_rate", lit("USD"), var("cur")))
+    u.return_(var("amount"))
+    db.create_function(u.build())
+
+    q = scan("customer_prefs").compute(
+        v=udf("conv", col("custkey") * 1.5, col("currency"))
+    )
+    _compare(db, q)
+
+
+def test_multiple_returns_first_wins(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("bracket", [("x", "float32")], "float32")
+    with u.if_(param("x") > 100):
+        u.return_(lit(100.0))
+    with u.if_(param("x") > 10):
+        u.return_(param("x") * 2.0)
+    u.return_(param("x"))
+    db.create_function(u.build())
+    q = scan("orders").compute(b=udf("bracket", col("o_totalprice")))
+    _compare(db, q)
+
+
+def test_unconditional_return_drops_dead_tail(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("f", [("x", "float32")], "float32")
+    u.return_(param("x") + 1.0)
+    u.set("never", lit(123.0))  # unreachable
+    udf_def = db.create_function(u.build())
+    # region construction must drop the unreachable statement
+    regions = udf_def.regions()
+    assert len(regions) == 1
+    assert len(regions[0].statements) == 1
+
+
+def test_dead_code_eliminated_from_plan(rng):
+    """The paper's §6.3 example: an assignment from a subquery that is never
+    used must not appear in the final plan (projection pushdown)."""
+    db = _mkdb(rng)
+    u = UdfBuilder("total2", [("key", "int32")], "float32")
+    u.declare("t", "float32")
+    u.select({"t": count_()}, frm=scan("orders"),
+             where=col("o_custkey") == param("key"))  # dead
+    u.return_(param("key") * 2.0)
+    db.create_function(u.build())
+    q = scan("customer").compute(v=udf("total2", col("c_custkey")))
+    r_on, _ = _compare(db, q)
+    # the orders subquery must be gone
+    scans = [n.table for n in R.walk_plan(r_on.plan) if isinstance(n, R.Scan)]
+    assert "orders" not in scans, O.explain(r_on.plan)
+
+
+def test_constant_folding_dynamic_slicing(rng):
+    """Figure 6: getVal(5000) folds to a constant at plan time."""
+    db = _mkdb(rng)
+    u = UdfBuilder("getVal", [("x", "int32")], "float32")
+    u.declare("val", "float32")
+    with u.if_(param("x") > 1000):
+        u.set("val", lit(10.0))
+    with u.else_():
+        u.set("val", lit(1.0))
+    u.return_(var("val") + 5.0)
+    db.create_function(u.build())
+    q = scan("customer").compute(v=udf("getVal", lit(5000)))
+    plan = db.plan_for(q)
+    # after folding, the computed column must be the constant 15.0
+    comp = [n for n in R.walk_plan(plan) if isinstance(n, R.Compute)]
+    assert comp, O.explain(plan)
+    exprs = [e for c in comp for e in c.computed.values()]
+    consts = [e.value for e in exprs if isinstance(e, S.Const)]
+    assert any(abs(v - 15.0) < 1e-6 for v in consts if v is not None), O.explain(plan)
+    _compare(db, q)
+
+
+def test_exists_predicate(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("has_orders", [("key", "int32")], "bool")
+    with u.if_(exists(scan("orders").filter(col("o_custkey") == param("key")))):
+        u.return_(lit(True))
+    u.return_(lit(False))
+    db.create_function(u.build())
+    q = scan("customer").compute(h=udf("has_orders", col("c_custkey")))
+    _compare(db, q)
+
+
+def test_nondeterministic_udf_not_inlined(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("noisy", [("x", "float32")], "float32")
+    u.return_(param("x") + S.Func("rand", [lit(1)]))
+    db.create_function(u.build())
+    from repro.core.binder import Binder
+
+    binder = Binder(db.registry)
+    assert binder.algebrized("noisy") is None
+
+
+def test_size_constraint_leaves_udf_iterative(rng):
+    db = _mkdb(np.random.default_rng(7))
+    db.constraints = InlineConstraints(max_plan_size=5)  # absurdly small
+    _totals(db)
+    q = scan("customer").compute(total=udf("total_price", col("c_custkey")))
+    plan = db.plan_for(q)
+    calls = [
+        e
+        for n in R.walk_plan(plan)
+        if isinstance(n, R.Compute)
+        for ex in n.computed.values()
+        for e in S.walk(ex)
+        if isinstance(e, S.UdfCall)
+    ]
+    assert calls, "UDF call should remain when the size budget is exhausted"
+    # hybrid execution still gives correct results via the interpreter hook
+    r = db.run(q, froid=True)
+    db2 = _mkdb(np.random.default_rng(7))
+    _totals(db2)
+    r2 = db2.run(q, froid=True)
+    a = np.asarray(r.table.columns["total"].data)
+    b = np.asarray(r2.table.columns["total"].data)
+    va = np.asarray(r.table.columns["total"].validity())
+    vb = np.asarray(r2.table.columns["total"].validity())
+    assert (va == vb).all()
+    np.testing.assert_allclose(a[va], b[vb], rtol=1e-4)
+
+
+def test_recursive_udf_handled(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("countdown", [("x", "float32")], "float32")
+    with u.if_(param("x") <= 0):
+        u.return_(lit(0.0))
+    u.return_(udf("countdown", param("x") - 1.0) + 1.0)
+    db.create_function(u.build())
+    q = scan("customer").filter(col("c_custkey") < 5).compute(
+        d=udf("countdown", col("c_custkey") * 1.0)
+    )
+    r = db.run(q, froid=True)  # inlines up to depth, interpreter finishes
+    d = np.asarray(r.table.columns["d"].data)
+    np.testing.assert_allclose(d, np.arange(5, dtype=np.float32))
+
+
+def test_udf_in_where_clause(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("is_big", [("p", "float32")], "bool")
+    with u.if_(param("p") > 500.0):
+        u.return_(lit(True))
+    u.return_(lit(False))
+    db.create_function(u.build())
+    q = scan("orders").filter(udf("is_big", col("o_totalprice")) == lit(True))
+    r_on = db.run(q, froid=True)
+    r_off = db.run(q, froid=False, mode="python")
+    assert r_on.table.num_rows == r_off.table.num_rows
+    tp = np.asarray(db.catalog["orders"].columns["o_totalprice"].data)
+    assert r_on.table.num_rows == int((tp > 500.0).sum())
+
+
+def test_udf_inside_aggregate(rng):
+    db = _mkdb(rng)
+    u = UdfBuilder("disc", [("p", "float32"), ("d", "float32")], "float32")
+    u.return_(param("p") * (1.0 - param("d")))
+    db.create_function(u.build())
+    q = scan("orders").group_by(
+        "o_custkey", rev=sum_(udf("disc", col("o_totalprice"), lit(0.1)))
+    )
+    r_on = db.run(q, froid=True)
+    tp = np.asarray(db.catalog["orders"].columns["o_totalprice"].data)
+    ck = np.asarray(db.catalog["orders"].columns["o_custkey"].data)
+    exp = {k: tp[ck == k].sum() * 0.9 for k in np.unique(ck)}
+    got_k = np.asarray(r_on.table.columns["o_custkey"].data)
+    got_v = np.asarray(r_on.table.columns["rev"].data)
+    for k, v in zip(got_k, got_v):
+        np.testing.assert_allclose(v, exp[k], rtol=1e-4)

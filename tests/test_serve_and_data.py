@@ -1,0 +1,108 @@
+"""Serving engine (with Froid-compiled admission) + data pipeline tests."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config_for
+from repro.data.pipeline import DataPipeline
+from repro.models import build_model
+from repro.serve.admission import AdmissionPolicy
+from repro.serve.engine import Request, ServeEngine
+
+
+def test_admission_policy_froid_matches_interpreter():
+    reqs = {
+        "tier": np.array([0, 1, 2, 0, 2]),
+        "prompt_len": np.array([100, 3000, 9000, 40000, 100]),
+        "max_new_tokens": np.array([50, 2000, 8000, 10, 100]),
+        "temperature": np.array([0.5, 1.5, -1.0, 0.7, 3.0], np.float32),
+    }
+    on = AdmissionPolicy(froid=True).evaluate(reqs)
+    off = AdmissionPolicy(froid=False).evaluate(reqs)
+    np.testing.assert_array_equal(on["admit"], off["admit"])
+    np.testing.assert_array_equal(on["granted"], off["granted"])
+    np.testing.assert_allclose(on["temp"], off["temp"], rtol=1e-6)
+    # semantic spot checks
+    assert not on["admit"][3]  # prompt > 32768 rejected
+    assert on["granted"][0] == 50  # request below cap honored
+    assert on["granted"][1] == 512  # tier-1 cap, halved for >2048 prompt
+    assert on["temp"][4] == pytest.approx(0.7)  # out-of-range -> default
+    assert on["temp"][0] == pytest.approx(0.5)
+
+
+def test_serve_engine_end_to_end():
+    cfg = smoke_config_for("granite3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=2, max_len=64, eos_id=None)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new_tokens=6, temperature=0.0, tier=1)
+        for i in range(5)
+    ]
+    done = eng.run(reqs)
+    assert len(done) == 5
+    for c in done:
+        assert c.reason in ("length", "eos")
+        assert len(c.tokens) == 6
+        assert all(0 <= t < cfg.vocab for t in c.tokens)
+
+
+def test_serve_greedy_deterministic():
+    cfg = smoke_config_for("granite3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    prompt = rng.integers(0, cfg.vocab, 8).astype(np.int32)
+    outs = []
+    for _ in range(2):
+        eng = ServeEngine(model, params, slots=1, max_len=32)
+        done = eng.run([Request(rid=0, prompt=prompt, max_new_tokens=5)])
+        outs.append(done[0].tokens)
+    assert outs[0] == outs[1]
+
+
+def test_serve_rejects_oversized():
+    cfg = smoke_config_for("granite3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params, slots=1, max_len=32)
+    big = Request(rid=9, prompt=np.zeros(8, np.int32), max_new_tokens=4)
+    big_prompt = Request(rid=10, prompt=np.zeros(8, np.int32), max_new_tokens=4)
+    # monkey the admission input by tier/prompt: oversized prompt_len comes
+    # from the request itself
+    r = Request(rid=11, prompt=np.zeros(8, np.int32), max_new_tokens=4)
+    reqs = [big, big_prompt, r]
+    done = eng.run(reqs)
+    assert all(c.reason in ("length", "eos", "rejected") for c in done)
+
+
+def test_data_pipeline_deterministic_and_froid_consistent():
+    cfg = smoke_config_for("granite3_2b")
+    p1 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3, froid=True)
+    p2 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3, froid=True)
+    b1, b2 = p1.batch_at(5), p2.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["mask"]), np.asarray(b2["mask"]))
+    # froid ON == interpreter OFF for the compiled transforms
+    p3 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3, froid=False)
+    b3 = p3.batch_at(5)
+    np.testing.assert_array_equal(np.asarray(b1["mask"]), np.asarray(b3["mask"]))
+    np.testing.assert_allclose(
+        np.asarray(b1["weight"]), np.asarray(b3["weight"]), rtol=1e-6
+    )
+
+
+def test_data_pipeline_host_sharding():
+    cfg = smoke_config_for("granite3_2b")
+    full = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3,
+                        host=0, num_hosts=1)
+    h0 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3,
+                      host=0, num_hosts=2)
+    h1 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3,
+                      host=1, num_hosts=2)
+    b0, b1 = h0.batch_at(0), h1.batch_at(0)
+    assert b0["tokens"].shape[0] == 4 and b1["tokens"].shape[0] == 4
+    # different hosts get different data
+    assert not np.array_equal(np.asarray(b0["tokens"]), np.asarray(b1["tokens"]))

@@ -1,0 +1,234 @@
+"""Training runtime: loop convergence, checkpoint fault tolerance,
+microbatch equivalence, gradient compression, straggler policy, elastic
+re-mesh planning, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config_for
+from repro.data.pipeline import DataPipeline
+from repro.models import build_model
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optim import AdamWConfig
+from repro.train.train_loop import TrainState, init_state, make_train_step, train_loop
+
+
+def _model_and_state(arch="granite3_2b", seed=0, compress=False):
+    cfg = smoke_config_for(arch)
+    model = build_model(cfg)
+    opt_cfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    state = init_state(model, jax.random.PRNGKey(seed), opt_cfg, compress)
+    return model, opt_cfg, state, cfg
+
+
+def _pipeline(cfg, batch=4, seq=32):
+    return DataPipeline(batch=batch, seq_len=seq, vocab=cfg.vocab, seed=1)
+
+
+def test_train_loop_loss_decreases(tmp_path):
+    model, opt_cfg, state, cfg = _model_and_state()
+    pipe = _pipeline(cfg)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    losses = []
+    it = iter(pipe)
+    for _ in range(8):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    model, opt_cfg, state, cfg = _model_and_state()
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_write=False)
+    pipe = _pipeline(cfg)
+
+    state = train_loop(model, state, iter(pipe), opt_cfg, steps=4,
+                       checkpoint_mgr=mgr, checkpoint_every=2, log_every=0)
+    assert mgr.latest_step() == 4
+    step_, restored = mgr.restore_latest()
+    assert step_ == 4
+
+    # resume: fresh state from checkpoint continues identically
+    _, _, state2, _ = _model_and_state()
+    state2 = TrainState(restored["params"], restored["opt"], None)
+    assert int(state2.opt["step"]) == 4
+    p_old = jax.tree.leaves(state.params)[0]
+    p_new = jax.tree.leaves(state2.params)[0]
+    np.testing.assert_allclose(np.asarray(p_old), np.asarray(p_new))
+
+
+def test_checkpoint_atomicity_and_corruption_skip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=5, async_write=False)
+    tree = {"a": jnp.arange(8.0), "b": {"c": jnp.ones((2, 3))}}
+    mgr.save(1, tree)
+    mgr.save(2, tree)
+    # corrupt checkpoint 2 (truncate a shard)
+    d = os.path.join(str(tmp_path), "step_00000002")
+    shard = [f for f in os.listdir(d) if f.endswith(".npy")][0]
+    with open(os.path.join(d, shard), "wb") as f:
+        f.write(b"corrupt")
+    step, restored = mgr.restore_latest()
+    assert step == 1  # falls back to the newest verifiable checkpoint
+    np.testing.assert_allclose(np.asarray(restored["a"]), np.arange(8.0))
+
+
+def test_checkpoint_keep_n(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep_n=2, async_write=False)
+    tree = {"x": jnp.zeros(4)}
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_microbatch_equivalence():
+    """Grad accumulation over 4 microbatches == single big batch (loss)."""
+    model, opt_cfg, state, cfg = _model_and_state()
+    pipe = _pipeline(cfg, batch=8)
+    batch = next(iter(pipe))
+    s1, m1 = make_train_step(model, opt_cfg, microbatches=1)(state, batch)
+    _, _, state2, _ = _model_and_state()
+    s2, m2 = make_train_step(model, opt_cfg, microbatches=4)(state2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=2e-2)
+    a = jax.tree.leaves(s1.params)[0]
+    b = jax.tree.leaves(s2.params)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-2)
+
+
+def test_compressed_training_converges():
+    model, opt_cfg, state, cfg = _model_and_state(compress=True)
+    pipe = _pipeline(cfg)
+    step = jax.jit(make_train_step(model, opt_cfg, compress=True))
+    it = iter(pipe)
+    losses = []
+    for _ in range(6):
+        state, m = step(state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    # error-feedback buffers are being used (non-zero residuals)
+    ef = jax.tree.leaves(state.ef_error)
+    assert any(float(jnp.abs(e).max()) > 0 for e in ef)
+
+
+def test_quantization_error_bound(rng):
+    from repro.dist.compress import dequantize_int8, ef_quantize, quantize_int8
+
+    x = jnp.asarray(rng.normal(size=(1000,)) * 5, jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) / 2 + 1e-6  # half-ulp bound
+    # EF invariant: q(x+e) + e' == x + e  (exactly, by construction)
+    e0 = jnp.asarray(rng.normal(size=(1000,)) * 0.01, jnp.float32)
+    q2, s2, e1 = ef_quantize(x, e0)
+    np.testing.assert_allclose(
+        np.asarray(dequantize_int8(q2, s2) + e1), np.asarray(x + e0), rtol=1e-5
+    )
+
+
+def test_straggler_policy():
+    from repro.train.straggler import StragglerConfig, StragglerTracker
+
+    tr = StragglerTracker(StragglerConfig(alpha=1.0, threshold=1.5, patience=3))
+    for step in range(6):
+        for host in range(8):
+            t = 1.0 if host != 3 else 2.5  # host 3 persistently slow
+            tr.record(host, step, t)
+    assert tr.should_evict() == {3}
+    # transient slowness is not evicted
+    tr2 = StragglerTracker(StragglerConfig(alpha=1.0, threshold=1.5, patience=3))
+    for step in range(6):
+        for host in range(8):
+            t = 2.5 if (host == 3 and step == 2) else 1.0
+            tr2.record(host, step, t)
+    assert tr2.should_evict() == set()
+
+
+def test_elastic_remesh_plans():
+    from repro.train.elastic import plan_remesh, usable_devices
+
+    p = plan_remesh(256, model_axis=16)
+    assert p.shape == (16, 16)
+    # lose 5 hosts (say 40 chips): usable shrinks to full data rows
+    p2 = plan_remesh(216, model_axis=16)
+    assert p2.shape == (13, 16)
+    assert usable_devices(216, 16) == 208
+    p3 = plan_remesh(512, model_axis=16, pods=2)
+    assert p3.shape == (2, 16, 16)
+    with pytest.raises(ValueError):
+        plan_remesh(8, model_axis=16)
+
+
+def test_elastic_checkpoint_restart(tmp_path):
+    """Failure scenario: train, checkpoint, 'lose' devices, restore onto a
+    new topology (value-level resharding path) and keep training."""
+    model, opt_cfg, state, cfg = _model_and_state()
+    pipe = _pipeline(cfg)
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+    state = train_loop(model, state, iter(pipe), opt_cfg, steps=2,
+                       checkpoint_mgr=mgr, checkpoint_every=2, log_every=0)
+    step, restored = mgr.restore_latest()
+    from repro.launch.mesh import make_small_mesh
+    from repro.train.elastic import reshard_state
+
+    mesh = make_small_mesh(1, 1)  # the "new" topology (1 device here)
+    params2 = reshard_state(restored["params"], mesh, cfg)
+    state2 = TrainState(params2, restored["opt"], None)
+    state2 = train_loop(model, state2, iter(pipe), opt_cfg, steps=4,
+                        log_every=0)
+    assert int(state2.opt["step"]) == 4
+
+
+def test_sharding_rules_divisibility():
+    """Every param/batch/cache spec must be layout-valid on the production
+    meshes (mesh.shape is all the rules need — no devices required)."""
+    from jax.sharding import PartitionSpec
+
+    from repro.configs import ARCH_IDS, config_for
+    from repro.dist.sharding import batch_specs, cache_specs, param_specs
+    from repro.models import input_specs
+    from repro.models.config import SHAPES
+    from repro.models.model_zoo import shape_supported
+
+    class FakeMesh:
+        def __init__(self, shape):
+            self.shape = shape
+
+    meshes = [
+        FakeMesh({"data": 16, "model": 16}),
+        FakeMesh({"pod": 2, "data": 16, "model": 16}),
+    ]
+    for arch in ARCH_IDS:
+        cfg = config_for(arch)
+        from repro.models import build_model as bm
+
+        shapes_tree = bm(cfg).init_shapes()
+        for mesh in meshes:
+            specs = param_specs(shapes_tree, mesh, cfg)
+
+            def check(path, leaf, spec):
+                assert isinstance(spec, PartitionSpec)
+                for dim, ax in zip(leaf.shape, spec):
+                    if ax is None:
+                        continue
+                    axes = ax if isinstance(ax, tuple) else (ax,)
+                    n = 1
+                    for a in axes:
+                        n *= mesh.shape[a]
+                    assert dim % n == 0, (arch, path, leaf.shape, spec)
+
+            jax.tree_util.tree_map_with_path(
+                check, shapes_tree, specs
+            )
+            for sname, sh in SHAPES.items():
+                if not shape_supported(cfg, sh)[0]:
+                    continue
+                sp = input_specs(cfg, sh)
+                if sh.kind == "decode":
+                    cs = cache_specs(sp["cache"], mesh, cfg)
+                    jax.tree_util.tree_map_with_path(check, sp["cache"], cs)
+                else:
+                    bs = batch_specs(sp, mesh, cfg)
+                    jax.tree_util.tree_map_with_path(check, sp, bs)
