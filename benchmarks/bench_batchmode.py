@@ -5,15 +5,27 @@ row store vs columnstore comparison.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from benchmarks.common import emit, time_run
-from repro.core import Database, UdfBuilder, col, lit, param, scan, sum_, udf
+from repro.core import (
+    FROID,
+    HEKATON,
+    Session,
+    UdfBuilder,
+    col,
+    param,
+    scan,
+    sum_,
+    udf,
+)
 from repro.data.tpch import generate_tpch
 
 
 def run(quick: bool = False, sf: float = 0.02):
-    db = Database()
+    db = Session()
     generate_tpch(db, sf=sf)
 
     u = UdfBuilder("discount_price",
@@ -31,12 +43,14 @@ def run(quick: bool = False, sf: float = 0.02):
         )
     )
 
-    fn_sort, _ = db.run_compiled(q, froid=True)
+    fn_sort = db.prepare(q, FROID)
     t_sort = time_run(fn_sort)
     emit("table4/froid_on_rowstore(sort-groupby)", t_sort * 1e6, "")
 
+    batch_mode = dataclasses.replace(FROID, pallas_agg=True, compile_plan=False)
+
     def run_pallas():
-        return db.run(q, froid=True, pallas_agg=True).masked.mask
+        return db.execute(q, batch_mode).masked.mask
 
     # NB: pallas interpret-mode on CPU measures dispatch, not MXU speed —
     # the batch-mode win is structural (no sort; one fused pass); we also
@@ -46,7 +60,7 @@ def run(quick: bool = False, sf: float = 0.02):
          f"vs_sort={t_sort/t_pal:.2f}x (interpret-mode timing)")
 
     n = db.catalog["lineitem"].num_rows
-    fn_off, _ = db.run_compiled(q, froid=False, mode="scan")
+    fn_off = db.prepare(q, HEKATON)
     t_off = time_run(fn_off, warmup=1, iters=1)
     emit("table4/froid_off_iterative", t_off * 1e6,
          f"rows={n} slowdown_vs_batch={t_off/t_sort:.1f}x")

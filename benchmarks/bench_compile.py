@@ -3,7 +3,8 @@
 Froid adds binding/algebrization/rewrite + a bigger query tree to compile;
 the paper's claim is that this overhead is dwarfed by execution gains.
 We measure (bind+optimize+compile+run) cold for froid ON vs the iterative
-baselines.
+baselines — ``Session.prepare`` is the bind step, the first ``execute``
+pays jit, so cold = prepare + first execute.
 """
 from __future__ import annotations
 
@@ -13,7 +14,7 @@ import numpy as np
 
 from benchmarks.common import emit
 from benchmarks.bench_factor import UDF_QUERIES, _register
-from repro.core import Database
+from repro.core import FROID, INTERPRETED, Session
 
 N_ROWS = 10_000
 N_INTERP = 200
@@ -23,7 +24,7 @@ def run(quick: bool = False):
     rng = np.random.default_rng(0)
     names = list(UDF_QUERIES)[:3] if quick else list(UDF_QUERIES)
     for name in names:
-        db = Database()
+        db = Session()
         db.create_table(
             "detail",
             d_key=rng.integers(0, 400, 30_000),
@@ -42,10 +43,10 @@ def run(quick: bool = False):
         q = UDF_QUERIES[name]()
 
         t0 = time.perf_counter()
-        plan_t0 = time.perf_counter()
-        fn, _ = db.run_compiled(q, froid=True)  # bind + rewrite
-        fn()  # compile + run
+        stmt = db.prepare(q, FROID)  # bind + rewrite
+        r = stmt.execute()  # compile + run
         t_cold = time.perf_counter() - t0
+        assert not r.cache_hit
         emit(f"fig8/{name}/froid_on_cold", t_cold * 1e6, "bind+compile+run")
 
         # iterative cold (per-statement plans compiled on first rows)
@@ -56,16 +57,10 @@ def run(quick: bool = False):
             {n: Column(c.data[:N_INTERP], None, c.dictionary)
              for n, c in t_tab.columns.items()}
         )
-        from repro.core import scan as _scan
-
-        q_sub = _scan("T_sub").node
-        # rebuild the same compute on the subset table
-        import copy
-
         q2 = UDF_QUERIES[name]()
         q2.node = _retarget(q2.node, "T", "T_sub")
         t0 = time.perf_counter()
-        db.run(q2, froid=False, mode="python")
+        db.execute(q2, INTERPRETED)
         t_off = (time.perf_counter() - t0) * N_ROWS / N_INTERP
         emit(f"fig8/{name}/froid_off_cold", t_off * 1e6,
              f"gain={t_off/t_cold:.0f}x (extrapolated)")

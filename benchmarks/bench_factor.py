@@ -12,7 +12,10 @@ import numpy as np
 
 from benchmarks.common import emit, time_run
 from repro.core import (
-    Database,
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    Session,
     UdfBuilder,
     case,
     col,
@@ -105,7 +108,7 @@ UDF_QUERIES = {
 
 
 def run(quick: bool = False, n_rows: int = N_ROWS):
-    db = Database()
+    db = Session()
     rng = np.random.default_rng(0)
     db.create_table(
         "detail",
@@ -126,11 +129,11 @@ def run(quick: bool = False, n_rows: int = N_ROWS):
     names = list(UDF_QUERIES)[:3] if quick else list(UDF_QUERIES)
     for name in names:
         q = UDF_QUERIES[name]()
-        fn_on, _ = db.run_compiled(q, froid=True)
+        fn_on = db.prepare(q, FROID)
         t_on = time_run(fn_on)
 
         # interpreted per-row cost from a sample, extrapolated
-        sub = Database()
+        sub = Session()
         sub.catalog = dict(db.catalog)
         from repro.tables.table import Column, Table
 
@@ -140,10 +143,10 @@ def run(quick: bool = False, n_rows: int = N_ROWS):
              for n, c in t_tab.columns.items()}
         )
         _register(sub)
-        r = sub.run(q, froid=False, mode="python")
+        r = sub.execute(q, INTERPRETED)
         t_off = r.elapsed_s * n_rows / N_INTERP
 
-        fn_nat, _ = db.run_compiled(q, froid=False, mode="scan")
+        fn_nat = db.prepare(q, HEKATON)
         t_nat = time_run(fn_nat, warmup=1, iters=1)
         emit(f"fig11/{name}", t_on * 1e6,
              f"factor_vs_interpreted={t_off/t_on:.0f}x "

@@ -14,7 +14,10 @@ import numpy as np
 
 from benchmarks.common import emit, time_run
 from repro.core import (
-    Database,
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    Session,
     UdfBuilder,
     col,
     lit,
@@ -31,7 +34,7 @@ M_ROWS = 20_000  # inner table size
 
 
 def _setup(n_keys=500):
-    db = Database()
+    db = Session()
     rng = np.random.default_rng(0)
     db.create_table(
         "detail",
@@ -71,18 +74,18 @@ def run(quick: bool = False):
         q = scan("T").compute(v=udf("F1", col("a"), col("b"))).project("v")
 
         # warm plan cache (paper: cached plans, compile excluded)
-        fn_on, _ = db.run_compiled(q, froid=True)
+        fn_on = db.prepare(q, FROID)
         t_on = time_run(fn_on)
         emit(f"fig7/froid_on/N={n}", t_on * 1e6, f"{t_on*1e9/max(n,1):.0f} ns/row")
 
-        fn_scan, _ = db.run_compiled(q, froid=False, mode="scan")
+        fn_scan = db.prepare(q, HEKATON)
         t_scan = time_run(fn_scan, warmup=1, iters=1 if n >= 10_000 else 3)
         emit(f"fig7/native_iterative/N={n}", t_scan * 1e6,
              f"speedup_vs_froid={t_scan/t_on:.0f}x")
 
         if n <= PYTHON_MODE_CAP:
             t_py = time_run(
-                lambda: db.run(q, froid=False, mode="python").masked.mask,
+                lambda: db.execute(q, INTERPRETED).masked.mask,
                 warmup=0, iters=1,
             )
             emit(f"fig7/interpreted/N={n}", t_py * 1e6,

@@ -7,7 +7,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import emit, time_run
-from repro.core import Database, UdfBuilder, col, param, scan, sum_, udf, var
+from repro.core import (FROID, HEKATON, INTERPRETED, Session, UdfBuilder,
+                        col, param, scan, sum_, udf, var)
 
 N = 2_000
 M = 20_000
@@ -15,7 +16,7 @@ N_INTERP = 200
 
 
 def run(quick: bool = False):
-    db = Database()
+    db = Session()
     rng = np.random.default_rng(0)
     db.create_table("detail", d_key=rng.integers(0, 500, M),
                     d_val=rng.uniform(0, 100, M).astype(np.float32))
@@ -30,26 +31,26 @@ def run(quick: bool = False):
 
     # interpreted + froid OFF (classic)
     sub_q = scan("T").filter(col("a") >= 0).compute(v=udf("fare_total", col("a")))
-    r = db.run(
+    r = db.execute(
         scan("T").compute(v=udf("fare_total", col("a"))) if N <= N_INTERP
-        else _cap(db, q), froid=False, mode="python",
+        else _cap(db, q), INTERPRETED,
     )
     t_interp = r.elapsed_s * (N / min(N, N_INTERP))
     emit("table5/interpreted_froid_off", t_interp * 1e6, "extrapolated")
 
     # native (compiled) + froid OFF: still iterative
-    fn, _ = db.run_compiled(q, froid=False, mode="scan")
+    fn = db.prepare(q, HEKATON)
     t_native_off = time_run(fn, warmup=1, iters=2)
     emit("table5/native_froid_off", t_native_off * 1e6,
          f"vs_interpreted={t_interp/t_native_off:.1f}x")
 
     # interpreted query + froid ON (plan built each call, no caching)
-    t_on_interp = time_run(lambda: db.run(q, froid=True).masked.mask,
+    t_on_interp = time_run(lambda: db.execute(q, FROID.eager()).masked.mask,
                            warmup=1, iters=2)
     emit("table5/interpreted_froid_on", t_on_interp * 1e6, "")
 
     # native + froid ON: compiled set-oriented plan
-    fn_on, _ = db.run_compiled(q, froid=True)
+    fn_on = db.prepare(q, FROID)
     t_on = time_run(fn_on)
     emit("table5/native_froid_on", t_on * 1e6,
          f"total_gain={t_interp/t_on:.0f}x")

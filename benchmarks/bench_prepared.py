@@ -1,0 +1,107 @@
+"""Prepared-statement lifecycle: cold prepare+first-execute vs warm execute
+across the three ExecutionPolicy presets (the engine-API view of the
+paper's "plan once, execute many" economics).
+
+Emits the same `name,us_per_call,derived` rows as the rest of the harness:
+
+    PYTHONPATH=src python -m benchmarks.bench_prepared [--quick]
+
+For each preset: ``cold`` is a fresh Session paying bind + optimize (+ jit
+for compiling policies) + one execution; ``warm`` is the median execute on
+the same PreparedStatement afterwards (cache_hit asserted).  ``param_swap``
+re-executes warm with a different parameter *value* (same signature — no
+re-specialization).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_run
+from repro.core import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+
+N_ROWS = 2_000
+N_ROWS_INTERP = 200  # per-row interpretation is the slow quadrant
+M_ROWS = 20_000
+
+
+def _setup(n_rows: int) -> Session:
+    db = Session()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, M_ROWS),
+        d_val=rng.uniform(0, 100, M_ROWS).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 400, n_rows))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    return db
+
+
+def _q():
+    return (
+        scan("T")
+        .filter(col("a") < param("cutoff"))
+        .compute(v=udf("key_total", col("a")))
+        .project("v")
+    )
+
+
+def run(quick: bool = False):
+    presets = [FROID, HEKATON, INTERPRETED]
+    for policy in presets:
+        n = N_ROWS_INTERP if policy is INTERPRETED else N_ROWS
+        db = _setup(n)
+        params = {"cutoff": 400}
+
+        t0 = time.perf_counter()
+        stmt = db.prepare(_q(), policy)
+        r_cold = stmt.execute(params=params)
+        t_cold = time.perf_counter() - t0
+        assert not r_cold.cache_hit
+        emit(f"prepared/{policy.name}/cold", t_cold * 1e6,
+             f"bind+optimize{'+jit' if policy.compile_plan else ''}+run "
+             f"rows={n}")
+
+        iters = 1 if (quick or policy is INTERPRETED) else 3
+        t_warm = time_run(lambda: stmt.execute(params=params).masked.mask,
+                          warmup=1, iters=iters)
+        r_warm = stmt.execute(params=params)
+        assert r_warm.cache_hit, policy.name
+        emit(f"prepared/{policy.name}/warm", t_warm * 1e6,
+             f"cold/warm={t_cold/t_warm:.0f}x cache_hit={r_warm.cache_hit}")
+
+        # changed parameter value, unchanged signature: stays warm
+        t_swap = time_run(
+            lambda: stmt.execute(params={"cutoff": 200}).masked.mask,
+            warmup=1, iters=iters,
+        )
+        r_swap = stmt.execute(params={"cutoff": 200})
+        assert r_swap.cache_hit, policy.name
+        emit(f"prepared/{policy.name}/param_swap", t_swap * 1e6,
+             f"same signature, no re-bind")
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,8 @@ import time
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import Database, UdfBuilder, col, param, scan, sum_, udf, var
+from repro.core import (FROID, INTERPRETED, Session, UdfBuilder, col,
+                        param, scan, sum_, udf, var)
 from repro.core.executor import Executor
 from repro.core.interpreter import Interpreter
 
@@ -22,7 +23,7 @@ N_INTERP = 200
 
 
 def _db():
-    db = Database()
+    db = Session()
     rng = np.random.default_rng(0)
     db.create_table("customer", c_custkey=np.arange(N_CUST))
     db.create_table(
@@ -44,7 +45,7 @@ def run(quick: bool = False):
     q = scan("customer").compute(total=udf("total_price", col("c_custkey")))
 
     # --- fig 13: CPU time (warm plan cache, as in the paper) ---------------
-    fn_on, _ = db.run_compiled(q, froid=True)
+    fn_on = db.prepare(q, FROID)
     fn_on()  # warm
     t0 = time.process_time()
     fn_on()
@@ -57,25 +58,27 @@ def run(quick: bool = False):
         total=udf("total_price", col("c_custkey"))
     )
     t0 = time.process_time()
-    db.run(sub_q, froid=False, mode="python", jit_statements=not quick)
+    import dataclasses as _dc
+
+    db.execute(sub_q, _dc.replace(INTERPRETED, jit_statements=not quick))
     cpu_off = (time.process_time() - t0) * N_CUST / N_INTERP
     emit("fig13/total_price/froid_off_cpu", cpu_off * 1e6,
          f"reduction={cpu_off/max(cpu_on, 1e-9):.0f}x (extrapolated)")
 
     # --- fig 14: logical reads (bytes scanned) ----------------------------
-    plan = db.plan_for(q, froid=True)
+    plan = db.prepare(q, FROID).plan
     ex = Executor(db.catalog)
     ex.execute(plan)
-    bytes_on = ex._stats["bytes_scanned"]
+    bytes_on = ex.stats["bytes_scanned"]
     emit("fig14/total_price/froid_on_bytes", bytes_on, "one scan per table")
 
     # iterative: inner table re-scanned once per invocation
     interp = Interpreter(db.catalog, db.registry, mode="python",
                          jit_statements=False)
     ex_off = Executor(db.catalog, udf_column_evaluator=interp.eval_udf_call)
-    plan_off = db.plan_for(sub_q, froid=False)
+    plan_off = db.prepare(sub_q, INTERPRETED).plan
     ex_off.execute(plan_off)
-    measured = ex_off._stats["bytes_scanned"] + interp.stats["bytes_scanned"]
+    measured = ex_off.stats["bytes_scanned"] + interp.stats["bytes_scanned"]
     bytes_off = measured * N_CUST / N_INTERP
     emit("fig14/total_price/froid_off_bytes", bytes_off,
          f"{bytes_off/bytes_on:.0f}x more logical reads (extrapolated)")

@@ -10,15 +10,15 @@ import numpy as np
 
 from benchmarks.common import emit, time_run
 from benchmarks.tpch_udfs import QUERIES, register_udfs
-from repro.core import Database
+from repro.core import FROID, HEKATON, INTERPRETED, Session
 from repro.data.tpch import generate_tpch
 
 SF = 0.02  # 120k lineitems (CPU-scale)
 
 
 def _results_match(db, qa, qb) -> bool:
-    ra = db.run(qa, froid=True).table
-    rb = db.run(qb, froid=True).table
+    ra = db.execute(qa, FROID).table
+    rb = db.execute(qb, FROID).table
     try:
         for name in ra.names():
             if name not in rb.columns:
@@ -33,7 +33,7 @@ def _results_match(db, qa, qb) -> bool:
 
 
 def run(quick: bool = False, sf: float = SF):
-    db = Database()
+    db = Session()
     generate_tpch(db, sf=sf)
     register_udfs(db)
     names = list(QUERIES)[:3] if quick else list(QUERIES)
@@ -41,17 +41,17 @@ def run(quick: bool = False, sf: float = SF):
         q_udf, q_orig = QUERIES[name]
         qu, qo = q_udf(), q_orig()
 
-        fn_orig, _ = db.run_compiled(qo, froid=True)
+        fn_orig = db.prepare(qo, FROID)
         t_orig = time_run(fn_orig)
         emit(f"fig9/{name}/original", t_orig * 1e6, "")
 
-        fn_on, _ = db.run_compiled(qu, froid=True)
+        fn_on = db.prepare(qu, FROID)
         t_on = time_run(fn_on)
         ok = _results_match(db, qu, qo)
         emit(f"fig9/{name}/udf_froid_on", t_on * 1e6,
              f"vs_orig={t_on/t_orig:.2f}x match={ok}")
 
-        fn_off, _ = db.run_compiled(qu, froid=False, mode="scan")
+        fn_off = db.prepare(qu, HEKATON)
         t_off = time_run(fn_off, warmup=1, iters=1)
         emit(f"fig9/{name}/udf_froid_off_native", t_off * 1e6,
              f"slowdown_vs_on={t_off/t_on:.1f}x")
@@ -60,7 +60,7 @@ def run(quick: bool = False, sf: float = SF):
         # cost on a subset, extrapolate to the full cardinality
         sub = _subset_db(db, rows=300)
         register_udfs(sub)
-        r = sub.run(qu, froid=False, mode="python")
+        r = sub.execute(qu, INTERPRETED)
         n_sub = sub.catalog["lineitem"].num_rows
         n_full = db.catalog["lineitem"].num_rows
         t_interp = r.elapsed_s * n_full / n_sub
@@ -68,13 +68,13 @@ def run(quick: bool = False, sf: float = SF):
              f"extrapolated_from_{n_sub}_rows slowdown_vs_on={t_interp/t_on:.0f}x")
 
 
-def _subset_db(db: Database, rows: int) -> Database:
+def _subset_db(db: Session, rows: int) -> Session:
     """Copy of the db with lineitem truncated (for interpreted-mode cost)."""
     import jax.numpy as jnp
 
     from repro.tables.table import Column, Table
 
-    sub = Database()
+    sub = Session()
     for name, t in db.catalog.items():
         if name == "lineitem":
             cols = {

@@ -30,6 +30,3 @@ def time_run(fn, *, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(times))
 
 
-def run_query(db, q, froid, mode="python", **kw):
-    res = db.run(q, froid=froid, mode=mode, **kw)
-    return res

@@ -16,7 +16,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced cardinalities / query subsets")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig7,fig8,fig9,fig11,fig13,table4,table5")
+                    help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
+                         "table5,prepared")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
@@ -25,6 +26,7 @@ def main() -> None:
         bench_factor,
         bench_invocations,
         bench_native,
+        bench_prepared,
         bench_resources,
         bench_tpch,
     )
@@ -37,6 +39,7 @@ def main() -> None:
         "fig13": bench_resources.run,      # CPU time + logical reads (fig14)
         "table4": bench_batchmode.run,     # batch mode / relagg kernel
         "table5": bench_native.run,        # native compilation quadrant
+        "prepared": bench_prepared.run,    # Session prepare/execute lifecycle
     }
     only = args.only.split(",") if args.only else list(suites)
 

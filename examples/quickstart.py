@@ -1,11 +1,18 @@
-"""Quickstart: the paper's Figure 1 example end-to-end.
+"""Quickstart: the paper's Figure 1 example on the prepare/execute API.
 
     PYTHONPATH=src python examples/quickstart.py
 
 Defines the `total_price` UDF (imperative: declarations, SELECT-assigns,
-IF/ELSE, nested UDF call), runs a query over customers with Froid OFF
-(iterative, per-tuple interpretation) and Froid ON (algebrized + inlined +
-set-oriented plan), prints the plans and the speedup.
+IF/ELSE, nested UDF call), opens a Session, prepares the query once under
+each ExecutionPolicy preset and executes it warm:
+
+  * FROID        — algebrized + inlined + set-oriented compiled plan
+  * INTERPRETED  — per-tuple statement-at-a-time interpretation (classic)
+  * HEKATON      — natively-compiled but still iterative (Table 5)
+
+The prepared FROID statement is the paper's headline: cold `prepare` pays
+bind + optimize + jit once; every warm `execute` reuses the cached plan
+and compiled callable (`QueryResult.cache_hit`).
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -13,20 +20,21 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.core import (
-    Database, UdfBuilder, col, lit, param, scalar_subquery, scan, sum_, udf, var,
+    FROID, INTERPRETED, Session, UdfBuilder,
+    col, lit, param, scalar_subquery, scan, sum_, udf, var,
 )
 
-db = Database()
+session = Session()
 rng = np.random.default_rng(0)
 n_cust, n_ord = 2_000, 20_000
-db.create_table("customer", c_custkey=np.arange(n_cust))
-db.create_table("orders",
-                o_custkey=rng.integers(0, n_cust, n_ord),
-                o_totalprice=rng.uniform(10, 1000, n_ord).astype(np.float32))
-db.create_table("customer_prefs", custkey=np.arange(n_cust),
-                currency=np.array(["USD" if i % 3 else "EUR" for i in range(n_cust)]))
-db.create_table("xchg", from_cur=np.array(["USD"]), to_cur=np.array(["EUR"]),
-                rate=np.array([0.9], dtype=np.float32))
+session.create_table("customer", c_custkey=np.arange(n_cust))
+session.create_table("orders",
+                     o_custkey=rng.integers(0, n_cust, n_ord),
+                     o_totalprice=rng.uniform(10, 1000, n_ord).astype(np.float32))
+session.create_table("customer_prefs", custkey=np.arange(n_cust),
+                     currency=np.array(["USD" if i % 3 else "EUR" for i in range(n_cust)]))
+session.create_table("xchg", from_cur=np.array(["USD"]), to_cur=np.array(["EUR"]),
+                     rate=np.array([0.9], dtype=np.float32))
 
 # dbo.xchg_rate
 u = UdfBuilder("xchg_rate", [("frm", "str"), ("to", "str")], "float32")
@@ -34,7 +42,7 @@ u.return_(scalar_subquery(
     scan("xchg")
     .filter((col("from_cur") == param("frm")) & (col("to_cur") == param("to")))
     .compute(r=col("rate")).project("r"), "r"))
-db.create_function(u.build())
+session.create_function(u.build())
 
 # dbo.total_price (Figure 1)
 u = UdfBuilder("total_price", [("key", "int32")], "float32")
@@ -50,31 +58,31 @@ with u.if_(var("pref_currency") != var("default_currency")):
     u.set("rate", udf("xchg_rate", var("default_currency"), var("pref_currency")))
     u.set("price", var("price") * var("rate"))
 u.return_(var("price"))
-db.create_function(u.build())
+session.create_function(u.build())
 
 q = scan("customer").compute(total=udf("total_price", col("c_custkey"))) \
                     .project("c_custkey", "total")
 
+# prepare once: bind-time inlining + rewrites happen here
+stmt = session.prepare(q, FROID)
 print("=== Froid ON: algebrized + inlined + optimized plan ===")
-print(db.explain(q, froid=True))
+print(stmt.explain())
 
-import time
-import jax
-fn_on, _ = db.run_compiled(q, froid=True)
-jax.block_until_ready(fn_on())  # warm (plan cache)
-t0 = time.perf_counter()
-jax.block_until_ready(fn_on())
-t_on = time.perf_counter() - t0
+r_cold = stmt.execute()            # pays whole-plan jit
+r_warm = stmt.execute()            # cached compiled plan
+assert not r_cold.cache_hit and r_warm.cache_hit
 
 # iterative baseline on a subset (it is slow — that is the point)
 sub = scan("customer").filter(col("c_custkey") < 100) \
     .compute(total=udf("total_price", col("c_custkey")))
-r_off = db.run(sub, froid=False, mode="python")
+r_off = session.execute(sub, INTERPRETED)
 t_off = r_off.elapsed_s * n_cust / 100
 
-r_on = db.run(q, froid=True)
-a = np.asarray(r_on.table.columns["total"].data)
+a = np.asarray(r_warm.table.columns["total"].data)
 print(f"\nfirst totals: {a[:5]}")
-print(f"froid ON  (warm, {n_cust} rows):  {t_on*1e3:9.1f} ms")
-print(f"froid OFF (interpreted, extrap.): {t_off*1e3:9.1f} ms")
-print(f"speedup: {t_off/t_on:.0f}x")
+print(f"froid ON  cold (prepare+jit, {n_cust} rows): {r_cold.elapsed_s*1e3:9.1f} ms")
+print(f"froid ON  warm (cache_hit={r_warm.cache_hit}):          "
+      f"{r_warm.elapsed_s*1e3:9.1f} ms")
+print(f"froid OFF (interpreted, extrap.):       {t_off*1e3:9.1f} ms")
+print(f"speedup (warm vs interpreted): {t_off/r_warm.elapsed_s:.0f}x")
+print(f"session cache stats: {session.cache_stats}")

@@ -10,16 +10,13 @@ import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-import time
-
-import jax
 import numpy as np
 
 from benchmarks.tpch_udfs import QUERIES, register_udfs
-from repro.core import Database
+from repro.core import FROID, Session
 from repro.data.tpch import generate_tpch
 
-db = Database()
+db = Session()
 print("generating TPC-H data (sf=0.02)…")
 generate_tpch(db, sf=0.02)
 register_udfs(db)
@@ -27,22 +24,19 @@ register_udfs(db)
 for name in ("Q6", "Q14", "Q12"):
     q_udf, q_orig = QUERIES[name]
     qu, qo = q_udf(), q_orig()
+    stmt_u = db.prepare(qu, FROID)
+    stmt_o = db.prepare(qo, FROID)
     if name == "Q6":
         print("\n=== plan for Q6 with q6conditions() inlined ===")
-        print(db.explain(qu))
+        print(stmt_u.explain())
 
-    fn_on, _ = db.run_compiled(qu, froid=True)
-    jax.block_until_ready(fn_on())
-    t0 = time.perf_counter(); jax.block_until_ready(fn_on())
-    t_on = time.perf_counter() - t0
+    ru = stmt_u.execute()                  # cold: bind+optimize+jit
+    t_on = stmt_u.execute().elapsed_s      # warm: cached compiled plan
+    ro = stmt_o.execute()
+    t_orig = stmt_o.execute().elapsed_s
 
-    fn_orig, _ = db.run_compiled(qo, froid=True)
-    jax.block_until_ready(fn_orig())
-    t0 = time.perf_counter(); jax.block_until_ready(fn_orig())
-    t_orig = time.perf_counter() - t0
-
-    ra = db.run(qu).table
-    rb = db.run(qo).table
+    ra = ru.table
+    rb = ro.table
     col0 = [c for c in ra.names() if c in rb.columns][0]
     match = np.allclose(
         np.asarray(ra.columns[col0].data, np.float64),

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the repo's test suite.  pyproject.toml sets
+# pythonpath=src, so no PYTHONPATH export is needed — this script exists so
+# `scripts/verify.sh` is the one canonical spelling (extra pytest args pass
+# through, e.g. `scripts/verify.sh -m "not slow"`).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+exec python -m pytest -x -q "$@"

@@ -5,8 +5,23 @@
 # Database", PVLDB 11(4), 2017).
 from repro.core.algebrizer import AlgebrizeError, algebrize
 from repro.core.binder import Binder, InlineConstraints
-from repro.core.database import Database, RunResult
+from repro.core.database import Database
 from repro.core.executor import Executor, MaskedTable
+from repro.core.policy import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    PRESETS,
+    ExecutionPolicy,
+    resolve_policy,
+)
+from repro.core.session import (
+    PreparedStatement,
+    QueryResult,
+    RunResult,
+    Session,
+    plan_fingerprint,
+)
 from repro.core.frontend import (
     Q,
     UdfBuilder,
@@ -47,4 +62,8 @@ __all__ = [
     "min_", "not_exists", "param", "scalar_subquery", "scan", "sum_", "udf",
     "var", "Interpreter", "Assign", "Declare", "IfElse", "Return", "UdfDef",
     "explain", "optimize",
+    # prepare/execute API
+    "Session", "PreparedStatement", "QueryResult", "ExecutionPolicy",
+    "FROID", "INTERPRETED", "HEKATON", "PRESETS", "resolve_policy",
+    "plan_fingerprint",
 ]

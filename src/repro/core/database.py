@@ -1,87 +1,70 @@
-"""The engine facade: catalog + UDF registry + query execution modes.
+"""Backward-compatible facade over :class:`repro.core.session.Session`.
 
-Execution modes (paper experiment axes):
-
-* ``froid=True``  (default): bind-time UDF inlining + rewrite rules +
-  set-oriented vectorized execution — the paper's contribution.
-* ``froid=False, mode="python"``: iterative interpreted UDFs (the classic
-  evaluation the paper §2 describes).
-* ``froid=False, mode="scan"``: natively-compiled-but-still-iterative UDFs
-  (Hekaton analogue, Table 5).
-
-``run_compiled`` returns a jitted callable over the catalog arrays — the
-"cached plan" used for warm-cache benchmark runs.
+``Database`` was the original entry point, exposing the paper's experiment
+axes as boolean kwargs (``froid=…, mode=…, optimize=…``) and re-planning on
+every ``run()``.  It is now a thin shim: every call maps its kwargs onto an
+:class:`ExecutionPolicy` and routes through the session's plan/executable
+caches.  New code should use ``Session.prepare(…).execute(…)`` with the
+policy presets (``FROID`` / ``INTERPRETED`` / ``HEKATON``) directly — see
+ROADMAP.md §Public API for the deprecation path.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import optimizer as O
 from repro.core import relalg as R
-from repro.core.binder import Binder, InlineConstraints
-from repro.core.executor import Executor, MaskedTable
-from repro.core.frontend import Q
-from repro.core.interpreter import Interpreter
-from repro.core.ir import UdfDef
+from repro.core.binder import InlineConstraints
+from repro.core.policy import ExecutionPolicy
+from repro.core.session import QueryResult, RunResult, Session
 from repro.tables.table import Table
-
-
-@dataclasses.dataclass
-class RunResult:
-    table: Table  # compacted result rows
-    masked: MaskedTable  # raw masked result (jit-friendly form)
-    plan: R.RelNode  # the executed plan (post-binding/optimization)
-    elapsed_s: float
-    stats: dict
 
 
 class Database:
     def __init__(self, constraints: InlineConstraints | None = None):
-        self.catalog: dict[str, Table] = {}
-        self.registry: dict[str, UdfDef] = {}
-        self.constraints = constraints or InlineConstraints()
+        self.session = Session(constraints=constraints)
+
+    # the session owns catalog/registry/constraints; the shim forwards both
+    # reads and (legacy benchmark-style) whole-attribute assignment
+    @property
+    def catalog(self) -> dict[str, Table]:
+        return self.session.catalog
+
+    @catalog.setter
+    def catalog(self, value):
+        self.session.catalog = value
+
+    @property
+    def registry(self):
+        return self.session.registry
+
+    @registry.setter
+    def registry(self, value):
+        self.session.registry = value
+
+    @property
+    def constraints(self) -> InlineConstraints:
+        return self.session.constraints
+
+    @constraints.setter
+    def constraints(self, value):
+        self.session.constraints = value
 
     # -- DDL ---------------------------------------------------------------
-    def create_table(self, name: str, table: Table | None = None, **arrays):
-        t = table if table is not None else Table.from_arrays(**arrays)
-        t.compute_stats()  # histograms for the optimizer (§Perf)
-        self.catalog[name] = t
-        return t
+    # name/table positional-only: columns may be called "name"/"table"
+    def create_table(self, name: str, table: Table | None = None, /, **arrays):
+        return self.session.create_table(name, table, **arrays)
 
-    def create_function(self, udf: UdfDef):
-        self.registry[udf.name] = udf
-        return udf
+    def create_function(self, udf):
+        return self.session.create_function(udf)
 
-    # -- planning ------------------------------------------------------------
+    # -- planning ----------------------------------------------------------
     def plan_for(self, query, froid: bool = True, optimize: bool = True) -> R.RelNode:
-        plan = query.node if isinstance(query, Q) else query
-        # the query's intended output schema (before inlining widens rows)
-        try:
-            wanted = R.output_columns(plan, self.catalog)
-        except Exception:
-            wanted = None
-        if froid:
-            binder = Binder(self.registry, self.constraints)
-            plan = binder.bind(plan)
-        if optimize:
-            plan = O.optimize(plan, self.catalog, required=set(wanted) if wanted else None)
-        if wanted is not None:
-            try:
-                have = R.output_columns(plan, self.catalog)
-            except Exception:
-                have = None
-            if have is not None and have != wanted:
-                plan = R.Project(plan, wanted)
-        return plan
+        policy = ExecutionPolicy.from_kwargs(froid=froid, optimize=optimize)
+        return self.session.prepare(query, policy).plan
 
     def explain(self, query, froid: bool = True, optimize: bool = True) -> str:
-        return O.explain(self.plan_for(query, froid, optimize))
+        policy = ExecutionPolicy.from_kwargs(froid=froid, optimize=optimize)
+        return self.session.explain(query, policy)
 
-    # -- execution -------------------------------------------------------------
+    # -- execution ---------------------------------------------------------
     def run(
         self,
         query,
@@ -91,67 +74,26 @@ class Database:
         params: dict | None = None,
         jit_statements: bool = True,
         pallas_agg: bool = False,
-    ) -> RunResult:
-        plan = self.plan_for(query, froid, optimize)
-        interp = Interpreter(
-            self.catalog, self.registry, mode=mode, jit_statements=jit_statements
+    ) -> QueryResult:
+        """Eager execution with the legacy kwarg axes (deprecated spelling
+        of ``session.execute(query, policy, params)``)."""
+        policy = ExecutionPolicy.from_kwargs(
+            froid=froid, mode=mode, optimize=optimize,
+            jit_statements=jit_statements, pallas_agg=pallas_agg,
+            compiled=False,
         )
-        executor = Executor(
-            self.catalog,
-            udf_column_evaluator=interp.eval_udf_call,
-            use_pallas_agg=pallas_agg,
-        )
-        t0 = time.perf_counter()
-        masked = executor.execute(plan, params=params)
-        jax.block_until_ready(masked.mask)
-        elapsed = time.perf_counter() - t0
-        stats = {**executor._stats, **interp.stats}
-        return RunResult(masked.compact(), masked, plan, elapsed, stats)
+        return self.session.execute(query, policy, params=params)
 
     def run_compiled(self, query, froid: bool = True, mode: str = "scan",
                      optimize: bool = True):
-        """Compile the whole plan once (the cached plan); returns
-        ``fn() -> (mask, {col: (data, valid)})`` plus the plan.
+        """Deprecated spelling of ``session.prepare(…)``: returns the raw
+        compiled callable plus the plan (the old warm-cache benchmark
+        interface).  ``PreparedStatement`` itself is the replacement."""
+        policy = ExecutionPolicy.from_kwargs(
+            froid=froid, mode=mode, optimize=optimize, compiled=True,
+        )
+        ps = self.session.prepare(query, policy)
+        return ps, ps.plan
 
-        Table columns are passed as *arguments* to the jitted function (not
-        closed-over constants) so XLA cannot constant-fold the query away —
-        warm calls measure real execution.
 
-        With froid=False the UDF columns go through the iterative 'scan'
-        interpreter *inside* the compiled plan, matching "interpreted query
-        + native UDF" as closely as a tensor runtime can."""
-        from repro.tables.table import Column as _Column, Table as _Table
-
-        plan = self.plan_for(query, froid, optimize)
-        interp = Interpreter(self.catalog, self.registry, mode=mode)
-        hook = None if froid else interp.eval_udf_call
-
-        # host-side metadata (dictionaries) stays captured; data goes by arg
-        meta = {
-            tname: {c: col.dictionary for c, col in t.columns.items()}
-            for tname, t in self.catalog.items()
-        }
-
-        def raw(args):
-            catalog = {
-                tname: _Table(
-                    {
-                        c: _Column(data, valid, meta[tname][c])
-                        for c, (data, valid) in cols.items()
-                    }
-                )
-                for tname, cols in args.items()
-            }
-            ex = Executor(catalog, udf_column_evaluator=hook)
-            out = ex.execute(plan)
-            cols = {
-                n: (c.data, c.validity()) for n, c in out.table.columns.items()
-            }
-            return out.mask, cols
-
-        jitted = jax.jit(raw)
-        args = {
-            tname: {c: (col.data, col.validity()) for c, col in t.columns.items()}
-            for tname, t in self.catalog.items()
-        }
-        return (lambda: jitted(args)), plan
+__all__ = ["Database", "QueryResult", "RunResult"]

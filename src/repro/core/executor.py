@@ -86,6 +86,11 @@ class Executor:
         self.use_pallas_agg = use_pallas_agg
         self._stats = {"bytes_scanned": 0, "rows_scanned": 0}
 
+    @property
+    def stats(self) -> dict:
+        """Logical-read counters (copy; accumulates across executions)."""
+        return dict(self._stats)
+
     # -- public API --------------------------------------------------------
     def execute(self, plan: R.RelNode, params=None, outer=None, vars=None) -> MaskedTable:
         ctx = S.EvalContext(

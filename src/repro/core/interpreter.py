@@ -153,8 +153,9 @@ class Interpreter:
         if not self.jit_statements or has_udf:
             # nested UDF calls interpret on the host — can't stage them
             out = S.eval_scalar(expr, {}, ctx)
-            self.stats["bytes_scanned"] += executor._stats["bytes_scanned"]
-            self.stats["rows_scanned"] += executor._stats["rows_scanned"]
+            ex_stats = executor.stats
+            self.stats["bytes_scanned"] += ex_stats["bytes_scanned"]
+            self.stats["rows_scanned"] += ex_stats["rows_scanned"]
             return out
         var_names = sorted(vars)
         par_names = sorted(params)
@@ -165,8 +166,9 @@ class Interpreter:
             # first invocation: run un-staged to learn the result's string
             # dictionary (host-side metadata), then compile & cache the plan
             first = S.eval_scalar(expr, {}, ctx)
-            stmt_bytes = executor._stats["bytes_scanned"]
-            stmt_rows = executor._stats["rows_scanned"]
+            ex_stats = executor.stats
+            stmt_bytes = ex_stats["bytes_scanned"]
+            stmt_rows = ex_stats["rows_scanned"]
             self.stats["bytes_scanned"] += stmt_bytes
             self.stats["rows_scanned"] += stmt_rows
             dicts = {k: vars[k].dictionary for k in var_names}

@@ -1,0 +1,114 @@
+"""Execution policies: the paper's experiment axes as one value object.
+
+The engine historically exposed its modes as a soup of boolean kwargs
+(``froid=…, mode=…, optimize=…, jit_statements=…, pallas_agg=…``) spread
+over ``Database.run`` / ``Database.run_compiled``.  ``ExecutionPolicy``
+packages one point of that space; the named presets are the paper's
+Table 5 quadrants:
+
+* ``FROID``       — bind-time UDF inlining + rewrite rules + set-oriented
+  plan, whole-plan compilation (the paper's contribution).
+* ``INTERPRETED`` — iterative per-tuple UDF interpretation, statement at a
+  time with per-statement plan caching (classic T-SQL, §2.2).  The host
+  drives control flow, so plans execute eagerly (no whole-plan jit).
+* ``HEKATON``     — natively-compiled-but-still-iterative UDFs (§8.2.7):
+  the UDF body traces to one compiled function driven per row inside the
+  compiled plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPolicy:
+    """One point in the engine's execution-mode space.
+
+    ``name`` is a display label only — two policies with the same knobs
+    compare (and cache) equal regardless of name.
+    """
+
+    name: str = dataclasses.field(default="custom", compare=False)
+    #: bind-time UDF inlining (the paper's Froid pass)
+    inline_udfs: bool = True
+    #: iterative evaluation mode for non-inlined UDFs: "python" (statement
+    #: at a time, host control flow) | "scan" (whole-body native trace)
+    udf_mode: str = "python"
+    #: run the rewrite-rule optimizer over the bound plan
+    optimize: bool = True
+    #: cache + jit per-statement plans inside the "python" interpreter
+    jit_statements: bool = True
+    #: fused Pallas relagg kernel for eligible group-bys (batch mode)
+    pallas_agg: bool = False
+    #: compile the whole plan to one jitted callable (prepared-statement
+    #: hot path); False = eager op-by-op execution
+    compile_plan: bool = True
+
+    def __post_init__(self):
+        if self.udf_mode not in ("python", "scan"):
+            raise ValueError(f"udf_mode must be python|scan, got {self.udf_mode!r}")
+        if self.compile_plan and not self.inline_udfs and self.udf_mode == "python":
+            raise ValueError(
+                "python-mode UDF interpretation drives control flow on the "
+                "host and cannot live inside a compiled plan; use "
+                "udf_mode='scan' or compile_plan=False"
+            )
+
+    def fingerprint(self) -> tuple:
+        """Hashable identity for plan/executable cache keys (name excluded)."""
+        return (
+            self.inline_udfs, self.udf_mode, self.optimize,
+            self.jit_statements, self.pallas_agg, self.compile_plan,
+        )
+
+    def eager(self) -> "ExecutionPolicy":
+        """The same policy with whole-plan compilation off."""
+        if not self.compile_plan:
+            return self
+        return dataclasses.replace(self, name=self.name, compile_plan=False)
+
+    @classmethod
+    def from_kwargs(
+        cls,
+        froid: bool = True,
+        mode: str = "python",
+        optimize: bool = True,
+        jit_statements: bool = True,
+        pallas_agg: bool = False,
+        compiled: bool = False,
+    ) -> "ExecutionPolicy":
+        """Map the legacy ``Database.run``/``run_compiled`` kwargs onto a
+        policy (the deprecation path for the boolean-kwarg API)."""
+        return cls(
+            name="legacy",
+            inline_udfs=froid,
+            udf_mode=mode,
+            optimize=optimize,
+            jit_statements=jit_statements,
+            pallas_agg=pallas_agg,
+            compile_plan=compiled,
+        )
+
+
+#: paper Table 5 presets
+FROID = ExecutionPolicy(name="froid")
+INTERPRETED = ExecutionPolicy(
+    name="interpreted", inline_udfs=False, udf_mode="python", compile_plan=False
+)
+HEKATON = ExecutionPolicy(name="hekaton", inline_udfs=False, udf_mode="scan")
+
+PRESETS = {p.name: p for p in (FROID, INTERPRETED, HEKATON)}
+
+
+def resolve_policy(policy) -> ExecutionPolicy:
+    """Accept an ExecutionPolicy or a preset name."""
+    if isinstance(policy, ExecutionPolicy):
+        return policy
+    if isinstance(policy, str):
+        try:
+            return PRESETS[policy.lower()]
+        except KeyError:
+            raise KeyError(
+                f"unknown policy preset {policy!r}; have {sorted(PRESETS)}"
+            ) from None
+    raise TypeError(f"policy must be ExecutionPolicy or str, got {type(policy)}")

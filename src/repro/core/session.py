@@ -1,0 +1,588 @@
+"""Session / PreparedStatement: the engine's prepare-once-execute-many API.
+
+The paper's economics (PVLDB 11(4)) come from planning a UDF-bearing query
+*once* and running the set-oriented plan many times.  This module is that
+lifecycle as an API:
+
+* :class:`Session` owns the catalog + UDF registry and two caches — a
+  **plan cache** (bound + optimized plans, keyed by query fingerprint ×
+  policy × catalog/registry state) and an **executable cache** (whole-plan
+  jitted callables, additionally keyed by the parameter signature).
+* :class:`PreparedStatement` is the client handle: ``prepare`` plans and
+  binds (cold); ``execute(params=…)`` runs warm off the cached jitted
+  callable — changed parameter *values* ride the same executable, only a
+  changed parameter *signature* (dtype/shape/string) re-specializes.
+* :class:`QueryResult` reports rows lazily plus the plan, explain text,
+  public engine stats and whether the call was served from cache.
+
+Cache invalidation is by content: the catalog/registry tokens cover both
+``create_table``/``create_function`` and direct ``catalog[...] =`` pokes
+(benchmarks do this), so DDL or data replacement re-plans on next use.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import itertools
+import time
+from collections import OrderedDict
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import optimizer as O
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.binder import Binder, InlineConstraints
+from repro.core.executor import Executor, MaskedTable
+from repro.core.frontend import Q
+from repro.core.interpreter import Interpreter
+from repro.core.ir import UdfDef
+from repro.core.policy import FROID, ExecutionPolicy, resolve_policy
+from repro.tables.table import Column, DictEncoding, Table
+
+
+# ---------------------------------------------------------------------------
+# structural fingerprints (cache keys)
+# ---------------------------------------------------------------------------
+
+
+def _norm(v) -> Any:
+    """Normalize an attribute value into a hashable structure."""
+    if isinstance(v, S.Scalar):
+        return _expr_key(v)
+    if isinstance(v, R.RelNode):
+        return plan_fingerprint(v)
+    if isinstance(v, dict):
+        return ("dict",) + tuple((k, _norm(x)) for k, x in v.items())
+    if isinstance(v, (list, tuple)):
+        return ("seq",) + tuple(_norm(x) for x in v)
+    if dataclasses.is_dataclass(v) and not isinstance(v, type):
+        return (type(v).__name__,) + tuple(
+            (f.name, _norm(getattr(v, f.name))) for f in dataclasses.fields(v)
+        )
+    if isinstance(v, (str, int, float, bool, type(None))):
+        return v
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        # array-valued constants: content digest, never repr (repr elides
+        # the middle of large arrays, collapsing distinct values)
+        arr = np.asarray(v)
+        return ("array", str(arr.dtype), arr.shape,
+                hashlib.sha1(arr.tobytes()).hexdigest())
+    return repr(v)
+
+
+def _expr_key(e: S.Scalar) -> tuple:
+    return (type(e).__name__,) + tuple(
+        (k, _norm(v)) for k, v in vars(e).items()
+    )
+
+
+def plan_fingerprint(node: R.RelNode) -> tuple:
+    """Identity-free structural fingerprint of a plan/query tree: two
+    independently-built trees of the same shape fingerprint equal."""
+    return ("Rel:" + type(node).__name__,) + tuple(
+        (k, _norm(v)) for k, v in vars(node).items() if k != "node_id"
+    )
+
+
+# ---------------------------------------------------------------------------
+# results
+# ---------------------------------------------------------------------------
+
+
+class QueryResult:
+    """Result of one execution.
+
+    ``table`` (compacted host-visible rows) materializes lazily — the
+    masked device form is the primary product, so timing loops that only
+    touch ``masked`` never pay the host gather.
+    """
+
+    def __init__(self, masked: MaskedTable, plan: R.RelNode, elapsed_s: float,
+                 stats: dict, policy: ExecutionPolicy | None = None,
+                 cache_hit: bool = False):
+        self.masked = masked
+        self.plan = plan
+        self.elapsed_s = elapsed_s
+        self.stats = stats
+        self.policy = policy
+        self.cache_hit = cache_hit
+        self._table: Table | None = None
+
+    @property
+    def table(self) -> Table:
+        if self._table is None:
+            self._table = self.masked.compact()
+        return self._table
+
+    @property
+    def explain(self) -> str:
+        return O.explain(self.plan)
+
+    def __repr__(self):
+        pol = self.policy.name if self.policy else "?"
+        return (f"QueryResult(rows={self.masked.num_rows}, policy={pol}, "
+                f"cache_hit={self.cache_hit}, elapsed_s={self.elapsed_s:.4f})")
+
+
+#: backward-compatible alias — the old Database.run result type
+RunResult = QueryResult
+
+
+# monotonic stamps for cache tokens: attached to catalog/registry objects
+# the first time the session sees them, so a *new* object always gets a new
+# stamp even if the allocator reuses a dead object's address (id() alone is
+# unsafe as a cache key once the old object is garbage)
+_stamps = itertools.count(1)
+
+
+def _stamp(obj) -> int:
+    s = getattr(obj, "_session_stamp", None)
+    if s is None:
+        s = next(_stamps)
+        try:
+            obj._session_stamp = s
+        except AttributeError:  # frozen dataclass
+            object.__setattr__(obj, "_session_stamp", s)
+    return s
+
+
+class _BoundedCache(OrderedDict):
+    """Insertion-ordered dict evicting the least-recently-used entry past
+    ``cap`` — per-tick table reloads would otherwise grow the plan and
+    executable caches without bound in long-running serving loops."""
+
+    def __init__(self, cap: int):
+        super().__init__()
+        self.cap = cap
+
+    def get(self, key, default=None):
+        v = super().get(key, default)
+        if key in self:
+            self.move_to_end(key)
+        return v
+
+    def __setitem__(self, key, value):
+        super().__setitem__(key, value)
+        self.move_to_end(key)
+        while len(self) > self.cap:
+            self.popitem(last=False)
+
+
+# ---------------------------------------------------------------------------
+# parameter handling
+# ---------------------------------------------------------------------------
+
+
+def _param_value(v) -> S.Value:
+    if isinstance(v, S.Value):
+        return v
+    if isinstance(v, str):
+        return S.Value(jnp.asarray(0, jnp.int32), None, DictEncoding([v]))
+    if isinstance(v, bool):
+        return S.Value(jnp.asarray(v, bool))
+    if isinstance(v, (int, np.integer)):
+        return S.Value(jnp.asarray(v, jnp.int32))
+    if isinstance(v, (float, np.floating)):
+        return S.Value(jnp.asarray(v, jnp.float32))
+    arr = jnp.asarray(v)
+    if arr.dtype == jnp.float64:
+        arr = arr.astype(jnp.float32)
+    if arr.dtype == jnp.int64:
+        arr = arr.astype(jnp.int32)
+    return S.Value(arr)
+
+
+_SIG_DTYPES = {"float64": "float32", "int64": "int32"}
+
+
+def param_signature(params: dict | None) -> tuple:
+    """The shape of a parameter set: names, dtypes, shapes — and for
+    strings the value itself (the dictionary is host-side metadata baked
+    into the trace).  Value changes within a signature never re-plan.
+    Computed host-side: no device arrays are created here (the hot path
+    calls this on every execute)."""
+    if not params:
+        return ()
+    out = []
+    for name in sorted(params):
+        v = params[name]
+        if isinstance(v, str):
+            out.append((name, "str", v))
+        elif isinstance(v, S.Value):
+            # the dictionary is baked into the trace as host metadata, so
+            # it is part of the signature (same codes, different vocab
+            # would otherwise warm-hit the wrong executable)
+            vocab = None
+            if v.dictionary is not None:
+                vocab = tuple(
+                    v.dictionary.decode(i) for i in range(len(v.dictionary))
+                )
+            out.append((name, str(v.data.dtype), tuple(v.data.shape), vocab))
+        elif isinstance(v, bool):
+            out.append((name, "bool", ()))
+        elif isinstance(v, (int, np.integer)):
+            out.append((name, "int32", ()))
+        elif isinstance(v, (float, np.floating)):
+            out.append((name, "float32", ()))
+        elif hasattr(v, "dtype") and hasattr(v, "shape"):
+            dt = str(v.dtype)
+            out.append((name, _SIG_DTYPES.get(dt, dt), tuple(v.shape)))
+        else:
+            arr = np.asarray(v)
+            dt = str(arr.dtype)
+            out.append((name, _SIG_DTYPES.get(dt, dt), tuple(arr.shape)))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
+# compiled executables
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Executable:
+    fn: Any  # () kwargs-free jitted callable wrapper, see Session._executable
+    plan: R.RelNode
+    out_dicts: dict  # column name -> DictEncoding | None (trace-time capture)
+    stats: dict  # trace-time logical reads of one execution
+
+
+# ---------------------------------------------------------------------------
+# Session
+# ---------------------------------------------------------------------------
+
+
+class Session:
+    """Catalog + registry + plan/executable caches; the engine's public
+    entry point.  ``prepare`` returns a :class:`PreparedStatement`;
+    ``execute`` is prepare-and-run (sharing the same caches)."""
+
+    #: bound on each cache (plans / executables / prepared handles)
+    CACHE_CAP = 256
+
+    def __init__(self, constraints: InlineConstraints | None = None,
+                 cache_cap: int | None = None):
+        self.catalog: dict[str, Table] = {}
+        self.registry: dict[str, UdfDef] = {}
+        self.constraints = constraints or InlineConstraints()
+        cap = self.CACHE_CAP if cache_cap is None else cache_cap
+        self._plans: _BoundedCache = _BoundedCache(cap)
+        self._execs: _BoundedCache = _BoundedCache(cap)
+        self._prepared: _BoundedCache = _BoundedCache(cap)
+        self.cache_stats = {
+            "plan_hits": 0, "plan_misses": 0,
+            "exec_hits": 0, "exec_misses": 0,
+        }
+
+    # -- DDL ---------------------------------------------------------------
+    # name/table are positional-only so columns may be called "name"/"table"
+    def create_table(self, name: str, table: Table | None = None, /, **arrays):
+        t = table if table is not None else Table.from_arrays(**arrays)
+        t.compute_stats()  # histograms for the optimizer (§Perf)
+        self.catalog[name] = t
+        return t
+
+    def create_function(self, udf: UdfDef):
+        self.registry[udf.name] = udf
+        return udf
+
+    # -- public API --------------------------------------------------------
+    def prepare(self, query, policy: ExecutionPolicy | str = FROID
+                ) -> "PreparedStatement":
+        policy = resolve_policy(policy)
+        node = query.node if isinstance(query, Q) else query
+        key = (plan_fingerprint(node), policy.fingerprint())
+        ps = self._prepared.get(key)
+        if ps is None:
+            ps = PreparedStatement(self, node, policy)
+            self._prepared[key] = ps
+        ps._ensure_plan()  # cold: bind + optimize now
+        return ps
+
+    def execute(self, query, policy: ExecutionPolicy | str = FROID,
+                params: dict | None = None) -> QueryResult:
+        return self.prepare(query, policy).execute(params=params)
+
+    def explain(self, query, policy: ExecutionPolicy | str = FROID) -> str:
+        policy = resolve_policy(policy)
+        node = query.node if isinstance(query, Q) else query
+        plan, _ = self._cached_plan(node, plan_fingerprint(node), policy)
+        return O.explain(plan)
+
+    # -- cache-state tokens ------------------------------------------------
+    def _catalog_token(self) -> tuple:
+        return tuple(
+            (name, _stamp(t), t.num_rows, tuple(t.columns))
+            for name, t in sorted(self.catalog.items())
+        )
+
+    def _registry_token(self) -> tuple:
+        return tuple(
+            (name, _stamp(u)) for name, u in sorted(self.registry.items())
+        )
+
+    def _constraints_token(self) -> tuple:
+        return _norm(self.constraints)
+
+    def _env_token(self) -> tuple:
+        return (self._catalog_token(), self._registry_token(),
+                self._constraints_token())
+
+    # -- planning ----------------------------------------------------------
+    def _build_plan(self, node: R.RelNode, policy: ExecutionPolicy) -> R.RelNode:
+        plan = node
+        # the query's intended output schema (before inlining widens rows)
+        try:
+            wanted = R.output_columns(plan, self.catalog)
+        except Exception:
+            wanted = None
+        if policy.inline_udfs:
+            binder = Binder(self.registry, self.constraints)
+            plan = binder.bind(plan)
+        if policy.optimize:
+            plan = O.optimize(
+                plan, self.catalog, required=set(wanted) if wanted else None
+            )
+        if wanted is not None:
+            try:
+                have = R.output_columns(plan, self.catalog)
+            except Exception:
+                have = None
+            if have is not None and have != wanted:
+                plan = R.Project(plan, wanted)
+        return plan
+
+    def _cached_plan(self, node: R.RelNode, query_fp: tuple,
+                     policy: ExecutionPolicy) -> tuple[R.RelNode, bool]:
+        """(plan, came-from-cache).  Keyed only on the plan-relevant policy
+        axes — FROID and HEKATON runs of the same inlined query share."""
+        key = (query_fp, policy.inline_udfs, policy.optimize, self._env_token())
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.cache_stats["plan_hits"] += 1
+            return plan, True
+        self.cache_stats["plan_misses"] += 1
+        plan = self._build_plan(node, policy)
+        self._plans[key] = plan
+        return plan, False
+
+    # -- compiled executables ----------------------------------------------
+    def _catalog_args(self, token: tuple | None = None):
+        """Catalog arrays as the jit argument pytree, cached per catalog
+        token — rebuilding per call would put O(tables × columns) validity
+        allocations inside every warm execute.  ``token`` lets callers that
+        already computed the catalog token skip recomputing it."""
+        if token is None:
+            token = self._catalog_token()
+        cached = getattr(self, "_args_cache", None)
+        if cached is not None and cached[0] == token:
+            return cached[1]
+        args = {
+            tname: {c: (col.data, col.validity()) for c, col in t.columns.items()}
+            for tname, t in self.catalog.items()
+        }
+        self._args_cache = (token, args)
+        return args
+
+    def _executable(self, node: R.RelNode, query_fp: tuple,
+                    policy: ExecutionPolicy, params: dict | None,
+                    env_token: tuple | None = None
+                    ) -> tuple[_Executable, bool, bool]:
+        """(executable, exec-cache-hit, plan-cache-hit)."""
+        sig = param_signature(params)
+        if env_token is None:
+            env_token = self._env_token()
+        key = (query_fp, policy.fingerprint(), env_token, sig)
+        entry = self._execs.get(key)
+        if entry is not None:
+            self.cache_stats["exec_hits"] += 1
+            return entry, True, True
+        self.cache_stats["exec_misses"] += 1
+        plan, plan_hit = self._cached_plan(node, query_fp, policy)
+
+        # iterative hook for UDF calls left in the plan (froid OFF, or
+        # hybrid plans where the inlining budget ran out).  'scan' mode is
+        # the only jit-traceable interpreter, so the compiled path always
+        # uses it regardless of policy.udf_mode.
+        has_udf_calls = any(
+            isinstance(e, S.UdfCall)
+            for n in R.walk_plan(plan)
+            for ex in n.exprs()
+            for e in S.walk(ex)
+        )
+        hook = None
+        if has_udf_calls:
+            interp = Interpreter(self.catalog, self.registry, mode="scan")
+            hook = interp.eval_udf_call
+
+        # host-side metadata (dictionaries) stays captured; data goes by
+        # argument so XLA cannot constant-fold the query away — warm calls
+        # measure real execution.
+        meta = {
+            tname: {c: col.dictionary for c, col in t.columns.items()}
+            for tname, t in self.catalog.items()
+        }
+        pdicts = {
+            name: _param_value(v).dictionary for name, v in (params or {}).items()
+        }
+        out_dicts: dict = {}
+        trace_stats: dict = {}
+
+        def raw(table_args, param_args):
+            catalog = {
+                tname: Table(
+                    {
+                        c: Column(data, valid, meta[tname][c])
+                        for c, (data, valid) in cols.items()
+                    }
+                )
+                for tname, cols in table_args.items()
+            }
+            pvals = {
+                name: S.Value(data, valid, pdicts[name])
+                for name, (data, valid) in param_args.items()
+            }
+            ex = Executor(catalog, udf_column_evaluator=hook,
+                          use_pallas_agg=policy.pallas_agg)
+            out = ex.execute(plan, params=pvals)
+            for n, c in out.table.columns.items():
+                out_dicts[n] = c.dictionary  # host metadata, set at trace
+            trace_stats.update(ex.stats)
+            cols = {n: (c.data, c.validity()) for n, c in out.table.columns.items()}
+            return out.mask, cols
+
+        jitted = jax.jit(raw)
+
+        def fn(param_values: dict | None = None,
+               catalog_token: tuple | None = None):
+            pargs = {}
+            for pname, x in (param_values or {}).items():
+                v = _param_value(x)
+                pargs[pname] = (v.data, v.validity())
+            return jitted(self._catalog_args(catalog_token), pargs)
+
+        entry = _Executable(fn, plan, out_dicts, trace_stats)
+        self._execs[key] = entry
+        return entry, False, plan_hit
+
+
+# ---------------------------------------------------------------------------
+# PreparedStatement
+# ---------------------------------------------------------------------------
+
+
+class PreparedStatement:
+    """A query bound to a session + policy.  Calling conventions:
+
+    * ``execute(params=…) -> QueryResult`` — the client path.  Cold call
+      plans + binds (+ jits under a compiling policy); warm calls reuse the
+      session caches and set ``QueryResult.cache_hit``.
+    * ``stmt(params=…)`` — the raw device-level call of the compiled
+      executable (mask + columns, nothing materialized); what benchmark
+      timing loops invoke.
+    """
+
+    def __init__(self, session: Session, node: R.RelNode,
+                 policy: ExecutionPolicy):
+        self.session = session
+        self.node = node
+        self.policy = policy
+        self._query_fp = plan_fingerprint(node)
+        self._interp: Interpreter | None = None
+        # stamp of the last plan this statement executed eagerly — a
+        # plan-cache hit only counts as warm once *this statement* has run
+        # that plan before (prepare builds the plan; the first execute is
+        # still the cold half of the lifecycle)
+        self._executed_plan: int | None = None
+
+    # -- plumbing ----------------------------------------------------------
+    def _ensure_plan(self) -> R.RelNode:
+        plan, _ = self.session._cached_plan(self.node, self._query_fp, self.policy)
+        return plan
+
+    @property
+    def plan(self) -> R.RelNode:
+        return self._ensure_plan()
+
+    def explain(self) -> str:
+        return O.explain(self._ensure_plan())
+
+    def _eager_interp(self) -> Interpreter:
+        # kept across executes so the per-statement plan cache stays warm —
+        # but rebuilt if the session's catalog/registry dicts were rebound
+        # wholesale (benchmarks assign `db.catalog = {...}`); the identity
+        # check is on live objects, so it cannot be fooled by id reuse
+        interp = self._interp
+        if (interp is None
+                or interp.catalog is not self.session.catalog
+                or interp.registry is not self.session.registry):
+            interp = self._interp = Interpreter(
+                self.session.catalog, self.session.registry,
+                mode=self.policy.udf_mode,
+                jit_statements=self.policy.jit_statements,
+            )
+        return interp
+
+    # -- execution ---------------------------------------------------------
+    def __call__(self, params: dict | None = None):
+        """Raw call: device outputs only (see class docstring)."""
+        if not self.policy.compile_plan:
+            return self.execute(params=params).masked.mask
+        env_token = self.session._env_token()
+        entry, _, _ = self.session._executable(
+            self.node, self._query_fp, self.policy, params, env_token
+        )
+        return entry.fn(params, env_token[0])
+
+    def execute(self, params: dict | None = None) -> QueryResult:
+        if self.policy.compile_plan:
+            return self._execute_compiled(params)
+        return self._execute_eager(params)
+
+    def _execute_compiled(self, params) -> QueryResult:
+        env_token = self.session._env_token()
+        entry, exec_hit, plan_hit = self.session._executable(
+            self.node, self._query_fp, self.policy, params, env_token
+        )
+        t0 = time.perf_counter()
+        mask, cols = entry.fn(params, env_token[0])
+        jax.block_until_ready(mask)
+        elapsed = time.perf_counter() - t0
+        table = Table(
+            {n: Column(data, valid, entry.out_dicts.get(n))
+             for n, (data, valid) in cols.items()}
+        )
+        masked = MaskedTable(table, mask)
+        stats = {**entry.stats, "compiled": True}
+        return QueryResult(masked, entry.plan, elapsed, stats,
+                           policy=self.policy,
+                           cache_hit=exec_hit and plan_hit)
+
+    def _execute_eager(self, params) -> QueryResult:
+        plan, plan_hit = self.session._cached_plan(
+            self.node, self._query_fp, self.policy
+        )
+        warm = plan_hit and self._executed_plan == _stamp(plan)
+        self._executed_plan = _stamp(plan)
+        interp = self._eager_interp()
+        executor = Executor(
+            self.session.catalog,
+            udf_column_evaluator=interp.eval_udf_call,
+            use_pallas_agg=self.policy.pallas_agg,
+        )
+        pvals = {n: _param_value(v) for n, v in (params or {}).items()}
+        before = dict(interp.stats)
+        t0 = time.perf_counter()
+        masked = executor.execute(plan, params=pvals)
+        jax.block_until_ready(masked.mask)
+        elapsed = time.perf_counter() - t0
+        # interpreter stats are cumulative over the statement's lifetime;
+        # report this execution's delta
+        delta = {k: interp.stats[k] - before.get(k, 0) for k in interp.stats}
+        stats = {**executor.stats, **delta}
+        return QueryResult(masked, plan, elapsed, stats,
+                           policy=self.policy, cache_hit=warm)

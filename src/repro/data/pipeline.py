@@ -16,7 +16,18 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import Database, UdfBuilder, lit, param, udf, var, col, scan
+from repro.core import (
+    FROID,
+    INTERPRETED,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    udf,
+    var,
+)
 
 
 def synthetic_corpus(seed: int, step: int, batch: int, seq_len: int, vocab: int,
@@ -29,7 +40,7 @@ def synthetic_corpus(seed: int, step: int, batch: int, seq_len: int, vocab: int,
     return toks
 
 
-def default_transforms(db: Database):
+def default_transforms(db):
     """Imperative per-example rules compiled by Froid.
 
     keep_example(doc_score, length)  -> quality filter
@@ -66,8 +77,15 @@ class DataPipeline:
     froid: bool = True
 
     def __post_init__(self):
-        self.db = Database()
-        default_transforms(self.db)
+        self.session = Session()
+        default_transforms(self.session)
+        # fresh examples table per batch -> eager froid (whole-plan jit
+        # would recompile every step)
+        self.policy = FROID.eager() if self.froid else INTERPRETED
+        self._query = scan("examples").compute(
+            keep=udf("keep_example", col("score"), col("length")),
+            w=udf("loss_weight", col("score"), col("repeats")),
+        ).project("keep", "w")
 
     def __iter__(self):
         step = 0
@@ -90,12 +108,8 @@ class DataPipeline:
             "length": np.full(n, self.seq_len, np.int32),
             "repeats": rng.integers(0, 4, n).astype(np.int32),
         }
-        self.db.create_table("examples", **meta)
-        q = scan("examples").compute(
-            keep=udf("keep_example", col("score"), col("length")),
-            w=udf("loss_weight", col("score"), col("repeats")),
-        ).project("keep", "w")
-        res = self.db.run(q, froid=self.froid)
+        self.session.create_table("examples", **meta)
+        res = self.session.execute(self._query, self.policy)
         keep = np.asarray(res.table.columns["keep"].data).astype(bool)
         w = np.asarray(res.table.columns["w"].data).astype(np.float32)
         mask = keep[:, None] & np.ones((n, self.seq_len), bool)

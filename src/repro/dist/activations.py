@@ -1,0 +1,55 @@
+"""Activation batch-sharding constraints.
+
+``shard_batch`` pins the batch axis of an activation to the ``data`` (and
+``pod``) mesh axes via ``with_sharding_constraint`` — called at the
+super-block boundaries so XLA keeps activations data-parallel through the
+whole stack instead of re-deciding per op.
+
+The mesh is process-global context (set by launchers around lower/compile,
+cleared after): model code stays mesh-agnostic, and on single-device test
+runs — no mesh set — ``shard_batch`` is the identity.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+_ACTIVATION_MESH = None
+
+
+def set_activation_mesh(mesh) -> None:
+    """Install ``mesh`` as the activation-sharding context."""
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = mesh
+
+
+def clear_activation_mesh() -> None:
+    global _ACTIVATION_MESH
+    _ACTIVATION_MESH = None
+
+
+def current_activation_mesh():
+    return _ACTIVATION_MESH
+
+
+def shard_batch(x):
+    """Constrain dim 0 of ``x`` to the data(+pod) mesh axes; the trailing
+    feature dim stays on ``model`` when it divides (matching the TP weight
+    layout, so embedding gathers/projections don't force a reshard).
+    Identity when no mesh is installed or the batch doesn't divide."""
+    from repro.dist.sharding import pick_data_axes
+
+    mesh = _ACTIVATION_MESH
+    if mesh is None or getattr(x, "ndim", 0) < 1:
+        return x
+    entry = pick_data_axes(mesh, x.shape[0])
+    if entry is None:
+        return x
+    entries = [entry] + [None] * (x.ndim - 1)
+    model = mesh.shape.get("model", 1)
+    # rank >= 3 only: (B, S, D) activations carry a feature dim; rank-2
+    # arrays here are token/label ids whose trailing dim is sequence
+    if x.ndim >= 3 and model > 1 and x.shape[-1] % model == 0:
+        entries[-1] = "model"
+    spec = PartitionSpec(*entries)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

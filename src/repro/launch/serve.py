@@ -25,12 +25,16 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--admission", default="froid",
+                    choices=["froid", "interpreted", "hekaton"],
+                    help="ExecutionPolicy preset for the admission rules")
     args = ap.parse_args()
 
     cfg = smoke_config_for(args.arch) if args.smoke else config_for(args.arch)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
-    eng = ServeEngine(model, params, slots=args.slots, max_len=args.max_len)
+    eng = ServeEngine(model, params, slots=args.slots, max_len=args.max_len,
+                      admission_policy=args.admission)
 
     rng = np.random.default_rng(args.seed)
     reqs = [

@@ -6,30 +6,42 @@ budgeting, tier routing, temperature selection) over the *whole queued
 request table* as one set-oriented plan, instead of a Python loop over
 requests.  The rules are authored imperatively (UdfBuilder) and compiled
 by the same binder/optimizer as any other UDF.
+
+The scheduler holds a :class:`Session` with an eager policy: the queue
+table is re-loaded every tick (fresh data, fresh stats), so plans rebuild
+per tick, but the registry-keyed statement caches inside the session stay
+warm across ticks.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.core import (
-    Database,
+    FROID,
+    INTERPRETED,
+    ExecutionPolicy,
+    Session,
     UdfBuilder,
     case,
     col,
     lit,
     param,
+    resolve_policy,
     scan,
     udf,
     var,
 )
 
 
-def default_rules(db: Database) -> None:
+def default_rules(db) -> None:
     """The built-in admission rules (users register their own the same way).
 
     token_budget(tier, prompt_len, requested) -> granted max_new_tokens
     temp_for(tier, requested_temp)            -> effective temperature
     admit(prompt_len, queue_depth)            -> bool
+
+    ``db`` is anything with ``create_function`` (a Session or the legacy
+    Database shim).
     """
     u = UdfBuilder("token_budget",
                    [("tier", "int32"), ("plen", "int32"), ("req", "int32")],
@@ -68,19 +80,41 @@ def default_rules(db: Database) -> None:
     db.create_function(u.build())
 
 
-class AdmissionPolicy:
-    """Evaluates the rules over the queued-request table, set-oriented."""
+def _tick_query():
+    return (
+        scan("queue")
+        .compute(
+            admit=udf("admit", col("plen"), col("depth")),
+            granted=udf("token_budget", col("tier"), col("plen"), col("req")),
+            temp_eff=udf("temp_for", col("tier"), col("temp")),
+        )
+        .project("admit", "granted", "temp_eff")
+    )
 
-    def __init__(self, froid: bool = True):
-        self.db = Database()
-        default_rules(self.db)
-        self.froid = froid
+
+class AdmissionPolicy:
+    """Evaluates the rules over the queued-request table, set-oriented.
+
+    ``policy`` is an :class:`ExecutionPolicy` or preset name; the legacy
+    ``froid`` flag maps True -> FROID, False -> INTERPRETED.
+    """
+
+    def __init__(self, froid: bool = True,
+                 policy: ExecutionPolicy | str | None = None):
+        self.session = Session()
+        default_rules(self.session)
+        if policy is None:
+            policy = FROID if froid else INTERPRETED
+        # the queue table is re-loaded every tick, so whole-plan jit would
+        # recompile per tick — run the chosen policy eagerly
+        self.policy = resolve_policy(policy).eager()
+        self._query = _tick_query()
 
     def evaluate(self, requests: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         """requests: columns tier, prompt_len, max_new_tokens, temperature.
         Returns columns: admit (bool), granted (int32), temp (float32)."""
         n = len(requests["tier"])
-        self.db.create_table(
+        self.session.create_table(
             "queue",
             tier=requests["tier"].astype(np.int32),
             plen=requests["prompt_len"].astype(np.int32),
@@ -88,16 +122,7 @@ class AdmissionPolicy:
             temp=requests["temperature"].astype(np.float32),
             depth=np.full(n, n, np.int32),
         )
-        q = (
-            scan("queue")
-            .compute(
-                admit=udf("admit", col("plen"), col("depth")),
-                granted=udf("token_budget", col("tier"), col("plen"), col("req")),
-                temp_eff=udf("temp_for", col("tier"), col("temp")),
-            )
-            .project("admit", "granted", "temp_eff")
-        )
-        res = self.db.run(q, froid=self.froid)
+        res = self.session.execute(self._query, self.policy)
         return {
             "admit": np.asarray(res.table.columns["admit"].data).astype(bool),
             "granted": np.asarray(res.table.columns["granted"].data).astype(np.int32),

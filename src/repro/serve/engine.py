@@ -37,13 +37,17 @@ class Completed:
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: int | None = None, froid_admission: bool = True,
-                 seed: int = 0):
+                 admission_policy=None, seed: int = 0):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
-        self.admission = AdmissionPolicy(froid=froid_admission)
+        # admission_policy: ExecutionPolicy or preset name ("froid",
+        # "interpreted", "hekaton"); froid_admission is the legacy switch
+        self.admission = AdmissionPolicy(
+            froid=froid_admission, policy=admission_policy
+        )
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
 

@@ -11,6 +11,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.dist.activations import shard_batch
 from repro.dist.compress import compress_tree, decompress_tree, init_error_tree
 from repro.train.optim import AdamWConfig, adamw_init, adamw_update
 
@@ -61,6 +62,10 @@ def make_train_step(
 
         def body(carry, one):
             acc_loss, acc_g = carry
+            # re-pin each microbatch to the data axes: without this the
+            # partitioner reshards the scan slice against the sharded
+            # embedding gather (invalid dynamic-slice under SPMD)
+            one = jax.tree.map(shard_batch, one)
             l, g = jax.value_and_grad(loss_fn)(params, one)
             return (acc_loss + l, jax.tree.map(jnp.add, acc_g, g)), 0
 

@@ -1,0 +1,336 @@
+"""Session / PreparedStatement / ExecutionPolicy API tests.
+
+Covers the prepare-once-execute-many contract: policy presets map onto the
+legacy kwarg combinations, the plan cache warm-hits on (query, policy),
+changed parameters re-specialize only when the signature changes, DDL
+invalidates, and the Database shim stays equivalent to the Session."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    Database,
+    ExecutionPolicy,
+    QueryResult,
+    RunResult,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    plan_fingerprint,
+    resolve_policy,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+
+
+def _populate(db, n_cust=40, n_ord=200, seed=0):
+    rng = np.random.default_rng(seed)
+    db.create_table("customer", c_custkey=np.arange(n_cust))
+    db.create_table(
+        "orders",
+        o_custkey=rng.integers(0, n_cust, n_ord),
+        o_totalprice=rng.uniform(10, 1000, n_ord).astype(np.float32),
+    )
+    u = UdfBuilder("total_price", [("key", "int32")], "float32")
+    u.declare("price", "float32")
+    u.select({"price": sum_(col("o_totalprice"))}, frm=scan("orders"),
+             where=col("o_custkey") == param("key"))
+    with u.if_(var("price").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("price"))
+    db.create_function(u.build())
+
+
+def _query():
+    return scan("customer").compute(total=udf("total_price", col("c_custkey")))
+
+
+def _totals(res) -> np.ndarray:
+    return np.asarray(res.table.columns["total"].data)
+
+
+# ---------------------------------------------------------------------------
+# policy presets
+# ---------------------------------------------------------------------------
+
+
+def test_presets_map_to_legacy_kwargs():
+    """The named presets are exactly the old kwarg combinations."""
+    assert FROID == ExecutionPolicy.from_kwargs(froid=True, mode="python",
+                                                compiled=True)
+    assert INTERPRETED == ExecutionPolicy.from_kwargs(froid=False,
+                                                      mode="python")
+    assert HEKATON == ExecutionPolicy.from_kwargs(froid=False, mode="scan",
+                                                  compiled=True)
+    # names are labels, not identity
+    assert FROID == ExecutionPolicy(name="renamed")
+    assert resolve_policy("hekaton") is HEKATON
+    assert resolve_policy(FROID) is FROID
+    with pytest.raises(KeyError):
+        resolve_policy("no_such_preset")
+
+
+def test_policy_rejects_python_mode_compilation():
+    with pytest.raises(ValueError):
+        ExecutionPolicy(inline_udfs=False, udf_mode="python", compile_plan=True)
+    with pytest.raises(ValueError):
+        ExecutionPolicy(udf_mode="nope")
+
+
+def test_policy_eager_variant():
+    e = FROID.eager()
+    assert not e.compile_plan and e.inline_udfs
+    assert INTERPRETED.eager() is INTERPRETED
+
+
+def test_presets_agree_on_results(rng):
+    s = Session()
+    _populate(s)
+    q = _query()
+    a = _totals(s.execute(q, FROID))
+    b = _totals(s.execute(q, INTERPRETED))
+    c = _totals(s.execute(q, HEKATON))
+    np.testing.assert_allclose(a, b, rtol=1e-4)
+    np.testing.assert_allclose(a, c, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan-cache behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_warm_execute_hits_cache_and_skips_planning():
+    s = Session()
+    _populate(s)
+    stmt = s.prepare(_query(), FROID)
+    r1 = stmt.execute()
+    misses = dict(s.cache_stats)
+    r2 = stmt.execute()
+    assert not r1.cache_hit and r2.cache_hit
+    # warm call did not build a plan or an executable
+    assert s.cache_stats["plan_misses"] == misses["plan_misses"]
+    assert s.cache_stats["exec_misses"] == misses["exec_misses"]
+    assert s.cache_stats["exec_hits"] == misses["exec_hits"] + 1
+    np.testing.assert_allclose(_totals(r1), _totals(r2))
+    # warm should be much faster than the jit-paying cold call
+    assert r2.elapsed_s < r1.elapsed_s
+
+
+def test_same_query_new_prepare_shares_cache():
+    s = Session()
+    _populate(s)
+    s.prepare(_query(), FROID).execute()
+    r = s.prepare(_query(), FROID).execute()  # structurally equal, new objects
+    assert r.cache_hit
+
+
+def test_distinct_policies_do_not_share_executables():
+    s = Session()
+    _populate(s)
+    s.prepare(_query(), FROID).execute()
+    r = s.prepare(_query(), HEKATON).execute()
+    assert not r.cache_hit
+
+
+def test_plan_fingerprint_structural():
+    q1, q2 = _query(), _query()
+    assert q1 is not q2
+    assert plan_fingerprint(q1.node) == plan_fingerprint(q2.node)
+    q3 = scan("customer").compute(total=udf("total_price", col("c_custkey") + 1))
+    assert plan_fingerprint(q1.node) != plan_fingerprint(q3.node)
+
+
+def test_ddl_invalidates_plan_cache():
+    s = Session()
+    _populate(s)
+    stmt = s.prepare(_query(), FROID)
+    stmt.execute()
+    assert stmt.execute().cache_hit
+    s.create_table("customer", c_custkey=np.arange(55))  # DDL
+    r = stmt.execute()
+    assert not r.cache_hit
+    assert r.masked.num_rows == 55
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+
+def test_param_value_change_stays_warm_signature_change_respecializes():
+    s = Session()
+    _populate(s)
+    q = (scan("customer").filter(col("c_custkey") < param("k"))
+         .compute(total=udf("total_price", col("c_custkey"))))
+    stmt = s.prepare(q, FROID)
+    r10 = stmt.execute(params={"k": 10})
+    r20 = stmt.execute(params={"k": 20})  # same signature: warm
+    assert not r10.cache_hit and r20.cache_hit
+    assert int(np.asarray(r10.masked.mask).sum()) == 10
+    assert int(np.asarray(r20.masked.mask).sum()) == 20
+    rf = stmt.execute(params={"k": 20.0})  # dtype change: re-specialize
+    assert not rf.cache_hit
+    assert int(np.asarray(rf.masked.mask).sum()) == 20
+
+
+def test_string_value_params_with_distinct_dictionaries():
+    """Two S.Value params with the same codes but different dictionaries
+    must not share a compiled executable (the dictionary is host metadata
+    baked into the trace)."""
+    import jax.numpy as jnp
+
+    from repro.core import scalar as S
+    from repro.tables.table import DictEncoding
+
+    s = Session()
+    s.create_table("p", cur=np.array(["USD", "EUR", "USD"]), v=np.arange(3))
+    q = scan("p").filter(col("cur") == param("c"))
+    stmt = s.prepare(q, FROID)
+
+    def val(currency):
+        return S.Value(jnp.asarray(0, jnp.int32), None, DictEncoding([currency]))
+
+    n_usd = int(np.asarray(stmt.execute(params={"c": val("USD")}).masked.mask).sum())
+    n_eur = int(np.asarray(stmt.execute(params={"c": val("EUR")}).masked.mask).sum())
+    assert (n_usd, n_eur) == (2, 1)
+    # plain-string params likewise
+    assert int(np.asarray(stmt.execute(params={"c": "EUR"}).masked.mask).sum()) == 1
+
+
+def test_params_on_eager_policy():
+    s = Session()
+    _populate(s)
+    q = (scan("customer").filter(col("c_custkey") < param("k"))
+         .compute(total=udf("total_price", col("c_custkey"))))
+    r = s.execute(q, INTERPRETED, params={"k": 7})
+    assert int(np.asarray(r.masked.mask).sum()) == 7
+
+
+# ---------------------------------------------------------------------------
+# QueryResult surface
+# ---------------------------------------------------------------------------
+
+
+def test_query_result_surface():
+    s = Session()
+    _populate(s)
+    r = s.execute(_query(), FROID)
+    assert isinstance(r, QueryResult)
+    assert RunResult is QueryResult  # legacy alias
+    assert "Scan" in r.explain and "customer" in r.explain
+    assert r.policy == FROID
+    assert r.stats.get("compiled") is True
+    assert r.stats["rows_scanned"] > 0 and r.stats["bytes_scanned"] > 0
+    r2 = s.execute(_query(), INTERPRETED)
+    assert "invocations" in r2.stats and r2.stats["invocations"] > 0
+
+
+def test_executor_public_stats():
+    from repro.core import Executor
+
+    s = Session()
+    _populate(s)
+    plan = s.prepare(scan("orders"), INTERPRETED).plan
+    ex = Executor(s.catalog)
+    ex.execute(plan)
+    st = ex.stats
+    assert st["rows_scanned"] == 200
+    st["rows_scanned"] = -1  # the property returns a copy
+    assert ex.stats["rows_scanned"] == 200
+
+
+# ---------------------------------------------------------------------------
+# Database shim equivalence
+# ---------------------------------------------------------------------------
+
+
+def test_database_shim_matches_session_quickstart():
+    db = Database()
+    _populate(db)
+    s = Session()
+    _populate(s)
+    q = _query()
+    r_db = db.run(q, froid=True)
+    r_s = s.execute(q, FROID.eager())
+    np.testing.assert_allclose(_totals(r_db), _totals(r_s), rtol=1e-5)
+    r_db_off = db.run(q, froid=False, mode="scan")
+    r_s_off = s.execute(q, HEKATON.eager())
+    np.testing.assert_allclose(_totals(r_db_off), _totals(r_s_off), rtol=1e-5)
+    # legacy compiled interface: (callable, plan)
+    fn, plan = db.run_compiled(q, froid=True)
+    mask, cols = fn()
+    assert "total" in cols
+    assert plan is not None
+
+
+def test_wholesale_catalog_rebind_refreshes_interpreter():
+    """Rebinding db.catalog to a new dict must not leave the cached eager
+    interpreter reading the old tables through its captured reference."""
+    db = Database()
+    _populate(db, n_ord=100, seed=1)
+    q = _query()
+    db.run(q, froid=False, mode="python")  # caches the interpreter
+    fresh = Database()
+    _populate(fresh, n_cust=40, n_ord=100, seed=2)  # different orders data
+    db.catalog = dict(fresh.catalog)
+    r = db.run(q, froid=False, mode="python")
+    expect = fresh.run(q, froid=False, mode="python")
+    np.testing.assert_allclose(_totals(r), _totals(expect), rtol=1e-5)
+
+
+def test_table_reload_never_serves_stale_plan():
+    """Per-tick table reloads (identical schema/rows) must re-key the
+    caches even though the old table object is garbage."""
+    s = Session()
+    _populate(s)
+    q = _query()
+    first = _totals(s.execute(q, FROID))
+    rng = np.random.default_rng(9)
+    for _ in range(3):  # exercises allocator reuse of dead Table objects
+        s.create_table(
+            "orders",
+            o_custkey=rng.integers(0, 40, 200),
+            o_totalprice=rng.uniform(10, 1000, 200).astype(np.float32),
+        )
+        r = s.execute(q, FROID)
+        assert not r.cache_hit
+    assert not np.allclose(_totals(r), first)
+
+
+def test_cache_eviction_bounded():
+    s = Session(cache_cap=4)
+    _populate(s)
+    for i in range(10):
+        s.execute(scan("customer").filter(col("c_custkey") < lit(i)),
+                  HEKATON)
+    assert len(s._plans) <= 4 and len(s._execs) <= 4 and len(s._prepared) <= 4
+
+
+def test_fingerprint_distinguishes_large_array_constants():
+    from repro.core import scalar as S
+    from repro.core.session import _norm
+
+    a = np.arange(2000, dtype=np.float32)
+    b = a.copy()
+    b[1000] = -1.0
+    assert _norm(S.Const(a)) != _norm(S.Const(b))
+    assert _norm(S.Const(a)) == _norm(S.Const(a.copy()))
+
+
+def test_database_shim_attribute_surface():
+    db = Database()
+    _populate(db)
+    assert "customer" in db.catalog and "total_price" in db.registry
+    # benchmarks assign these wholesale
+    db.catalog = dict(db.catalog)
+    db.constraints = dataclasses.replace(db.constraints, max_plan_size=10)
+    assert db.session.constraints.max_plan_size == 10
+    assert db.explain(_query(), froid=True)

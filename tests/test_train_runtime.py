@@ -104,7 +104,10 @@ def test_compressed_training_converges():
     step = jax.jit(make_train_step(model, opt_cfg, compress=True))
     it = iter(pipe)
     losses = []
-    for _ in range(6):
+    # same 8-step horizon as test_train_loop_loss_decreases: the synthetic
+    # stream is noisy enough that even lossless training is not monotone
+    # over fewer steps
+    for _ in range(8):
         state, m = step(state, next(it))
         losses.append(float(m["loss"]))
     assert losses[-1] < losses[0]
