@@ -1,0 +1,130 @@
+"""Batched invocation: serial `execute` loop vs `execute_many` vs async
+pipelining, swept over the number of same-signature parameter sets.
+
+This is the engine-level analogue of the paper's set-oriented argument one
+level up: a prepared statement invoked N times serially pays N dispatches
+and N device syncs, while `execute_many` stacks the N parameter sets into
+one vmapped device program (tables broadcast) and pays one of each.
+
+    PYTHONPATH=src python -m benchmarks.bench_execute_many [--quick]
+
+Rows:
+    execmany/serial/N       — N sequential stmt.execute calls
+    execmany/batched/N      — one stmt.execute_many over the same N sets
+    execmany/async/N        — N execute_async dispatches, then N syncs
+speedup in `derived` is serial/batched wall time; results are asserted
+element-wise identical before timing.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    FROID,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+
+M_ROWS = 20_000
+N_ROWS = 2_000
+M_ROWS_QUICK = 5_000
+N_ROWS_QUICK = 500
+# quick mode keeps the full sweep — the CI gate reads the N=1024 row
+SWEEP = (1, 32, 1024)
+
+
+def _setup(quick: bool) -> Session:
+    m = M_ROWS_QUICK if quick else M_ROWS
+    n = N_ROWS_QUICK if quick else N_ROWS
+    db = Session()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, m),
+        d_val=rng.uniform(0, 100, m).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 400, n))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    return db
+
+
+def _q():
+    return (
+        scan("T")
+        .filter(col("a") < param("cutoff"))
+        .compute(v=udf("key_total", col("a")))
+        .project("v")
+    )
+
+
+def _check_identical(serial, batched):
+    for s, b in zip(serial, batched):
+        np.testing.assert_array_equal(
+            np.asarray(s.masked.mask), np.asarray(b.masked.mask)
+        )
+        np.testing.assert_allclose(
+            np.asarray(s.masked.table.columns["v"].data),
+            np.asarray(b.masked.table.columns["v"].data),
+            rtol=1e-5,
+        )
+
+
+def run(quick: bool = False):
+    db = _setup(quick)
+    stmt = db.prepare(_q(), FROID)
+    rng = np.random.default_rng(7)
+    stmt.execute(params={"cutoff": 1})  # pay the unbatched jit once
+
+    # the serial arm at N=1024 is the slow quadrant (that's the point), so
+    # each arm is timed in one representative warm pass; the timed passes
+    # double as the element-wise identity check between the two arms
+    for n in SWEEP:
+        params_list = [{"cutoff": int(c)} for c in rng.integers(1, 400, n)]
+
+        t0 = time.perf_counter()
+        serial_r = [stmt.execute(params=p) for p in params_list]
+        t_serial = time.perf_counter() - t0
+        emit(f"execmany/serial/{n}", t_serial / n * 1e6,
+             f"{n} dispatch+sync round trips")
+
+        stmt.execute_many(params_list)  # pay the per-bucket vmapped jit
+        t0 = time.perf_counter()
+        batched_r = stmt.execute_many(params_list)
+        t_batched = time.perf_counter() - t0
+        st = batched_r[0].stats
+        emit(f"execmany/batched/{n}", t_batched / n * 1e6,
+             f"speedup={t_serial / t_batched:.1f}x "
+             f"bucket={st.get('batch_bucket')} "
+             f"dispatch_us={st.get('dispatch_s', 0) * 1e6:.0f}")
+        _check_identical(serial_r, batched_r)
+
+        # async pipeline: dispatch all, then sync all — overlaps host
+        # dispatch of call i+1 with device compute of call i
+        t0 = time.perf_counter()
+        futures = [stmt.execute_async(params=p) for p in params_list]
+        for f in futures:
+            f.result().masked
+        t_async = time.perf_counter() - t0
+        emit(f"execmany/async/{n}", t_async / n * 1e6,
+             f"vs serial {t_serial / t_async:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,14 +1,40 @@
 """Benchmark driver — one function per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows and writes a machine-readable
+``BENCH_<run>.json`` artifact (suite → name → us_per_call) so the perf
+trajectory is trackable across PRs / CI runs.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig7,fig9,...]
+                                            [--run-id ID] [--json-dir DIR]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+import time
 import traceback
+from pathlib import Path
+
+
+def write_json(path: Path, run_id: str, args, rows: list[tuple],
+               failed: list[str]) -> None:
+    by_suite: dict[str, dict] = {}
+    for name, us, derived in rows:
+        suite = name.split("/", 1)[0]
+        by_suite.setdefault(suite, {})[name] = {
+            "us_per_call": round(float(us), 3), "derived": derived,
+        }
+    doc = {
+        "run": run_id,
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "quick": bool(args.quick),
+        "only": args.only,
+        "failed_suites": failed,
+        "suites": by_suite,
+    }
+    path.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {path}", file=sys.stderr)
 
 
 def main() -> None:
@@ -17,12 +43,19 @@ def main() -> None:
                     help="reduced cardinalities / query subsets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
-                         "table5,prepared")
+                         "table5,prepared,execmany")
+    ap.add_argument("--run-id", default=None,
+                    help="label baked into the BENCH_<run>.json filename "
+                         "(default: local timestamp)")
+    ap.add_argument("--json-dir", default=".",
+                    help="directory for the BENCH_<run>.json artifact "
+                         "('' disables JSON emission)")
     args, _ = ap.parse_known_args()
 
     from benchmarks import (
         bench_batchmode,
         bench_compile,
+        bench_execute_many,
         bench_factor,
         bench_invocations,
         bench_native,
@@ -30,6 +63,7 @@ def main() -> None:
         bench_resources,
         bench_tpch,
     )
+    from benchmarks.common import ROWS
 
     suites = {
         "fig7": bench_invocations.run,     # invocation-count sweep
@@ -40,6 +74,7 @@ def main() -> None:
         "table4": bench_batchmode.run,     # batch mode / relagg kernel
         "table5": bench_native.run,        # native compilation quadrant
         "prepared": bench_prepared.run,    # Session prepare/execute lifecycle
+        "execmany": bench_execute_many.run,  # batched invocation engine
     }
     only = args.only.split(",") if args.only else list(suites)
 
@@ -52,6 +87,11 @@ def main() -> None:
             failed.append(key)
             print(f"{key}/ERROR,0,{type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+
+    if args.json_dir != "":
+        run_id = args.run_id or time.strftime("%Y%m%d_%H%M%S")
+        write_json(Path(args.json_dir) / f"BENCH_{run_id}.json",
+                   run_id, args, ROWS, failed)
     if failed:
         raise SystemExit(f"benchmark suites failed: {failed}")
 

@@ -42,3 +42,14 @@ for c in sorted(done, key=lambda c: c.rid):
           f"{c.tokens[:6]}{'…' if len(c.tokens) > 6 else ''}")
 print("\ntier-0 request 100 was clamped to its token budget by the "
       "Froid-compiled admission UDFs (see repro/serve/admission.py).")
+
+# Online intake: the same requests submitted one at a time coalesce into
+# admission microbatches (execute_many) instead of per-request statements.
+for r in requests:
+    engine.submit(r)
+done2 = engine.drain()
+sched = engine.admission.scheduler
+print(f"\nonline path: {sched.stats['submitted']} submits -> "
+      f"{sched.stats['batches']} admission microbatch(es), "
+      f"{len(done2)} completions (coalescing scheduler, "
+      f"repro/serve/scheduler.py).")

@@ -1,8 +1,18 @@
 #!/usr/bin/env bash
-# Tier-1 verify: the repo's test suite.  pyproject.toml sets
-# pythonpath=src, so no PYTHONPATH export is needed — this script exists so
-# `scripts/verify.sh` is the one canonical spelling (extra pytest args pass
-# through, e.g. `scripts/verify.sh -m "not slow"`).
+# Tier-1 verify: the repo's test suite, then the perf smoke CI runs.
+# pyproject.toml sets pythonpath=src, so no PYTHONPATH export is needed for
+# pytest — this script exists so `scripts/verify.sh` is the one canonical
+# spelling (extra pytest args pass through, e.g.
+# `scripts/verify.sh -m "not slow"`).
+#
+# VERIFY_BENCH=0 skips the perf smoke (tests only).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+
+if [ "${VERIFY_BENCH:-1}" != "0" ]; then
+  echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only prepared,table4,execmany \
+      --run-id verify --json-dir /tmp
+fi

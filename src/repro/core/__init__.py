@@ -16,10 +16,13 @@ from repro.core.policy import (
     resolve_policy,
 )
 from repro.core.session import (
+    AsyncResult,
     PreparedStatement,
     QueryResult,
     RunResult,
     Session,
+    batch_bucket,
+    param_signature,
     plan_fingerprint,
 )
 from repro.core.frontend import (
@@ -63,7 +66,7 @@ __all__ = [
     "var", "Interpreter", "Assign", "Declare", "IfElse", "Return", "UdfDef",
     "explain", "optimize",
     # prepare/execute API
-    "Session", "PreparedStatement", "QueryResult", "ExecutionPolicy",
-    "FROID", "INTERPRETED", "HEKATON", "PRESETS", "resolve_policy",
-    "plan_fingerprint",
+    "Session", "PreparedStatement", "QueryResult", "AsyncResult",
+    "ExecutionPolicy", "FROID", "INTERPRETED", "HEKATON", "PRESETS",
+    "resolve_policy", "plan_fingerprint", "param_signature", "batch_bucket",
 ]

@@ -10,11 +10,32 @@ ROADMAP.md §Public API for the deprecation path.
 """
 from __future__ import annotations
 
+import warnings
+
 from repro.core import relalg as R
 from repro.core.binder import InlineConstraints
 from repro.core.policy import ExecutionPolicy
 from repro.core.session import QueryResult, RunResult, Session
 from repro.tables.table import Table
+
+_UNSET = object()
+
+
+def _warn_legacy_kwargs(method: str, **kwargs) -> dict:
+    """DeprecationWarning for explicitly-passed legacy kwarg spellings and
+    the resolved (default-filled) kwarg dict.  The kwargs themselves keep
+    working — this is the migration nudge toward Session/ExecutionPolicy."""
+    passed = sorted(k for k, v in kwargs.items() if v is not _UNSET)
+    if passed:
+        warnings.warn(
+            f"Database.{method}({', '.join(passed)}=…) kwarg spellings are "
+            "deprecated; use Session.prepare/execute with an ExecutionPolicy "
+            "preset (FROID / INTERPRETED / HEKATON) — see ROADMAP.md "
+            "§Public API",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+    return kwargs
 
 
 class Database:
@@ -68,29 +89,43 @@ class Database:
     def run(
         self,
         query,
-        froid: bool = True,
-        mode: str = "python",
-        optimize: bool = True,
+        froid=_UNSET,
+        mode=_UNSET,
+        optimize=_UNSET,
         params: dict | None = None,
-        jit_statements: bool = True,
-        pallas_agg: bool = False,
+        jit_statements=_UNSET,
+        pallas_agg=_UNSET,
     ) -> QueryResult:
         """Eager execution with the legacy kwarg axes (deprecated spelling
         of ``session.execute(query, policy, params)``)."""
-        policy = ExecutionPolicy.from_kwargs(
-            froid=froid, mode=mode, optimize=optimize,
+        kw = _warn_legacy_kwargs(
+            "run", froid=froid, mode=mode, optimize=optimize,
             jit_statements=jit_statements, pallas_agg=pallas_agg,
+        )
+        policy = ExecutionPolicy.from_kwargs(
+            froid=kw["froid"] if kw["froid"] is not _UNSET else True,
+            mode=kw["mode"] if kw["mode"] is not _UNSET else "python",
+            optimize=kw["optimize"] if kw["optimize"] is not _UNSET else True,
+            jit_statements=(kw["jit_statements"]
+                            if kw["jit_statements"] is not _UNSET else True),
+            pallas_agg=(kw["pallas_agg"]
+                        if kw["pallas_agg"] is not _UNSET else False),
             compiled=False,
         )
         return self.session.execute(query, policy, params=params)
 
-    def run_compiled(self, query, froid: bool = True, mode: str = "scan",
-                     optimize: bool = True):
+    def run_compiled(self, query, froid=_UNSET, mode=_UNSET, optimize=_UNSET):
         """Deprecated spelling of ``session.prepare(…)``: returns the raw
         compiled callable plus the plan (the old warm-cache benchmark
         interface).  ``PreparedStatement`` itself is the replacement."""
+        kw = _warn_legacy_kwargs(
+            "run_compiled", froid=froid, mode=mode, optimize=optimize,
+        )
         policy = ExecutionPolicy.from_kwargs(
-            froid=froid, mode=mode, optimize=optimize, compiled=True,
+            froid=kw["froid"] if kw["froid"] is not _UNSET else True,
+            mode=kw["mode"] if kw["mode"] is not _UNSET else "scan",
+            optimize=kw["optimize"] if kw["optimize"] is not _UNSET else True,
+            compiled=True,
         )
         ps = self.session.prepare(query, policy)
         return ps, ps.plan

@@ -298,13 +298,15 @@ class Executor:
         dicts = {m: lenv[m].dictionary for m in names}
 
         captured_dicts: dict = {}
+        # hoisted: executor state is row-independent, so building it inside
+        # the traced closure would rebuild it once per traced row
+        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
 
         def one_row(scalars):
             outer = {
                 m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names
             }
             outer = {**ctx.outer, **outer}
-            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
             res = sub.execute(node.right, params=ctx.params, outer=outer, vars=ctx.vars)
             out = {}
             for cname, c in res.table.columns.items():
@@ -601,11 +603,11 @@ class Executor:
             dicts[m] = v.dictionary
 
         captured: dict = {}
+        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
 
         def one(scalars):
             outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}
             outer = {**ctx.outer, **outer}
-            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
             res = sub.execute(expr.plan, params=ctx.params, outer=outer, vars=ctx.vars)
             v = _extract_scalar(res, expr.column)
             captured["dict"] = v.dictionary  # host metadata, set at trace time
@@ -631,10 +633,11 @@ class Executor:
             b = v.broadcast(n)
             cols[m] = (b.data, b.validity())
 
+        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+
         def one(scalars):
             outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}
             outer = {**ctx.outer, **outer}
-            sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
             res = sub.execute(expr.plan, params=ctx.params, outer=outer, vars=ctx.vars)
             return jnp.any(res.mask)
 

@@ -44,6 +44,20 @@ class ExecutionPolicy:
     #: hot path); False = eager op-by-op execution
     compile_plan: bool = True
 
+    # -- batch-execution knobs (tuning, not identity: two policies that
+    # differ only here compare equal and share plan/executable caches; the
+    # knobs shape how `execute_many` buckets work and how the serving
+    # scheduler coalesces, not what the compiled plan computes) -------------
+    #: largest single device batch `execute_many` will dispatch; larger
+    #: request lists split into chunks of at most this size
+    max_batch: int = dataclasses.field(default=1024, compare=False)
+    #: how long the coalescing scheduler holds a partial microbatch open
+    #: waiting for more same-statement arrivals (seconds)
+    coalesce_window_s: float = dataclasses.field(default=0.002, compare=False)
+    #: whether `execute_async` may defer device sync to result access;
+    #: False degrades it to eager synchronous execution (still correct)
+    allow_async: bool = dataclasses.field(default=True, compare=False)
+
     def __post_init__(self):
         if self.udf_mode not in ("python", "scan"):
             raise ValueError(f"udf_mode must be python|scan, got {self.udf_mode!r}")
@@ -66,6 +80,20 @@ class ExecutionPolicy:
         if not self.compile_plan:
             return self
         return dataclasses.replace(self, name=self.name, compile_plan=False)
+
+    def batched(self, max_batch: int | None = None,
+                coalesce_window_s: float | None = None,
+                allow_async: bool | None = None) -> "ExecutionPolicy":
+        """The same policy with different batch-execution knobs."""
+        return dataclasses.replace(
+            self,
+            name=self.name,
+            max_batch=self.max_batch if max_batch is None else max_batch,
+            coalesce_window_s=(self.coalesce_window_s
+                               if coalesce_window_s is None
+                               else coalesce_window_s),
+            allow_async=self.allow_async if allow_async is None else allow_async,
+        )
 
     @classmethod
     def from_kwargs(
@@ -93,7 +121,10 @@ class ExecutionPolicy:
 #: paper Table 5 presets
 FROID = ExecutionPolicy(name="froid")
 INTERPRETED = ExecutionPolicy(
-    name="interpreted", inline_udfs=False, udf_mode="python", compile_plan=False
+    name="interpreted", inline_udfs=False, udf_mode="python", compile_plan=False,
+    # eager host-driven control flow: no device program to batch or overlap,
+    # so execute_many degrades to a serial loop and async to sync
+    max_batch=64, allow_async=False,
 )
 HEKATON = ExecutionPolicy(name="hekaton", inline_udfs=False, udf_mode="scan")
 

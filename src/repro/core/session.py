@@ -99,18 +99,35 @@ class QueryResult:
     ``table`` (compacted host-visible rows) materializes lazily — the
     masked device form is the primary product, so timing loops that only
     touch ``masked`` never pay the host gather.
+
+    Batched/async executions defer even the masked form: they pass
+    ``materialize`` instead of ``masked``, and the first ``masked`` access
+    slices this call's rows out of the shared device batch (or syncs the
+    in-flight dispatch).  Until then the result is a stats-and-plan shell,
+    so fan-out paths never pay O(batch) per-result slicing up front.
     """
 
-    def __init__(self, masked: MaskedTable, plan: R.RelNode, elapsed_s: float,
-                 stats: dict, policy: ExecutionPolicy | None = None,
-                 cache_hit: bool = False):
-        self.masked = masked
+    def __init__(self, masked: MaskedTable | None, plan: R.RelNode,
+                 elapsed_s: float, stats: dict,
+                 policy: ExecutionPolicy | None = None,
+                 cache_hit: bool = False, materialize=None):
+        if masked is None and materialize is None:
+            raise ValueError("QueryResult needs masked or materialize")
+        self._masked = masked
+        self._materialize = materialize
         self.plan = plan
         self.elapsed_s = elapsed_s
         self.stats = stats
         self.policy = policy
         self.cache_hit = cache_hit
         self._table: Table | None = None
+
+    @property
+    def masked(self) -> MaskedTable:
+        if self._masked is None:
+            self._masked = self._materialize()
+            self._materialize = None
+        return self._masked
 
     @property
     def table(self) -> Table:
@@ -126,6 +143,33 @@ class QueryResult:
         pol = self.policy.name if self.policy else "?"
         return (f"QueryResult(rows={self.masked.num_rows}, policy={pol}, "
                 f"cache_hit={self.cache_hit}, elapsed_s={self.elapsed_s:.4f})")
+
+
+class AsyncResult:
+    """Future returned by :meth:`PreparedStatement.execute_async`.
+
+    The device call is already dispatched; ``result()`` blocks until the
+    outputs are ready and returns the :class:`QueryResult`.  ``done()``
+    polls readiness without blocking, so callers can pipeline host work
+    against device compute.
+    """
+
+    def __init__(self, result: QueryResult, marker=None):
+        self._result = result
+        self._marker = marker  # a device array from the in-flight dispatch
+
+    def done(self) -> bool:
+        m = self._marker
+        if m is None or not hasattr(m, "is_ready"):
+            return True
+        return m.is_ready()
+
+    def result(self) -> QueryResult:
+        _ = self._result.masked  # forces sync + materialization
+        return self._result
+
+    def __repr__(self):
+        return f"AsyncResult(done={self.done()})"
 
 
 #: backward-compatible alias — the old Database.run result type
@@ -238,6 +282,45 @@ def param_signature(params: dict | None) -> tuple:
     return tuple(out)
 
 
+def batch_bucket(n: int, max_batch: int) -> int:
+    """Device batch size for ``n`` same-signature param sets: the next
+    power of two, capped at ``max_batch``.  Bucketing means a statement
+    executed at N = 5, 6, 7 … shares one vmapped executable (padded to 8)
+    instead of re-specializing per distinct N."""
+    if n <= 0:
+        raise ValueError("batch of zero parameter sets")
+    b = 1
+    while b < n:
+        b <<= 1
+    return max(1, min(b, max_batch))
+
+
+def _stack_params(params_list: list[dict]) -> dict:
+    """Stack same-signature param dicts into one batched argument pytree:
+    name -> (data (B, …), valid (B, …)).  Scalars take the numpy fast path
+    (one host array per name, not B device scalars)."""
+    first = params_list[0]
+    out = {}
+    for name in sorted(first):
+        vs = [p[name] for p in params_list]
+        v0 = vs[0]
+        if isinstance(v0, bool):
+            data = jnp.asarray(np.asarray(vs, dtype=bool))
+        elif isinstance(v0, (int, np.integer)):
+            data = jnp.asarray(np.asarray(vs), jnp.int32)
+        elif isinstance(v0, (float, np.floating)):
+            data = jnp.asarray(np.asarray(vs), jnp.float32)
+        else:
+            vals = [_param_value(v) for v in vs]
+            out[name] = (
+                jnp.stack([v.data for v in vals]),
+                jnp.stack([v.validity() for v in vals]),
+            )
+            continue
+        out[name] = (data, jnp.ones((len(vs),), bool))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # compiled executables
 # ---------------------------------------------------------------------------
@@ -249,6 +332,16 @@ class _Executable:
     plan: R.RelNode
     out_dicts: dict  # column name -> DictEncoding | None (trace-time capture)
     stats: dict  # trace-time logical reads of one execution
+    raw: Any = None  # untraced (table_args, param_args) closure (vmap source)
+
+
+@dataclasses.dataclass
+class _BatchedExecutable:
+    fn: Any  # (batched_pargs, catalog_token) -> (mask (B,n), cols)
+    plan: R.RelNode
+    out_dicts: dict  # shared with the unbatched executable's capture
+    stats: dict
+    bucket: int
 
 
 # ---------------------------------------------------------------------------
@@ -272,10 +365,12 @@ class Session:
         cap = self.CACHE_CAP if cache_cap is None else cache_cap
         self._plans: _BoundedCache = _BoundedCache(cap)
         self._execs: _BoundedCache = _BoundedCache(cap)
+        self._batch_execs: _BoundedCache = _BoundedCache(cap)
         self._prepared: _BoundedCache = _BoundedCache(cap)
         self.cache_stats = {
             "plan_hits": 0, "plan_misses": 0,
             "exec_hits": 0, "exec_misses": 0,
+            "batch_hits": 0, "batch_misses": 0,
         }
 
     # -- DDL ---------------------------------------------------------------
@@ -295,7 +390,12 @@ class Session:
                 ) -> "PreparedStatement":
         policy = resolve_policy(policy)
         node = query.node if isinstance(query, Q) else query
-        key = (plan_fingerprint(node), policy.fingerprint())
+        # the handle cache additionally keys on the batch knobs (they are
+        # excluded from fingerprint() so plan/executable caches still
+        # share, but two prepares with different knobs must not alias —
+        # the knobs live on the returned statement's policy)
+        key = (plan_fingerprint(node), policy.fingerprint(),
+               policy.max_batch, policy.coalesce_window_s, policy.allow_async)
         ps = self._prepared.get(key)
         if ps is None:
             ps = PreparedStatement(self, node, policy)
@@ -306,6 +406,14 @@ class Session:
     def execute(self, query, policy: ExecutionPolicy | str = FROID,
                 params: dict | None = None) -> QueryResult:
         return self.prepare(query, policy).execute(params=params)
+
+    def execute_many(self, query, policy: ExecutionPolicy | str = FROID,
+                     params_list=()) -> list[QueryResult]:
+        return self.prepare(query, policy).execute_many(params_list)
+
+    def execute_async(self, query, policy: ExecutionPolicy | str = FROID,
+                      params: dict | None = None) -> "AsyncResult":
+        return self.prepare(query, policy).execute_async(params=params)
 
     def explain(self, query, policy: ExecutionPolicy | str = FROID) -> str:
         policy = resolve_policy(policy)
@@ -465,9 +573,41 @@ class Session:
                 pargs[pname] = (v.data, v.validity())
             return jitted(self._catalog_args(catalog_token), pargs)
 
-        entry = _Executable(fn, plan, out_dicts, trace_stats)
+        entry = _Executable(fn, plan, out_dicts, trace_stats, raw=raw)
         self._execs[key] = entry
         return entry, False, plan_hit
+
+    def _batched_executable(self, node: R.RelNode, query_fp: tuple,
+                            policy: ExecutionPolicy, params0: dict,
+                            sig: tuple, bucket: int,
+                            env_token: tuple | None = None
+                            ) -> tuple[_BatchedExecutable, bool]:
+        """(vmapped executable, batch-cache-hit).  The batched program is
+        ``vmap`` of the unbatched raw plan closure over the parameter axis
+        (catalog args broadcast), jitted once per (plan, policy, signature,
+        batch bucket) — heterogeneous request streams re-specialize per
+        bucket, not per distinct N."""
+        if env_token is None:
+            env_token = self._env_token()
+        key = (query_fp, policy.fingerprint(), env_token, sig, bucket)
+        entry = self._batch_execs.get(key)
+        if entry is not None:
+            self.cache_stats["batch_hits"] += 1
+            return entry, True
+        self.cache_stats["batch_misses"] += 1
+        # share the unbatched executable's raw closure and trace-time
+        # capture dicts so warm execute() and execute_many() agree on
+        # output dictionaries/stats regardless of which traced first
+        base, _, _ = self._executable(node, query_fp, policy, params0, env_token)
+        vfn = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
+
+        def fn(batched_pargs: dict, catalog_token: tuple | None = None):
+            return vfn(self._catalog_args(catalog_token), batched_pargs)
+
+        entry = _BatchedExecutable(fn, base.plan, base.out_dicts, base.stats,
+                                   bucket)
+        self._batch_execs[key] = entry
+        return entry, False
 
 
 # ---------------------------------------------------------------------------
@@ -542,6 +682,126 @@ class PreparedStatement:
         if self.policy.compile_plan:
             return self._execute_compiled(params)
         return self._execute_eager(params)
+
+    # -- batched execution -------------------------------------------------
+    def execute_many(self, params_list) -> list[QueryResult]:
+        """Execute once per parameter set, set-oriented: same-signature
+        sets are stacked into one device program (``vmap`` over the param
+        axis; tables broadcast) instead of N dispatch+sync round trips.
+        Mixed-signature lists split into per-signature sub-batches; batches
+        larger than ``policy.max_batch`` split into chunks.  Returns one
+        :class:`QueryResult` per input, in input order, element-wise equal
+        to the serial ``execute`` loop.
+
+        Results materialize lazily from the shared device batch, so an
+        unmaterialized result keeps its whole bucket's outputs alive —
+        callers holding results long-term should touch ``masked`` (or
+        ``table``) to shrink retention to their own rows."""
+        params_list = [dict(p) if p else {} for p in params_list]
+        if not params_list:
+            return []
+        if not self.policy.compile_plan:
+            # eager policies have no device program to batch; stay serial
+            return [self.execute(params=p) for p in params_list]
+        env_token = self.session._env_token()
+        groups: dict[tuple, list[int]] = {}
+        for i, p in enumerate(params_list):
+            groups.setdefault(param_signature(p), []).append(i)
+        results: list[QueryResult | None] = [None] * len(params_list)
+        for sig, idxs in groups.items():
+            if not sig:
+                # parameter-free: every invocation is the same program run —
+                # one execution serves the whole group, surfaced as distinct
+                # QueryResult shells (per-result stats stay independent)
+                r = self._execute_compiled(None)
+                for i in idxs:
+                    results[i] = QueryResult(
+                        r.masked, r.plan, r.elapsed_s, dict(r.stats),
+                        policy=r.policy, cache_hit=r.cache_hit,
+                    )
+                continue
+            cap = max(1, self.policy.max_batch)
+            for s in range(0, len(idxs), cap):
+                chunk = idxs[s:s + cap]
+                self._run_batch(chunk, [params_list[i] for i in chunk],
+                                sig, env_token, results)
+        return results  # type: ignore[return-value]
+
+    def _run_batch(self, idxs: list[int], plist: list[dict], sig: tuple,
+                   env_token: tuple, results: list) -> None:
+        k = len(plist)
+        bucket = batch_bucket(k, self.policy.max_batch)
+        entry, hit = self.session._batched_executable(
+            self.node, self._query_fp, self.policy, plist[0], sig, bucket,
+            env_token,
+        )
+        # pad to the bucket by repeating the last param set; padding rows
+        # are computed and discarded (never surfaced in results)
+        padded = plist + [plist[-1]] * (bucket - k)
+        t0 = time.perf_counter()
+        pargs = _stack_params(padded)
+        mask, cols = entry.fn(pargs, env_token[0])
+        t_dispatch = time.perf_counter() - t0
+        jax.block_until_ready(mask)
+        elapsed = time.perf_counter() - t0
+        stats = {
+            **entry.stats, "compiled": True, "batched": True,
+            "batch_size": k, "batch_bucket": bucket,
+            "dispatch_s": t_dispatch, "sync_s": elapsed - t_dispatch,
+        }
+
+        def materialize(j: int) -> MaskedTable:
+            table = Table(
+                {n: Column(data[j], valid[j], entry.out_dicts.get(n))
+                 for n, (data, valid) in cols.items()}
+            )
+            return MaskedTable(table, mask[j])
+
+        for j, i in enumerate(idxs):
+            results[i] = QueryResult(
+                None, entry.plan, elapsed, dict(stats), policy=self.policy,
+                cache_hit=hit,
+                materialize=(lambda j=j: materialize(j)),
+            )
+
+    # -- async execution ---------------------------------------------------
+    def execute_async(self, params: dict | None = None) -> AsyncResult:
+        """Dispatch without waiting: the device call is issued and a future
+        returned immediately; ``block_until_ready`` is deferred to result
+        access, so callers pipeline host work (or further dispatches)
+        against device compute.  Policies with ``allow_async=False`` (or no
+        compiled plan) degrade to synchronous execution behind the same
+        interface."""
+        if not (self.policy.compile_plan and self.policy.allow_async):
+            return AsyncResult(self.execute(params=params))
+        env_token = self.session._env_token()
+        entry, exec_hit, plan_hit = self.session._executable(
+            self.node, self._query_fp, self.policy, params, env_token
+        )
+        t0 = time.perf_counter()
+        mask, cols = entry.fn(params, env_token[0])
+        dispatch_s = time.perf_counter() - t0
+        stats = {**entry.stats, "compiled": True, "async": True,
+                 "dispatch_s": dispatch_s}
+        result: QueryResult
+
+        def materialize() -> MaskedTable:
+            t1 = time.perf_counter()
+            jax.block_until_ready(mask)
+            sync_s = time.perf_counter() - t1
+            result.stats["sync_s"] = sync_s
+            result.elapsed_s = dispatch_s + sync_s
+            table = Table(
+                {n: Column(data, valid, entry.out_dicts.get(n))
+                 for n, (data, valid) in cols.items()}
+            )
+            return MaskedTable(table, mask)
+
+        result = QueryResult(None, entry.plan, dispatch_s, stats,
+                             policy=self.policy,
+                             cache_hit=exec_hit and plan_hit,
+                             materialize=materialize)
+        return AsyncResult(result, marker=mask)
 
     def _execute_compiled(self, params) -> QueryResult:
         env_token = self.session._env_token()

@@ -1,4 +1,6 @@
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.admission import AdmissionPolicy
+from repro.serve.scheduler import CoalescingScheduler, Ticket
 
-__all__ = ["Request", "ServeEngine", "AdmissionPolicy"]
+__all__ = ["Request", "ServeEngine", "AdmissionPolicy",
+           "CoalescingScheduler", "Ticket"]

@@ -14,12 +14,15 @@ warm across ticks.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.core import (
     FROID,
     INTERPRETED,
     ExecutionPolicy,
+    Q,
     Session,
     UdfBuilder,
     case,
@@ -31,6 +34,8 @@ from repro.core import (
     udf,
     var,
 )
+from repro.core import relalg as R
+from repro.serve.scheduler import CoalescingScheduler, Ticket
 
 
 def default_rules(db) -> None:
@@ -92,6 +97,39 @@ def _tick_query():
     )
 
 
+def _request_query():
+    """The same rules as a *parameterized* one-row statement: each request's
+    fields arrive as params over a ConstantScan, so thousands of individual
+    requests ride one prepared plan and coalesce into `execute_many`
+    microbatches — no per-tick table reload, no plan-cache churn."""
+    return (
+        Q(R.ConstantScan())
+        .compute(
+            admit=udf("admit", param("plen"), param("depth")),
+            granted=udf("token_budget", param("tier"), param("plen"),
+                        param("req")),
+            temp_eff=udf("temp_for", param("tier"), param("temp")),
+        )
+        .project("admit", "granted", "temp_eff")
+    )
+
+
+def _compiled_variant(policy: ExecutionPolicy) -> ExecutionPolicy:
+    """The closest whole-plan-compiling policy: batched per-request
+    admission needs a device program to vmap.  Python-mode interpretation
+    cannot live inside a compiled plan, so non-inlined python policies hop
+    to the 'scan' interpreter (same results, traceable)."""
+    if policy.compile_plan:
+        return policy
+    udf_mode = policy.udf_mode
+    if not policy.inline_udfs and udf_mode == "python":
+        udf_mode = "scan"
+    return dataclasses.replace(
+        policy, name=policy.name + "+compiled", compile_plan=True,
+        udf_mode=udf_mode,
+    )
+
+
 class AdmissionPolicy:
     """Evaluates the rules over the queued-request table, set-oriented.
 
@@ -100,7 +138,8 @@ class AdmissionPolicy:
     """
 
     def __init__(self, froid: bool = True,
-                 policy: ExecutionPolicy | str | None = None):
+                 policy: ExecutionPolicy | str | None = None,
+                 scheduler: CoalescingScheduler | None = None):
         self.session = Session()
         default_rules(self.session)
         if policy is None:
@@ -109,6 +148,13 @@ class AdmissionPolicy:
         # recompile per tick — run the chosen policy eagerly
         self.policy = resolve_policy(policy).eager()
         self._query = _tick_query()
+        # per-request path: a second session sharing the rule registry but
+        # with an empty catalog, so the compiled request statement's cache
+        # key is immune to the tick path's queue-table reloads
+        self._request_session = Session()
+        self._request_session.registry = self.session.registry
+        self._request_stmt = None
+        self.scheduler = scheduler or CoalescingScheduler()
 
     def evaluate(self, requests: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         """requests: columns tier, prompt_len, max_new_tokens, temperature.
@@ -127,4 +173,56 @@ class AdmissionPolicy:
             "admit": np.asarray(res.table.columns["admit"].data).astype(bool),
             "granted": np.asarray(res.table.columns["granted"].data).astype(np.int32),
             "temp": np.asarray(res.table.columns["temp_eff"].data).astype(np.float32),
+        }
+
+    # -- per-request coalescing path ----------------------------------------
+    def request_statement(self):
+        """The rules as one prepared parameterized statement (lazy)."""
+        if self._request_stmt is None:
+            self._request_stmt = self._request_session.prepare(
+                _request_query(), _compiled_variant(self.policy)
+            )
+        return self._request_stmt
+
+    def submit(self, *, tier: int, prompt_len: int, max_new_tokens: int,
+               temperature: float, depth: int = 0) -> Ticket:
+        """Queue one request's admission evaluation; concurrent submits for
+        the same statement coalesce into `execute_many` microbatches."""
+        return self.scheduler.submit(
+            self.request_statement(),
+            {"tier": int(tier), "plen": int(prompt_len),
+             "req": int(max_new_tokens), "temp": float(temperature),
+             "depth": int(depth)},
+        )
+
+    @staticmethod
+    def verdict(result) -> dict:
+        """Decode one per-request QueryResult into the evaluate() schema."""
+        cols = result.table.columns
+        return {
+            "admit": bool(np.asarray(cols["admit"].data)[0]),
+            "granted": int(np.asarray(cols["granted"].data)[0]),
+            "temp": float(np.asarray(cols["temp_eff"].data)[0]),
+        }
+
+    def evaluate_coalesced(self, requests: dict[str, np.ndarray]) -> dict:
+        """`evaluate`, but through per-request submits + one scheduler
+        drain — the serving path's shape, returning the tick-path schema."""
+        n = len(requests["tier"])
+        tickets = [
+            self.submit(
+                tier=int(requests["tier"][i]),
+                prompt_len=int(requests["prompt_len"][i]),
+                max_new_tokens=int(requests["max_new_tokens"][i]),
+                temperature=float(requests["temperature"][i]),
+                depth=n,
+            )
+            for i in range(n)
+        ]
+        self.scheduler.flush()
+        out = [self.verdict(t.result()) for t in tickets]
+        return {
+            "admit": np.array([v["admit"] for v in out], bool),
+            "granted": np.array([v["granted"] for v in out], np.int32),
+            "temp": np.array([v["temp"] for v in out], np.float32),
         }

@@ -6,6 +6,16 @@ Slots hold (cache row, remaining budget); finished slots are refilled from
 the admitted queue each tick.  Single-process reference implementation —
 the decode step itself is the pjit'd ``serve_step`` the dry-run lowers for
 the production mesh.
+
+Two intake shapes:
+
+* ``run(requests)`` — the whole wave arrives at once; admission evaluates
+  it as one queue table (the tick path).
+* ``submit(request)`` + ``drain()`` — requests arrive one at a time (the
+  online shape); ``drain`` tickets the whole queued wave on the
+  coalescing microbatch scheduler, so admission executes as set-oriented
+  ``execute_many`` batches instead of one statement per request, with
+  the same queue-depth semantics (and therefore verdicts) as ``run``.
 """
 from __future__ import annotations
 
@@ -16,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve.admission import AdmissionPolicy
+from repro.serve.scheduler import CoalescingScheduler
 
 
 @dataclasses.dataclass
@@ -37,7 +48,8 @@ class Completed:
 class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: int | None = None, froid_admission: bool = True,
-                 admission_policy=None, seed: int = 0):
+                 admission_policy=None, seed: int = 0,
+                 admission_scheduler: CoalescingScheduler | None = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -46,10 +58,13 @@ class ServeEngine:
         # admission_policy: ExecutionPolicy or preset name ("froid",
         # "interpreted", "hekaton"); froid_admission is the legacy switch
         self.admission = AdmissionPolicy(
-            froid=froid_admission, policy=admission_policy
+            froid=froid_admission, policy=admission_policy,
+            scheduler=admission_scheduler,
         )
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
+        # online intake: requests awaiting the next drain()
+        self._submitted: list[Request] = []
 
     # ------------------------------------------------------------------
     def run(self, requests: list[Request]) -> list[Completed]:
@@ -71,6 +86,45 @@ class ServeEngine:
                 queue.append((r, int(verdict["granted"][i]),
                               float(verdict["temp"][i])))
 
+        while queue:
+            batch = queue[: self.slots]
+            queue = queue[self.slots :]
+            done.extend(self._serve_batch(batch))
+        return done
+
+    # ------------------------------------------------------------------
+    def submit(self, request: Request) -> None:
+        """Online intake: queue one request for the next ``drain()``."""
+        self._submitted.append(request)
+
+    def drain(self) -> list[Completed]:
+        """Admit the queued wave set-oriented (per-request tickets on the
+        coalescing scheduler, drained through ``execute_many``), then
+        serve every admitted request to completion.  Admission happens at
+        drain time so every ticket sees the same queue depth the tick
+        path (``run``) would — identical verdicts, including
+        load-shedding."""
+        submitted, self._submitted = self._submitted, []
+        depth = len(submitted)
+        tickets = [
+            self.admission.submit(
+                tier=r.tier,
+                prompt_len=len(r.prompt),
+                max_new_tokens=r.max_new_tokens,
+                temperature=r.temperature,
+                depth=depth,
+            )
+            for r in submitted
+        ]
+        self.admission.scheduler.flush()
+        queue = []
+        done: list[Completed] = []
+        for r, ticket in zip(submitted, tickets):
+            v = AdmissionPolicy.verdict(ticket.result())
+            if not v["admit"]:
+                done.append(Completed(r.rid, [], "rejected"))
+            else:
+                queue.append((r, v["granted"], v["temp"]))
         while queue:
             batch = queue[: self.slots]
             queue = queue[self.slots :]

@@ -1,0 +1,205 @@
+"""Coalescing microbatch scheduler: per-request submits, set-oriented drains.
+
+The serving path naturally produces one statement execution per request — a
+serial loop of dispatch + sync, exactly the iterative shape the paper's
+set-oriented argument is about.  This scheduler turns it back into batches:
+concurrent ``submit`` calls for the same :class:`PreparedStatement`
+accumulate in a pending microbatch, and the batch drains through
+``execute_many`` (one vmapped device program) when any of
+
+* the batch reaches ``max_batch`` (flush-on-full),
+* the oldest entry has waited longer than ``window_s`` (flush-on-window;
+  checked on each submit and by ``poll()``), or
+* a caller forces it (``flush()``, or ``Ticket.result()`` on a pending
+  ticket — a consumer that needs its answer never deadlocks waiting for
+  traffic that might not arrive).
+
+The scheduler is synchronous and thread-safe: it never starts threads of
+its own, so drains happen on the caller that trips a flush condition.
+Drains are serialized on a dedicated lock (the underlying Session caches
+are not thread-safe), while submits to other statements stay concurrent;
+a Session driven through a scheduler must not also be driven concurrently
+outside it.  ``clock`` is injectable for deterministic window tests.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+from repro.core.session import PreparedStatement, QueryResult
+
+
+class Ticket:
+    """Handle for one submitted request; filled when its batch drains."""
+
+    __slots__ = ("_sched", "_group", "_result", "_error")
+
+    def __init__(self, sched: "CoalescingScheduler", group: "_Group"):
+        self._sched = sched
+        self._group = group
+        self._result: QueryResult | None = None
+        self._error: BaseException | None = None
+
+    def done(self) -> bool:
+        return self._result is not None or self._error is not None
+
+    def result(self) -> QueryResult:
+        """The request's :class:`QueryResult`; forces a drain of the
+        ticket's batch if it is still pending.  If another thread is
+        mid-drain (the batch was popped but not yet filled), waits for
+        that drain to finish instead of racing it."""
+        if not self.done():
+            self._sched._flush_group(self._group)
+            self._group.done_evt.wait()
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
+class _Group:
+    """Pending same-statement microbatch."""
+
+    __slots__ = ("stmt", "params", "tickets", "opened_at", "done_evt")
+
+    def __init__(self, stmt: PreparedStatement, opened_at: float):
+        self.stmt = stmt
+        self.params: list[dict] = []
+        self.tickets: list[Ticket] = []
+        self.opened_at = opened_at
+        # set once every ticket is filled: drains happen outside the
+        # scheduler lock, so a concurrent Ticket.result() waits on this
+        # instead of racing the in-flight drain
+        self.done_evt = threading.Event()
+
+
+class CoalescingScheduler:
+    """Accumulates concurrent same-statement requests into microbatches.
+
+    ``max_batch`` / ``window_s`` default per statement from its policy's
+    batch knobs (``ExecutionPolicy.max_batch`` / ``coalesce_window_s``), so
+    presets tune coalescing without scheduler-side configuration.
+
+    Stats (``self.stats``): submitted, batches, drained, flush reasons.
+    """
+
+    def __init__(self, max_batch: int | None = None,
+                 window_s: float | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        self.max_batch = max_batch
+        self.window_s = window_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        # serializes drains: execute_many mutates Session caches that have
+        # no synchronization of their own
+        self._drain_lock = threading.Lock()
+        self._groups: dict[int, _Group] = {}  # id(stmt) -> pending batch
+        self.stats = {
+            "submitted": 0, "batches": 0, "drained": 0,
+            "flush_full": 0, "flush_window": 0, "flush_forced": 0,
+        }
+
+    # -- knob resolution ----------------------------------------------------
+    def _max_batch(self, stmt: PreparedStatement) -> int:
+        return self.max_batch if self.max_batch is not None else stmt.policy.max_batch
+
+    def _window(self, stmt: PreparedStatement) -> float:
+        return (self.window_s if self.window_s is not None
+                else stmt.policy.coalesce_window_s)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, stmt: PreparedStatement, params: dict | None = None) -> Ticket:
+        """Queue one execution of ``stmt``; returns its :class:`Ticket`.
+        May drain (this or another) batch if a flush condition trips."""
+        to_drain: list[_Group] = []
+        with self._lock:
+            self.stats["submitted"] += 1
+            g = self._groups.get(id(stmt))
+            if g is None:
+                g = _Group(stmt, self.clock())
+                self._groups[id(stmt)] = g
+            t = Ticket(self, g)
+            g.params.append(dict(params) if params else {})
+            g.tickets.append(t)
+            if len(g.params) >= self._max_batch(stmt):
+                self.stats["flush_full"] += 1
+                self._groups.pop(id(stmt), None)
+                to_drain.append(g)
+            to_drain.extend(self._take_expired_locked())
+        for g in to_drain:
+            self._drain(g)
+        return t
+
+    def poll(self) -> int:
+        """Drain every batch whose coalesce window has expired; returns the
+        number of requests drained.  Serving loops call this once per tick."""
+        with self._lock:
+            expired = self._take_expired_locked()
+        n = 0
+        for g in expired:
+            n += len(g.params)
+            self._drain(g)
+        return n
+
+    def flush(self) -> int:
+        """Drain all pending batches regardless of window; returns the
+        number of requests drained."""
+        with self._lock:
+            groups = list(self._groups.values())
+            self._groups.clear()
+            if groups:
+                self.stats["flush_forced"] += len(groups)
+        n = 0
+        for g in groups:
+            n += len(g.params)
+            self._drain(g)
+        return n
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(g.params) for g in self._groups.values())
+
+    # -- internals -----------------------------------------------------------
+    def _take_expired_locked(self) -> list[_Group]:
+        now = self.clock()
+        expired = [
+            g for g in self._groups.values()
+            if now - g.opened_at >= self._window(g.stmt)
+        ]
+        for g in expired:
+            self._groups.pop(id(g.stmt), None)
+            self.stats["flush_window"] += 1
+        return expired
+
+    def _flush_group(self, group: _Group) -> None:
+        """Forced drain of one batch (Ticket.result on a pending ticket)."""
+        with self._lock:
+            live = self._groups.get(id(group.stmt))
+            if live is not group:
+                return  # already drained by another path
+            self._groups.pop(id(group.stmt), None)
+            self.stats["flush_forced"] += 1
+        self._drain(group)
+
+    def _drain(self, group: _Group) -> None:
+        self.stats["batches"] += 1
+        self.stats["drained"] += len(group.params)
+        try:
+            with self._drain_lock:
+                results = group.stmt.execute_many(group.params)
+            for t, r in zip(group.tickets, results):
+                t._result = r
+        except Exception as e:  # fan the failure out to every waiter
+            for t in group.tickets:
+                t._error = e
+        except BaseException as e:  # KeyboardInterrupt/SystemExit: park a
+            for t in group.tickets:  # diagnostic on the tickets, but let
+                t._error = e         # the interrupt reach the caller
+            raise
+        finally:
+            group.done_evt.set()
+
+
+__all__ = ["CoalescingScheduler", "Ticket"]

@@ -1,0 +1,425 @@
+"""Batched invocation engine: `execute_many` / `execute_async` and the
+coalescing microbatch scheduler.
+
+Covers the ISSUE-2 contract: element-wise identity with the serial execute
+loop, shape/dtype bucketing and cache keying across batch sizes and mixed
+parameter signatures, catalog-mutation invalidation between execute_many
+calls, async future correctness, and scheduler coalescing/flush behavior.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    AsyncResult,
+    ExecutionPolicy,
+    Session,
+    UdfBuilder,
+    batch_bucket,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.serve.scheduler import CoalescingScheduler
+
+
+def _populate(db, n_detail=2000, n_t=200, seed=0):
+    rng = np.random.default_rng(seed)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 50, n_detail),
+        d_val=rng.uniform(0, 100, n_detail).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 50, n_t))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+
+
+def _q():
+    return (
+        scan("T")
+        .filter(col("a") < param("cutoff"))
+        .compute(v=udf("key_total", col("a")))
+        .project("v")
+    )
+
+
+def _assert_same(serial, batched):
+    assert len(serial) == len(batched)
+    for s, b in zip(serial, batched):
+        np.testing.assert_array_equal(
+            np.asarray(s.masked.mask), np.asarray(b.masked.mask)
+        )
+        np.testing.assert_allclose(
+            np.asarray(s.masked.table.columns["v"].data),
+            np.asarray(b.masked.table.columns["v"].data),
+            rtol=1e-5,
+        )
+
+
+@pytest.fixture
+def db():
+    s = Session()
+    _populate(s)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# element-wise identity with the serial loop
+# ---------------------------------------------------------------------------
+
+
+def test_execute_many_matches_serial_loop(db):
+    stmt = db.prepare(_q(), FROID)
+    params_list = [{"cutoff": k} for k in (3, 17, 42, 50, 1, 29, 8)]
+    serial = [stmt.execute(params=p) for p in params_list]
+    batched = stmt.execute_many(params_list)
+    _assert_same(serial, batched)
+    st = batched[0].stats
+    assert st["batched"] and st["batch_size"] == 7 and st["batch_bucket"] == 8
+    assert "dispatch_s" in st and "sync_s" in st
+
+
+def test_execute_many_order_preserved(db):
+    stmt = db.prepare(_q(), FROID)
+    # mixed signatures interleaved: results must come back in input order
+    params_list = [{"cutoff": 3}, {"cutoff": 10.5}, {"cutoff": 40},
+                   {"cutoff": 0.5}, {"cutoff": 22}]
+    batched = stmt.execute_many(params_list)
+    serial = [stmt.execute(params=p) for p in params_list]
+    _assert_same(serial, batched)
+
+
+def test_execute_many_empty_and_paramless(db):
+    stmt = db.prepare(_q(), FROID)
+    assert stmt.execute_many([]) == []
+    q = scan("T").compute(v=udf("key_total", col("a")))
+    s2 = db.prepare(q, FROID)
+    rs = s2.execute_many([None, {}, None])
+    assert len(rs) == 3
+    # one execution serves the group, but results are distinct shells
+    # (per-result stats/annotations must not alias)
+    assert len({id(r) for r in rs}) == 3
+    assert len({id(r.stats) for r in rs}) == 3
+    a = np.asarray(rs[0].masked.table.columns["v"].data)
+    for r in rs[1:]:
+        np.testing.assert_array_equal(
+            a, np.asarray(r.masked.table.columns["v"].data)
+        )
+
+
+def test_execute_many_eager_policy_falls_back_serial(db):
+    stmt = db.prepare(_q(), INTERPRETED)
+    params_list = [{"cutoff": 5}, {"cutoff": 25}]
+    rs = stmt.execute_many(params_list)
+    serial = [stmt.execute(params=p) for p in params_list]
+    _assert_same(serial, rs)
+    assert "batched" not in rs[0].stats
+
+
+def test_execute_many_hekaton(db):
+    stmt = db.prepare(_q(), HEKATON)
+    params_list = [{"cutoff": k} for k in (4, 31, 12)]
+    _assert_same([stmt.execute(params=p) for p in params_list],
+                 stmt.execute_many(params_list))
+
+
+# ---------------------------------------------------------------------------
+# bucketing + cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_batch_bucket_shape():
+    assert [batch_bucket(n, 1024) for n in (1, 2, 3, 5, 8, 9, 1000)] == \
+        [1, 2, 4, 8, 8, 16, 1024]
+    assert batch_bucket(2000, 64) == 64  # capped at max_batch
+    with pytest.raises(ValueError):
+        batch_bucket(0, 64)
+
+
+def test_same_bucket_reuses_vmapped_executable(db):
+    stmt = db.prepare(_q(), FROID)
+    stmt.execute_many([{"cutoff": k} for k in (1, 2, 3)])  # bucket 4
+    misses = db.cache_stats["batch_misses"]
+    r = stmt.execute_many([{"cutoff": k} for k in (9, 8, 7, 6)])  # bucket 4
+    assert db.cache_stats["batch_misses"] == misses
+    assert r[0].cache_hit and r[0].stats["batch_bucket"] == 4
+    # a different bucket is a new specialization
+    stmt.execute_many([{"cutoff": k} for k in range(5)])  # bucket 8
+    assert db.cache_stats["batch_misses"] == misses + 1
+
+
+def test_mixed_signatures_split_into_buckets(db):
+    stmt = db.prepare(_q(), FROID)
+    params_list = ([{"cutoff": k} for k in (1, 2, 3)]
+                   + [{"cutoff": float(k)} for k in (4.0, 5.0)])
+    before = db.cache_stats["batch_misses"]
+    rs = stmt.execute_many(params_list)
+    # two signatures -> two sub-batches -> two vmapped executables
+    assert db.cache_stats["batch_misses"] == before + 2
+    assert rs[0].stats["batch_size"] == 3 and rs[3].stats["batch_size"] == 2
+    _assert_same([stmt.execute(params=p) for p in params_list], rs)
+
+
+def test_max_batch_chunks(db):
+    stmt = db.prepare(_q(), FROID.batched(max_batch=4))
+    params_list = [{"cutoff": int(k)} for k in range(10)]
+    rs = stmt.execute_many(params_list)
+    sizes = [r.stats["batch_size"] for r in rs]
+    assert sizes == [4, 4, 4, 4, 4, 4, 4, 4, 2, 2]
+    assert all(r.stats["batch_bucket"] <= 4 for r in rs)
+    _assert_same([stmt.execute(params=p) for p in params_list], rs)
+
+
+def test_batched_policy_knobs_are_not_identity():
+    assert FROID.batched(max_batch=8) == FROID
+    assert FROID.batched(max_batch=8).fingerprint() == FROID.fingerprint()
+    assert FROID.batched(max_batch=8).max_batch == 8
+    assert not INTERPRETED.allow_async
+
+
+def test_prepare_distinct_batch_knobs_do_not_alias(db):
+    """Two prepares differing only in batch knobs return distinct handles
+    carrying their own knobs, while still sharing the plan/executable
+    caches underneath (the knobs are excluded from fingerprint())."""
+    s1 = db.prepare(_q(), FROID)
+    s2 = db.prepare(_q(), FROID.batched(max_batch=2, allow_async=False))
+    assert s1 is not s2
+    assert s1.policy.max_batch == FROID.max_batch
+    assert s2.policy.max_batch == 2 and not s2.policy.allow_async
+    # knob changes must actually take effect on the returned handle
+    rs = s2.execute_many([{"cutoff": k} for k in range(5)])
+    assert all(r.stats["batch_bucket"] <= 2 for r in rs)
+    assert s2.execute_async(params={"cutoff": 3}).done()  # degraded to sync
+    # underneath, the compiled executable is shared: executing via s2
+    # after s1 is an exec-cache hit, not a re-specialization
+    s1.execute(params={"cutoff": 9})
+    misses = db.cache_stats["exec_misses"]
+    r = s2.execute(params={"cutoff": 9})
+    assert db.cache_stats["exec_misses"] == misses and r.cache_hit
+
+
+# ---------------------------------------------------------------------------
+# invalidation
+# ---------------------------------------------------------------------------
+
+
+def test_catalog_mutation_invalidates_between_execute_many_calls(db):
+    stmt = db.prepare(_q(), FROID)
+    params_list = [{"cutoff": k} for k in (10, 20, 30)]
+    r1 = stmt.execute_many(params_list)
+    # warm second call
+    assert stmt.execute_many(params_list)[0].cache_hit
+    # DDL: replace the detail table -> batched executables re-specialize
+    rng = np.random.default_rng(99)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 50, 2000),
+        d_val=rng.uniform(0, 100, 2000).astype(np.float32),
+    )
+    r2 = stmt.execute_many(params_list)
+    assert not r2[0].cache_hit
+    _assert_same([stmt.execute(params=p) for p in params_list], r2)
+    # new data actually flowed through
+    a1 = np.asarray(r1[2].masked.table.columns["v"].data)
+    a2 = np.asarray(r2[2].masked.table.columns["v"].data)
+    assert not np.allclose(a1, a2)
+
+
+# ---------------------------------------------------------------------------
+# async futures
+# ---------------------------------------------------------------------------
+
+
+def test_execute_async_matches_sync(db):
+    stmt = db.prepare(_q(), FROID)
+    fut = stmt.execute_async(params={"cutoff": 33})
+    assert isinstance(fut, AsyncResult)
+    r = fut.result()
+    s = stmt.execute(params={"cutoff": 33})
+    _assert_same([s], [r])
+    assert r.stats.get("async") and "sync_s" in r.stats
+    assert fut.done()
+    assert fut.result() is r  # idempotent
+
+
+def test_execute_async_pipelined_dispatches(db):
+    stmt = db.prepare(_q(), FROID)
+    params_list = [{"cutoff": k} for k in (2, 12, 22, 32)]
+    futs = [stmt.execute_async(params=p) for p in params_list]
+    rs = [f.result() for f in futs]
+    _assert_same([stmt.execute(params=p) for p in params_list], rs)
+
+
+def test_execute_async_disallowed_degrades_to_sync(db):
+    stmt = db.prepare(_q(), FROID.batched(allow_async=False))
+    fut = stmt.execute_async(params={"cutoff": 11})
+    assert fut.done()  # executed synchronously behind the same interface
+    _assert_same([stmt.execute(params={"cutoff": 11})], [fut.result()])
+    # eager policies likewise
+    fut2 = db.prepare(_q(), INTERPRETED).execute_async(params={"cutoff": 11})
+    assert fut2.done()
+    assert "async" not in fut2.result().stats
+
+
+# ---------------------------------------------------------------------------
+# coalescing microbatch scheduler
+# ---------------------------------------------------------------------------
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def test_scheduler_coalesces_and_flushes_on_window(db):
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=0.010, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    t1 = sched.submit(stmt, {"cutoff": 5})
+    t2 = sched.submit(stmt, {"cutoff": 25})
+    assert sched.pending == 2 and not t1.done()
+    assert sched.poll() == 0  # window not expired: still coalescing
+    clock.advance(0.011)
+    assert sched.poll() == 2  # window expired: drained as one batch
+    assert t1.done() and t2.done()
+    assert sched.stats["batches"] == 1 and sched.stats["flush_window"] == 1
+    _assert_same(
+        [stmt.execute(params={"cutoff": 5}), stmt.execute(params={"cutoff": 25})],
+        [t1.result(), t2.result()],
+    )
+    assert t1.result().stats["batch_size"] == 2
+
+
+def test_scheduler_flush_on_full_batch(db):
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=3, window_s=10.0, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    ts = [sched.submit(stmt, {"cutoff": k}) for k in (1, 2)]
+    assert sched.pending == 2
+    ts.append(sched.submit(stmt, {"cutoff": 3}))  # hits max_batch
+    assert sched.pending == 0 and all(t.done() for t in ts)
+    assert sched.stats["flush_full"] == 1
+
+
+def test_scheduler_result_forces_drain(db):
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    t = sched.submit(stmt, {"cutoff": 7})
+    assert not t.done()
+    r = t.result()  # no traffic, huge window: consumer never deadlocks
+    assert t.done() and sched.stats["flush_forced"] == 1
+    _assert_same([stmt.execute(params={"cutoff": 7})], [r])
+
+
+def test_scheduler_window_defaults_from_policy(db):
+    clock = FakeClock()
+    sched = CoalescingScheduler(clock=clock)
+    stmt = db.prepare(_q(), FROID.batched(max_batch=2, coalesce_window_s=5.0))
+    sched.submit(stmt, {"cutoff": 1})
+    clock.advance(1.0)
+    assert sched.poll() == 0  # policy window (5s) not expired
+    sched.submit(stmt, {"cutoff": 2})  # policy max_batch (2) -> flush-on-full
+    assert sched.pending == 0 and sched.stats["flush_full"] == 1
+
+
+def test_scheduler_groups_per_statement(db):
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock)
+    s1 = db.prepare(_q(), FROID)
+    s2 = db.prepare(scan("T").filter(col("a") < param("cutoff")), FROID)
+    t1 = sched.submit(s1, {"cutoff": 5})
+    t2 = sched.submit(s2, {"cutoff": 5})
+    assert sched.pending == 2
+    assert sched.flush() == 2
+    assert sched.stats["batches"] == 2  # one per statement, not merged
+    assert t1.done() and t2.done()
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+
+def test_admission_coalesced_matches_tick_path():
+    from repro.serve.admission import AdmissionPolicy
+
+    reqs = {
+        "tier": np.array([0, 1, 2, 0, 2]),
+        "prompt_len": np.array([100, 3000, 9000, 40000, 100]),
+        "max_new_tokens": np.array([50, 2000, 8000, 10, 100]),
+        "temperature": np.array([0.5, 1.5, -1.0, 0.7, 3.0], np.float32),
+    }
+    ap = AdmissionPolicy(froid=True)
+    tick = ap.evaluate(reqs)
+    co = ap.evaluate_coalesced(reqs)
+    np.testing.assert_array_equal(tick["admit"], co["admit"])
+    np.testing.assert_array_equal(tick["granted"], co["granted"])
+    np.testing.assert_allclose(tick["temp"], co["temp"], rtol=1e-6)
+    assert ap.scheduler.stats["batches"] >= 1
+    # the request statement stayed prepared: a second wave is all warm
+    before = ap._request_session.cache_stats["batch_misses"]
+    ap.evaluate_coalesced(reqs)
+    assert ap._request_session.cache_stats["batch_misses"] == before
+
+
+def test_admission_coalesced_load_shedding_parity():
+    """Under pressure (depth > 512, long prompts) the coalesced path must
+    shed exactly the requests the tick path sheds — every ticket sees the
+    whole wave's queue depth, not its own submit position."""
+    from repro.serve.admission import AdmissionPolicy
+
+    n = 600
+    rng = np.random.default_rng(3)
+    reqs = {
+        "tier": rng.integers(0, 3, n),
+        "prompt_len": np.where(rng.random(n) < 0.5, 9000, 100),
+        "max_new_tokens": np.full(n, 64),
+        "temperature": np.full(n, 0.5, np.float32),
+    }
+    ap = AdmissionPolicy(froid=True)
+    tick = ap.evaluate(reqs)
+    co = ap.evaluate_coalesced(reqs)
+    np.testing.assert_array_equal(tick["admit"], co["admit"])
+    assert not tick["admit"][reqs["prompt_len"] == 9000].any()  # shed
+    assert tick["admit"][reqs["prompt_len"] == 100].all()
+
+
+def test_database_run_legacy_kwargs_warn():
+    from repro.core import Database
+
+    db = Database()
+    db.create_table("t", x=np.arange(5))
+    q = scan("t").filter(col("x") < lit(3))
+    with pytest.warns(DeprecationWarning, match="froid"):
+        db.run(q, froid=True)
+    with pytest.warns(DeprecationWarning, match="mode"):
+        db.run(q, mode="python")
+    with pytest.warns(DeprecationWarning):
+        db.run_compiled(q, froid=True)
+    # the new spelling stays silent
+    import warnings as _w
+
+    with _w.catch_warnings():
+        _w.simplefilter("error", DeprecationWarning)
+        db.run(q, params=None)
+        db.session.execute(q, FROID)

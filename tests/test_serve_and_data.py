@@ -78,6 +78,33 @@ def test_serve_rejects_oversized():
     assert all(c.reason in ("length", "eos", "rejected") for c in done)
 
 
+def test_serve_submit_drain_matches_run():
+    """The online intake (submit per request + coalesced admission) must
+    complete the same requests with the same budgets as the tick path."""
+    cfg = smoke_config_for("granite3_2b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(4)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 8).astype(np.int32),
+                max_new_tokens=int(rng.integers(3, 7)), temperature=0.0,
+                tier=int(rng.integers(0, 3)))
+        for i in range(5)
+    ]
+    run_out = {c.rid: c for c in ServeEngine(model, params, slots=2,
+                                             max_len=64).run(reqs)}
+    eng = ServeEngine(model, params, slots=2, max_len=64)
+    for r in reqs:
+        eng.submit(r)
+    drain_out = {c.rid: c for c in eng.drain()}
+    assert set(run_out) == set(drain_out)
+    for rid in run_out:
+        assert run_out[rid].reason == drain_out[rid].reason
+        assert run_out[rid].tokens == drain_out[rid].tokens
+    assert eng.admission.scheduler.stats["batches"] >= 1
+    assert eng.drain() == []  # nothing pending
+
+
 def test_data_pipeline_deterministic_and_froid_consistent():
     cfg = smoke_config_for("granite3_2b")
     p1 = DataPipeline(batch=8, seq_len=16, vocab=cfg.vocab, seed=3, froid=True)
