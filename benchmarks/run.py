@@ -43,7 +43,7 @@ def main() -> None:
                     help="reduced cardinalities / query subsets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
-                         "table5,prepared,execmany")
+                         "table5,prepared,execmany,shardmany")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -61,6 +61,7 @@ def main() -> None:
         bench_native,
         bench_prepared,
         bench_resources,
+        bench_sharded_many,
         bench_tpch,
     )
     from benchmarks.common import ROWS
@@ -75,6 +76,7 @@ def main() -> None:
         "table5": bench_native.run,        # native compilation quadrant
         "prepared": bench_prepared.run,    # Session prepare/execute lifecycle
         "execmany": bench_execute_many.run,  # batched invocation engine
+        "shardmany": bench_sharded_many.run,  # mesh-sharded batches
     }
     only = args.only.split(",") if args.only else list(suites)
 

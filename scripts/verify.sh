@@ -10,9 +10,23 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 python -m pytest -x -q "$@"
 
+# mirrors the CI sharded-8dev job: sharded parity tests + perf smoke on a
+# forced 8-device CPU mesh (VERIFY_SHARDED=0 skips)
+if [ "${VERIFY_SHARDED:-1}" != "0" ]; then
+  echo "--- sharded parity: pytest on a forced 8-device host mesh"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_sharded_many.py \
+      tests/test_conformance_oracle.py tests/test_execute_many.py
+fi
+
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then
   echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.run --quick --only prepared,table4,execmany \
       --run-id verify --json-dir /tmp
+  echo "--- sharded perf smoke: benchmarks.run --quick --only shardmany (8 devices)"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only shardmany \
+      --run-id verify-sharded --json-dir /tmp
 fi

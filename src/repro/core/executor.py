@@ -354,6 +354,31 @@ class Executor:
             if spec.expr is not None:
                 agg_inputs[name] = S.eval_scalar(spec.expr, env, cctx).broadcast(n)
 
+        if n == 0:
+            # zero-row child (empty table or statically-empty scan): pad to
+            # one all-invalid row so the reductions below keep a nonzero
+            # static extent (jnp.min/.at[0] reject size 0).  The pad row is
+            # masked out, so aggregates see no data and every group slot
+            # comes back unoccupied — same results as a masked-empty input.
+            child = MaskedTable(
+                Table({
+                    c: Column(
+                        jnp.zeros((1,) + tuple(cc.data.shape[1:]), cc.data.dtype),
+                        jnp.zeros((1,), bool), cc.dictionary,
+                    )
+                    for c, cc in child.table.columns.items()
+                }),
+                jnp.zeros((1,), bool),
+            )
+            agg_inputs = {
+                name: S.Value(
+                    jnp.zeros((1,) + tuple(v.data.shape[1:]), v.data.dtype),
+                    jnp.zeros((1,), bool), v.dictionary,
+                )
+                for name, v in agg_inputs.items()
+            }
+            n = 1
+
         if not node.keys:
             # full-table aggregate -> single row
             cols = {}

@@ -57,6 +57,22 @@ class ExecutionPolicy:
     #: whether `execute_async` may defer device sync to result access;
     #: False degrades it to eager synchronous execution (still correct)
     allow_async: bool = dataclasses.field(default=True, compare=False)
+    #: bound on dispatched-but-unsynced `execute_async` calls per session;
+    #: at the bound a new dispatch first blocks on the oldest in-flight one
+    #: (backpressure — a runaway producer cannot queue unbounded device work)
+    max_inflight: int = dataclasses.field(default=64, compare=False)
+
+    # -- mesh-sharding knobs (tuning like the batch knobs: never part of
+    # plan/executable identity — the sharded-executable cache tier keys on
+    # shard_token() separately, so policies that differ only here still
+    # share plans and the single-device executables) -----------------------
+    #: device mesh sharded `execute_many` places batches on (None = the
+    #: single default device; axes named per repro.dist.sharding)
+    mesh: object = dataclasses.field(default=None, compare=False, repr=False)
+    #: shard the stacked parameter axis of `execute_many` buckets over the
+    #: mesh's data axes; divisibility-gated per bucket — buckets the data
+    #: axes don't divide run on the replicated single-device path
+    shard_batches: bool = dataclasses.field(default=False, compare=False)
 
     def __post_init__(self):
         if self.udf_mode not in ("python", "scan"):
@@ -83,7 +99,8 @@ class ExecutionPolicy:
 
     def batched(self, max_batch: int | None = None,
                 coalesce_window_s: float | None = None,
-                allow_async: bool | None = None) -> "ExecutionPolicy":
+                allow_async: bool | None = None,
+                max_inflight: int | None = None) -> "ExecutionPolicy":
         """The same policy with different batch-execution knobs."""
         return dataclasses.replace(
             self,
@@ -93,7 +110,37 @@ class ExecutionPolicy:
                                if coalesce_window_s is None
                                else coalesce_window_s),
             allow_async=self.allow_async if allow_async is None else allow_async,
+            max_inflight=(self.max_inflight if max_inflight is None
+                          else max_inflight),
         )
+
+    def sharded(self, mesh, shard_batches: bool = True) -> "ExecutionPolicy":
+        """The same policy placing `execute_many` batches on ``mesh``."""
+        return dataclasses.replace(
+            self, name=self.name, mesh=mesh, shard_batches=shard_batches,
+        )
+
+    def shard_devices(self) -> int:
+        """Data-parallel shard count batched execution may spread over:
+        the mesh's data-axis product when sharding is on, else 1."""
+        if not (self.shard_batches and self.mesh is not None
+                and self.compile_plan):
+            return 1
+        from repro.dist.sharding import data_axis_size
+
+        return data_axis_size(self.mesh)
+
+    def shard_token(self) -> tuple:
+        """Hashable identity of the sharding placement for the sharded-
+        executable cache tier: the mesh's axis layout plus the concrete
+        device assignment (a rebuilt mesh over the same devices hits; a
+        different device set or shape re-specializes)."""
+        if self.shard_devices() <= 1:
+            return ()
+        mesh = self.mesh
+        axes = tuple((str(a), int(s)) for a, s in mesh.shape.items())
+        devices = tuple(int(d.id) for d in mesh.devices.flat)
+        return (axes, devices)
 
     @classmethod
     def from_kwargs(

@@ -25,7 +25,7 @@ import dataclasses
 import hashlib
 import itertools
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any
 
 import jax
@@ -152,11 +152,18 @@ class AsyncResult:
     outputs are ready and returns the :class:`QueryResult`.  ``done()``
     polls readiness without blocking, so callers can pipeline host work
     against device compute.
+
+    A truly-async result occupies one of the session's bounded in-flight
+    slots (``policy.max_inflight``) until ``result()`` syncs it — the
+    backpressure that keeps a runaway producer from queueing unbounded
+    device work.  Degraded (synchronous) results never hold a slot.
     """
 
-    def __init__(self, result: QueryResult, marker=None):
+    def __init__(self, result: QueryResult, marker=None, session=None):
         self._result = result
         self._marker = marker  # a device array from the in-flight dispatch
+        self._session = session
+        self._released = session is None
 
     def done(self) -> bool:
         m = self._marker
@@ -164,8 +171,18 @@ class AsyncResult:
             return True
         return m.is_ready()
 
+    def _release(self) -> None:
+        if self._released:
+            return
+        self._released = True
+        try:
+            self._session._inflight.remove(self)
+        except ValueError:
+            pass  # already reaped by a later dispatch's admission pass
+
     def result(self) -> QueryResult:
         _ = self._result.masked  # forces sync + materialization
+        self._release()
         return self._result
 
     def __repr__(self):
@@ -344,6 +361,16 @@ class _BatchedExecutable:
     bucket: int
 
 
+@dataclasses.dataclass
+class _ShardedExecutable:
+    fn: Any  # (batched_pargs, catalog_token) -> (mask (B,n), cols), mesh-placed
+    plan: R.RelNode
+    out_dicts: dict  # shared with the unbatched executable's capture
+    stats: dict
+    bucket: int
+    devices: int  # data-parallel shard count the bucket spreads over
+
+
 # ---------------------------------------------------------------------------
 # Session
 # ---------------------------------------------------------------------------
@@ -366,12 +393,17 @@ class Session:
         self._plans: _BoundedCache = _BoundedCache(cap)
         self._execs: _BoundedCache = _BoundedCache(cap)
         self._batch_execs: _BoundedCache = _BoundedCache(cap)
+        self._shard_execs: _BoundedCache = _BoundedCache(cap)
         self._prepared: _BoundedCache = _BoundedCache(cap)
         self.cache_stats = {
             "plan_hits": 0, "plan_misses": 0,
             "exec_hits": 0, "exec_misses": 0,
             "batch_hits": 0, "batch_misses": 0,
+            "shard_hits": 0, "shard_misses": 0,
         }
+        # dispatched-but-unsynced AsyncResults, oldest first (backpressure)
+        self._inflight: deque = deque()
+        self.async_stats = {"inflight_waits": 0, "inflight_peak": 0}
 
     # -- DDL ---------------------------------------------------------------
     # name/table are positional-only so columns may be called "name"/"table"
@@ -390,12 +422,13 @@ class Session:
                 ) -> "PreparedStatement":
         policy = resolve_policy(policy)
         node = query.node if isinstance(query, Q) else query
-        # the handle cache additionally keys on the batch knobs (they are
-        # excluded from fingerprint() so plan/executable caches still
+        # the handle cache additionally keys on the batch/shard knobs (they
+        # are excluded from fingerprint() so plan/executable caches still
         # share, but two prepares with different knobs must not alias —
         # the knobs live on the returned statement's policy)
         key = (plan_fingerprint(node), policy.fingerprint(),
-               policy.max_batch, policy.coalesce_window_s, policy.allow_async)
+               policy.max_batch, policy.coalesce_window_s, policy.allow_async,
+               policy.max_inflight, policy.shard_batches, policy.shard_token())
         ps = self._prepared.get(key)
         if ps is None:
             ps = PreparedStatement(self, node, policy)
@@ -609,6 +642,94 @@ class Session:
         self._batch_execs[key] = entry
         return entry, False
 
+    def _catalog_args_replicated(self, mesh, token: tuple, shard_token: tuple):
+        """Catalog arg pytree broadcast to every device of ``mesh``, cached
+        per (catalog token, mesh placement) — replication is a real
+        cross-device transfer, so it must happen once per catalog state,
+        not once per sharded dispatch.  A small LRU (not a single slot):
+        statements sharded over different meshes interleave without
+        re-replicating per call."""
+        from repro.dist.sharding import replicated_sharding
+
+        key = (token, shard_token)
+        cache = getattr(self, "_shard_args_cache", None)
+        if cache is None:
+            cache = self._shard_args_cache = _BoundedCache(8)
+        args = cache.get(key)
+        if args is None:
+            args = jax.device_put(self._catalog_args(token),
+                                  replicated_sharding(mesh))
+            cache[key] = args
+        return args
+
+    def _sharded_executable(self, node: R.RelNode, query_fp: tuple,
+                            policy: ExecutionPolicy, params0: dict,
+                            sig: tuple, bucket: int,
+                            env_token: tuple | None = None
+                            ) -> tuple[_ShardedExecutable, bool]:
+        """(mesh-sharded executable, shard-cache-hit).  The same vmapped
+        program as :meth:`_batched_executable`, but jitted with the stacked
+        parameter axis sharded over the mesh's data axes
+        (``repro.dist.sharding.pick_data_axes``) and the catalog replicated
+        on every device.  Callers gate on divisibility: a bucket the data
+        axes don't divide never reaches here (it runs on the replicated
+        single-device path instead — rows are never padded onto a mesh
+        that doesn't fit them)."""
+        from repro.dist.sharding import batch_sharding
+
+        if env_token is None:
+            env_token = self._env_token()
+        shard_token = policy.shard_token()
+        key = (query_fp, policy.fingerprint(), env_token, sig, bucket,
+               shard_token)
+        entry = self._shard_execs.get(key)
+        if entry is not None:
+            self.cache_stats["shard_hits"] += 1
+            return entry, True
+        self.cache_stats["shard_misses"] += 1
+        base, _, _ = self._executable(node, query_fp, policy, params0, env_token)
+        mesh = policy.mesh
+        parg_sharding = batch_sharding(mesh, bucket)
+        if parg_sharding is None:  # callers gate; keep the invariant loud
+            raise ValueError(
+                f"bucket {bucket} is not divisible by the mesh data axes"
+            )
+        # one leading-axis spec serves every stacked-param leaf (trailing
+        # dims replicate); catalog args broadcast whole
+        vfn = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
+
+        def fn(batched_pargs: dict, catalog_token: tuple | None = None):
+            cats = self._catalog_args_replicated(
+                mesh, catalog_token if catalog_token is not None
+                else self._catalog_token(), shard_token)
+            pargs = jax.device_put(batched_pargs, parg_sharding)
+            return vfn(cats, pargs)
+
+        entry = _ShardedExecutable(fn, base.plan, base.out_dicts, base.stats,
+                                   bucket, policy.shard_devices())
+        self._shard_execs[key] = entry
+        return entry, False
+
+    # -- async backpressure --------------------------------------------------
+    @property
+    def inflight(self) -> int:
+        """Dispatched-but-unsynced ``execute_async`` calls right now."""
+        return len(self._inflight)
+
+    def _admit_async(self, bound: int) -> None:
+        """Make room for one more in-flight dispatch: reap already-ready
+        results for free, then block on the oldest in-flight dispatch while
+        the session is at the bound (the producer stalls here)."""
+        dq = self._inflight
+        while dq and dq[0].done():
+            dq.popleft()._released = True
+        while len(dq) >= max(1, bound):
+            self.async_stats["inflight_waits"] += 1
+            oldest = dq.popleft()
+            oldest._released = True
+            if oldest._marker is not None:
+                jax.block_until_ready(oldest._marker)
+
 
 # ---------------------------------------------------------------------------
 # PreparedStatement
@@ -693,6 +814,14 @@ class PreparedStatement:
         :class:`QueryResult` per input, in input order, element-wise equal
         to the serial ``execute`` loop.
 
+        A policy carrying a mesh (``policy.sharded(mesh)``) shards the
+        stacked parameter axis over the mesh's data axes: ``max_batch``
+        bounds the *per-device* batch, so one mesh dispatch carries up to
+        ``max_batch × shard_devices()`` parameter sets.  Sharding is
+        divisibility-gated per bucket — buckets the data axes don't divide
+        (small remainders, tiny batches) run on the replicated
+        single-device path, never padded onto a mesh that doesn't fit.
+
         Results materialize lazily from the shared device batch, so an
         unmaterialized result keeps its whole bucket's outputs alive —
         callers holding results long-term should touch ``masked`` (or
@@ -720,21 +849,46 @@ class PreparedStatement:
                         policy=r.policy, cache_hit=r.cache_hit,
                     )
                 continue
-            cap = max(1, self.policy.max_batch)
+            # mesh capacity: max_batch bounds the per-device batch
+            cap = max(1, self.policy.max_batch * self.policy.shard_devices())
             for s in range(0, len(idxs), cap):
                 chunk = idxs[s:s + cap]
                 self._run_batch(chunk, [params_list[i] for i in chunk],
-                                sig, env_token, results)
+                                sig, env_token, results, cap)
         return results  # type: ignore[return-value]
 
     def _run_batch(self, idxs: list[int], plist: list[dict], sig: tuple,
-                   env_token: tuple, results: list) -> None:
+                   env_token: tuple, results: list,
+                   cap: int | None = None) -> None:
         k = len(plist)
-        bucket = batch_bucket(k, self.policy.max_batch)
-        entry, hit = self.session._batched_executable(
-            self.node, self._query_fp, self.policy, plist[0], sig, bucket,
-            env_token,
-        )
+        bucket = batch_bucket(k, cap if cap is not None else self.policy.max_batch)
+        devices = self.policy.shard_devices()
+        shard = False
+        if devices > 1:
+            from repro.dist.sharding import pick_data_axes
+
+            shard = pick_data_axes(self.policy.mesh, bucket) is not None
+            if not shard:
+                # replicated fallback: the mesh-capacity bucket would land
+                # whole on one device, so re-chunk to the per-device bound
+                # (max_batch is a single-device promise, not just a knob)
+                mb = max(1, self.policy.max_batch)
+                if k > mb:
+                    for s in range(0, k, mb):
+                        self._run_batch(idxs[s:s + mb], plist[s:s + mb],
+                                        sig, env_token, results, mb)
+                    return
+                bucket = batch_bucket(k, mb)
+        if shard:
+            entry, hit = self.session._sharded_executable(
+                self.node, self._query_fp, self.policy, plist[0], sig,
+                bucket, env_token,
+            )
+        else:
+            entry, hit = self.session._batched_executable(
+                self.node, self._query_fp, self.policy, plist[0], sig,
+                bucket, env_token,
+            )
         # pad to the bucket by repeating the last param set; padding rows
         # are computed and discarded (never surfaced in results)
         padded = plist + [plist[-1]] * (bucket - k)
@@ -749,6 +903,9 @@ class PreparedStatement:
             "batch_size": k, "batch_bucket": bucket,
             "dispatch_s": t_dispatch, "sync_s": elapsed - t_dispatch,
         }
+        if shard:
+            stats["sharded"] = True
+            stats["shard_devices"] = devices
 
         def materialize(j: int) -> MaskedTable:
             table = Table(
@@ -771,9 +928,16 @@ class PreparedStatement:
         access, so callers pipeline host work (or further dispatches)
         against device compute.  Policies with ``allow_async=False`` (or no
         compiled plan) degrade to synchronous execution behind the same
-        interface."""
+        interface.
+
+        In-flight dispatches are bounded per session by
+        ``policy.max_inflight``: at the bound, a new dispatch first blocks
+        on the oldest unsynced one (and ``AsyncResult.result()`` releases
+        its slot), so a producer outrunning the device stalls instead of
+        queueing unbounded work."""
         if not (self.policy.compile_plan and self.policy.allow_async):
             return AsyncResult(self.execute(params=params))
+        self.session._admit_async(self.policy.max_inflight)
         env_token = self.session._env_token()
         entry, exec_hit, plan_hit = self.session._executable(
             self.node, self._query_fp, self.policy, params, env_token
@@ -801,7 +965,13 @@ class PreparedStatement:
                              policy=self.policy,
                              cache_hit=exec_hit and plan_hit,
                              materialize=materialize)
-        return AsyncResult(result, marker=mask)
+        ar = AsyncResult(result, marker=mask, session=self.session)
+        self.session._inflight.append(ar)
+        self.session.async_stats["inflight_peak"] = max(
+            self.session.async_stats["inflight_peak"],
+            len(self.session._inflight),
+        )
+        return ar
 
     def _execute_compiled(self, params) -> QueryResult:
         env_token = self.session._env_token()

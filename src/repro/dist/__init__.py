@@ -16,15 +16,20 @@ from repro.dist.compress import (
     quantize_int8,
 )
 from repro.dist.sharding import (
+    batch_sharding,
     batch_specs,
     cache_specs,
+    data_axis_size,
     param_specs,
+    pick_data_axes,
+    replicated_sharding,
     shardings_for,
 )
 
 __all__ = [
     "set_activation_mesh", "clear_activation_mesh", "current_activation_mesh",
     "shard_batch", "param_specs", "batch_specs", "cache_specs",
-    "shardings_for", "compress_tree", "decompress_tree", "init_error_tree",
-    "quantize_int8", "dequantize_int8", "ef_quantize",
+    "shardings_for", "pick_data_axes", "data_axis_size", "batch_sharding",
+    "replicated_sharding", "compress_tree", "decompress_tree",
+    "init_error_tree", "quantize_int8", "dequantize_int8", "ef_quantize",
 ]

@@ -36,7 +36,8 @@ def pick_data_axes(mesh, dim: int):
     """The PartitionSpec entry for sharding ``dim`` over the data axes:
     pod+data jointly when their product divides, data alone as fallback,
     None when neither divides.  The single divisibility-gating rule every
-    data-axis placement in this package (and activation sharding) uses."""
+    data-axis placement in this package (and activation sharding, and the
+    engine's sharded ``execute_many`` batches) uses."""
     present = _data_axes(mesh)
     for axes in (present, present[-1:]):
         if not axes:
@@ -45,6 +46,31 @@ def pick_data_axes(mesh, dim: int):
         if n > 1 and dim % n == 0:
             return axes if len(axes) > 1 else axes[0]
     return None
+
+
+def data_axis_size(mesh) -> int:
+    """Number of data-parallel shards the mesh offers a batch axis (the
+    product of the present data axes; 1 on a data-free or absent mesh)."""
+    if mesh is None:
+        return 1
+    return _axis_product(mesh, _data_axes(mesh))
+
+
+def batch_sharding(mesh, dim: int):
+    """NamedSharding placing a leading ``dim``-sized batch axis over the
+    data axes, or None when divisibility gating rejects it.  Used as a jit
+    in-sharding prefix: trailing dims are implicitly replicated, so one
+    spec serves every leaf of a stacked-parameter pytree."""
+    entry = pick_data_axes(mesh, dim)
+    if entry is None:
+        return None
+    return NamedSharding(mesh, PartitionSpec(entry))
+
+
+def replicated_sharding(mesh):
+    """NamedSharding replicating a value on every device of ``mesh`` —
+    how catalog tables broadcast under sharded batch execution."""
+    return NamedSharding(mesh, PartitionSpec())
 
 
 def _fsdp_entry(mesh, shape, taken: int | None):

@@ -139,7 +139,8 @@ class AdmissionPolicy:
 
     def __init__(self, froid: bool = True,
                  policy: ExecutionPolicy | str | None = None,
-                 scheduler: CoalescingScheduler | None = None):
+                 scheduler: CoalescingScheduler | None = None,
+                 mesh=None):
         self.session = Session()
         default_rules(self.session)
         if policy is None:
@@ -147,6 +148,10 @@ class AdmissionPolicy:
         # the queue table is re-loaded every tick, so whole-plan jit would
         # recompile per tick — run the chosen policy eagerly
         self.policy = resolve_policy(policy).eager()
+        # mesh for the per-request coalescing path: admission microbatches
+        # shard their stacked request axis over the mesh's data axes (the
+        # tick path is eager and unaffected)
+        self.mesh = mesh
         self._query = _tick_query()
         # per-request path: a second session sharing the rule registry but
         # with an empty catalog, so the compiled request statement's cache
@@ -179,8 +184,11 @@ class AdmissionPolicy:
     def request_statement(self):
         """The rules as one prepared parameterized statement (lazy)."""
         if self._request_stmt is None:
+            policy = _compiled_variant(self.policy)
+            if self.mesh is not None:
+                policy = policy.sharded(self.mesh)
             self._request_stmt = self._request_session.prepare(
-                _request_query(), _compiled_variant(self.policy)
+                _request_query(), policy
             )
         return self._request_stmt
 

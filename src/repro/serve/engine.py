@@ -49,17 +49,20 @@ class ServeEngine:
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 256,
                  eos_id: int | None = None, froid_admission: bool = True,
                  admission_policy=None, seed: int = 0,
-                 admission_scheduler: CoalescingScheduler | None = None):
+                 admission_scheduler: CoalescingScheduler | None = None,
+                 admission_mesh=None):
         self.model = model
         self.params = params
         self.slots = slots
         self.max_len = max_len
         self.eos_id = eos_id
         # admission_policy: ExecutionPolicy or preset name ("froid",
-        # "interpreted", "hekaton"); froid_admission is the legacy switch
+        # "interpreted", "hekaton"); froid_admission is the legacy switch.
+        # admission_mesh shards the online (submit/drain) admission
+        # microbatches over a device mesh so intake traffic fills devices.
         self.admission = AdmissionPolicy(
             froid=froid_admission, policy=admission_policy,
-            scheduler=admission_scheduler,
+            scheduler=admission_scheduler, mesh=admission_mesh,
         )
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)

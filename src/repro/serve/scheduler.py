@@ -79,7 +79,11 @@ class CoalescingScheduler:
 
     ``max_batch`` / ``window_s`` default per statement from its policy's
     batch knobs (``ExecutionPolicy.max_batch`` / ``coalesce_window_s``), so
-    presets tune coalescing without scheduler-side configuration.
+    presets tune coalescing without scheduler-side configuration.  For a
+    mesh-sharded statement the flush-on-full threshold scales to the mesh:
+    ``max_batch`` bounds the *per-device* batch, so a policy sharding over
+    D devices coalesces up to ``max_batch × D`` requests before a full
+    flush — online traffic fills every device instead of one.
 
     Stats (``self.stats``): submitted, batches, drained, flush reasons.
     """
@@ -102,7 +106,10 @@ class CoalescingScheduler:
 
     # -- knob resolution ----------------------------------------------------
     def _max_batch(self, stmt: PreparedStatement) -> int:
-        return self.max_batch if self.max_batch is not None else stmt.policy.max_batch
+        base = (self.max_batch if self.max_batch is not None
+                else stmt.policy.max_batch)
+        # mesh-sized buckets: per-device bound × data-parallel shard count
+        return base * stmt.policy.shard_devices()
 
     def _window(self, stmt: PreparedStatement) -> float:
         return (self.window_s if self.window_s is not None

@@ -1,0 +1,219 @@
+"""Shared machinery for the differential conformance harness.
+
+The oracle checks live here, outside any test module, so both suites drive
+the exact same code:
+
+* ``tests/test_conformance_oracle.py`` — deterministic fixed programs,
+  runs everywhere (no extra deps), including the forced-8-device CI job.
+* ``tests/test_property_froid.py`` — hypothesis generates random programs
+  and parameter sets and feeds them to the same checks (CI installs
+  hypothesis; the module skips where it is absent).
+
+Oracles (both element-wise):
+
+* **Mode oracle** — FROID == INTERPRETED == HEKATON on any supported
+  program: identical masks/validity, values within float tolerance.
+* **Invocation oracle** — ``execute_many`` (sharded over whatever device
+  mesh exists, and unsharded) == the serial ``execute`` loop, including
+  mixed-signature parameter lists, empty lists, and empty tables.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from repro.core import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    Session,
+    UdfBuilder,
+    avg_,
+    case,
+    col,
+    count_,
+    lit,
+    max_,
+    min_,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.core import scalar as S
+
+N_ROWS = 23
+N_KEYS = 7
+
+AGGS = {
+    "sum": lambda e: sum_(e),
+    "min": lambda e: min_(e),
+    "max": lambda e: max_(e),
+    "avg": lambda e: avg_(e),
+    "count": lambda e: count_(e),
+}
+
+
+def make_session(seed: int, n_rows: int = N_ROWS) -> Session:
+    """Session over random data; ``n_rows=0`` is the empty-table case."""
+    rng = np.random.default_rng(seed)
+    s = Session()
+    s.create_table(
+        "facts",
+        fk=rng.integers(0, N_KEYS, n_rows),
+        val=np.round(rng.uniform(-10, 10, n_rows), 2).astype(np.float32),
+        qty=rng.integers(0, 9, n_rows),
+    )
+    s.create_table("keys", k=np.arange(N_KEYS))
+    return s
+
+
+def build_udf(ops) -> UdfBuilder:
+    """Materialize an ops list (the harness's program encoding) into a UDF.
+
+    Ops: ("declare", name, init|None) · ("set", name, expr) ·
+    ("select_agg", tgt, agg, correlated, thresh) ·
+    ("ifelse", pred, then_tgt, then_expr, else_tgt|None, else_expr, ret_in_then)
+    · ("return", expr)
+    """
+    u = UdfBuilder("f", [("p", "float32")], "float32")
+    for op in ops:
+        if op[0] == "declare":
+            _, name, init = op
+            u.declare(name, "float32", init)
+        elif op[0] == "set":
+            _, name, e = op
+            u.set(name, e)
+        elif op[0] == "select_agg":
+            _, tgt, agg, corr, thresh = op
+            pred = (
+                col("fk") == param("p")
+                if corr
+                else col("qty") >= lit(thresh)
+            )
+            u.select({tgt: AGGS[agg](col("val"))}, frm=scan("facts"), where=pred)
+        elif op[0] == "ifelse":
+            _, pred, t_tgt, t_expr, e_tgt, e_expr, ret_in_then = op
+            with u.if_(pred):
+                u.set(t_tgt, t_expr)
+                if ret_in_then:
+                    u.return_(var(t_tgt) + 1.0)
+            if e_tgt is not None:
+                with u.else_():
+                    u.set(e_tgt, e_expr)
+        elif op[0] == "return":
+            u.return_(op[1])
+    return u
+
+
+#: hand-picked programs mirroring the generator's shapes: correlated and
+#: uncorrelated aggregates, NULL guards, early returns, CASE/COALESCE and
+#: division arithmetic — the deterministic floor under the fuzzing suite
+FIXED_PROGRAMS = {
+    "correlated_min_null_guard": [
+        ("declare", "v0", lit(1.5)),
+        ("select_agg", "v0", "min", True, 0),
+        ("ifelse", var("v0").is_null(), "v0", param("p") * 2.0,
+         None, None, True),
+        ("return", var("v0") + param("p")),
+    ],
+    "uncorrelated_sum_case": [
+        ("declare", "v0", param("p") * 1.0),
+        ("select_agg", "v0", "sum", False, 4),
+        ("set", "v0", case([(var("v0") > param("p"), var("v0"))], lit(0.5))),
+        ("return", S.Coalesce([var("v0"), lit(0.0)])),
+    ],
+    "avg_ifelse_branches": [
+        ("declare", "v0", None),
+        ("select_agg", "v0", "avg", True, 0),
+        ("ifelse", var("v0") > lit(0.0), "v0", var("v0") / 2.0,
+         "v0", param("p") - 3.0, False),
+        ("return", var("v0") * 2.0 - 1.0),
+    ],
+    "count_max_division": [
+        ("declare", "v0", lit(2.0)),
+        ("declare", "v1", None),
+        ("select_agg", "v1", "count", False, 7),
+        ("set", "v0", param("p") / var("v0")),
+        ("select_agg", "v1", "max", False, 7),
+        ("return", S.Coalesce([var("v1"), var("v0"), lit(-1.0)])),
+    ],
+}
+
+
+def param_query():
+    """Parameterized calling query: query params feed both the filter and
+    the UDF argument, so parameter sets change results, not just plans."""
+    return (
+        scan("keys")
+        .filter(col("k") < param("cut"))
+        .compute(out=udf("f", col("k") * 1.0 + param("shift")))
+        .project("k", "out")
+    )
+
+
+def _rows(result):
+    """(mask, {col: (values, validity)}) as host arrays for comparison."""
+    masked = result.masked
+    cols = {
+        n: (np.asarray(c.data, dtype=np.float64), np.asarray(c.validity()))
+        for n, c in masked.table.columns.items()
+    }
+    return np.asarray(masked.mask), cols
+
+
+def assert_rows_equal(expected, got, label, rtol=2e-3, atol=1e-3):
+    """Element-wise result identity: masks bit-equal, validity bit-equal on
+    surviving rows, values within float tolerance where both valid."""
+    em, ecols = _rows(expected)
+    gm, gcols = _rows(got)
+    np.testing.assert_array_equal(em, gm, err_msg=f"{label}: mask mismatch")
+    assert ecols.keys() == gcols.keys(), f"{label}: schema mismatch"
+    for n in ecols:
+        ev, evalid = ecols[n]
+        gv, gvalid = gcols[n]
+        sel = em  # surviving rows only: dead rows carry arbitrary values
+        np.testing.assert_array_equal(
+            evalid[sel], gvalid[sel], err_msg=f"{label}: validity({n})"
+        )
+        live = sel & evalid & gvalid
+        np.testing.assert_allclose(
+            ev[live], gv[live], rtol=rtol, atol=atol,
+            err_msg=f"{label}: values({n})",
+        )
+
+
+def check_mode_oracle(ops, seed: int, n_rows: int = N_ROWS) -> None:
+    """FROID == INTERPRETED == HEKATON on the given program."""
+    db = make_session(seed, n_rows)
+    db.create_function(build_udf(ops).build())
+    q = param_query()
+    params = {"cut": 5, "shift": 0.5}
+    baseline = db.execute(q, FROID, params=params)
+    for policy in (INTERPRETED, HEKATON):
+        r = db.execute(q, policy, params=params)
+        assert_rows_equal(baseline, r, f"FROID vs {policy.name}")
+
+
+def check_invocation_oracle(ops, seed: int, n_rows: int,
+                            params_list: list[dict]) -> None:
+    """execute_many (unsharded, sharded, hekaton) == serial execute loop."""
+    db = make_session(seed, n_rows)
+    db.create_function(build_udf(ops).build())
+    q = param_query()
+
+    serial_stmt = db.prepare(q, FROID)
+    serial = [serial_stmt.execute(params=p) for p in params_list]
+
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    for policy, label in (
+        (FROID, "execute_many"),
+        (FROID.sharded(mesh), "execute_many[sharded]"),
+        (HEKATON, "execute_many[hekaton]"),
+    ):
+        batched = db.prepare(q, policy).execute_many(params_list)
+        assert len(batched) == len(serial)
+        for i, (s, b) in enumerate(zip(serial, batched)):
+            assert_rows_equal(s, b, f"{label}[{i}] vs serial")

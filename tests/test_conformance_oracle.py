@@ -1,0 +1,45 @@
+"""Deterministic floor under the differential conformance harness: the
+fixed programs in ``conformance_util.FIXED_PROGRAMS`` run through the same
+mode/invocation oracles the hypothesis suite fuzzes, so conformance is
+enforced even where hypothesis is unavailable — and on the forced-8-device
+CI job, where the sharded arm of the invocation oracle actually spans the
+mesh.
+"""
+import pytest
+
+from conformance_util import (
+    FIXED_PROGRAMS,
+    N_ROWS,
+    check_invocation_oracle,
+    check_mode_oracle,
+)
+
+PROGRAMS = sorted(FIXED_PROGRAMS)
+
+#: mixed-signature parameter list (int and float shifts split sub-batches),
+#: with repeats so bucketing/padding paths engage
+PARAMS_MIXED = (
+    [{"cut": c, "shift": 0.5} for c in (2, 7, 4, 0, 5)]
+    + [{"cut": c, "shift": 1} for c in (3, 6, 1)]
+)
+
+
+@pytest.mark.parametrize("name", PROGRAMS)
+@pytest.mark.parametrize("n_rows", [0, N_ROWS], ids=["empty", "populated"])
+def test_mode_oracle_fixed_programs(name, n_rows):
+    check_mode_oracle(FIXED_PROGRAMS[name], seed=1, n_rows=n_rows)
+
+
+@pytest.mark.parametrize("name", PROGRAMS)
+@pytest.mark.parametrize("n_rows", [0, N_ROWS], ids=["empty", "populated"])
+def test_invocation_oracle_fixed_programs(name, n_rows):
+    check_invocation_oracle(
+        FIXED_PROGRAMS[name], seed=2, n_rows=n_rows, params_list=PARAMS_MIXED
+    )
+
+
+def test_invocation_oracle_empty_params_list():
+    check_invocation_oracle(
+        FIXED_PROGRAMS["correlated_min_null_guard"], seed=0,
+        n_rows=N_ROWS, params_list=[],
+    )

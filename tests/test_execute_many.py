@@ -275,6 +275,151 @@ def test_execute_async_disallowed_degrades_to_sync(db):
 
 
 # ---------------------------------------------------------------------------
+# async backpressure
+# ---------------------------------------------------------------------------
+
+
+def test_async_backpressure_bounds_inflight():
+    """A runaway producer stalls at policy.max_inflight: each dispatch past
+    the bound first syncs the oldest in-flight one, so the session never
+    holds more than the bound."""
+    db = Session()
+    _populate(db, n_detail=300_000, n_t=2000)  # device work outlasts dispatch
+    stmt = db.prepare(_q(), FROID.batched(max_inflight=2))
+    futs = []
+    for k in range(8):
+        futs.append(stmt.execute_async(params={"cutoff": int(k % 50)}))
+        assert db.inflight <= 2
+    assert db.async_stats["inflight_peak"] <= 2
+    rs = [f.result() for f in futs]
+    assert db.inflight == 0  # result() released every slot
+    _assert_same(
+        [stmt.execute(params={"cutoff": int(k % 50)}) for k in range(8)], rs
+    )
+
+
+def test_admit_async_blocks_at_bound():
+    """Deterministic bound check: with the queue full of never-ready
+    dispatches, admission pops (and waits on) exactly the oldest."""
+    db = Session()
+
+    class _Stub:
+        _marker = None
+        _released = False
+
+        def done(self):
+            return False
+
+    s1, s2 = _Stub(), _Stub()
+    db._inflight.extend([s1, s2])
+    db._admit_async(2)
+    assert db.async_stats["inflight_waits"] == 1
+    assert s1._released and not s2._released
+    assert list(db._inflight) == [s2]
+    db._admit_async(2)  # below the bound now: no further wait
+    assert db.async_stats["inflight_waits"] == 1
+
+
+def test_async_result_releases_slot(db):
+    stmt = db.prepare(_q(), FROID.batched(max_inflight=4))
+    fut = stmt.execute_async(params={"cutoff": 13})
+    assert db.inflight == 1
+    fut.result()
+    assert db.inflight == 0
+    fut.result()  # idempotent: no double release / no error
+    assert db.inflight == 0
+
+
+def test_async_degraded_results_hold_no_slot(db):
+    stmt = db.prepare(_q(), FROID.batched(allow_async=False, max_inflight=1))
+    futs = [stmt.execute_async(params={"cutoff": 5}) for _ in range(3)]
+    assert db.inflight == 0  # synchronous execution never occupies a slot
+    assert db.async_stats["inflight_waits"] == 0
+    for f in futs:
+        f.result()
+
+
+def test_batched_max_inflight_knob_not_identity():
+    assert FROID.batched(max_inflight=2) == FROID
+    assert FROID.batched(max_inflight=2).fingerprint() == FROID.fingerprint()
+    assert FROID.batched(max_inflight=2).max_inflight == 2
+
+
+# ---------------------------------------------------------------------------
+# cache invalidation between submit() and drain()
+# ---------------------------------------------------------------------------
+
+
+def test_ddl_between_submit_and_drain_not_stale(db):
+    """DDL while tickets sit in a pending microbatch must re-specialize at
+    drain time — the env token is read when the batch drains, not when the
+    requests were submitted."""
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    params_list = [{"cutoff": k} for k in (10, 20, 49)]
+    stmt.execute_many(params_list)  # warm the pre-DDL vmapped executable
+    tickets = [sched.submit(stmt, p) for p in params_list]
+    rng = np.random.default_rng(17)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 50, 2000),
+        d_val=rng.uniform(0, 100, 2000).astype(np.float32),
+    )
+    assert sched.flush() == 3
+    results = [t.result() for t in tickets]
+    assert not results[0].cache_hit  # fresh specialization, not the warm one
+    _assert_same([stmt.execute(params=p) for p in params_list], results)
+
+
+def test_catalog_poke_between_submit_and_drain_not_stale(db):
+    """Direct catalog[...] pokes (no DDL call) between submit and drain
+    likewise reach the drained batch."""
+    from repro.tables.table import Table
+
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    params = {"cutoff": 49}
+    warm = stmt.execute(params=params)
+    t = sched.submit(stmt, params)
+    rng = np.random.default_rng(23)
+    poked = Table.from_arrays(
+        d_key=rng.integers(0, 50, 2000),
+        d_val=rng.uniform(0, 100, 2000).astype(np.float32),
+    )
+    poked.compute_stats()
+    db.catalog["detail"] = poked
+    sched.flush()
+    r = t.result()
+    _assert_same([stmt.execute(params=params)], [r])
+    m = np.asarray(r.masked.mask)
+    assert not np.allclose(
+        np.asarray(warm.masked.table.columns["v"].data)[m],
+        np.asarray(r.masked.table.columns["v"].data)[m],
+    )
+
+
+def test_udf_replacement_between_submit_and_drain_not_stale(db):
+    """Re-registering a UDF between submit and drain re-plans: the drained
+    batch runs the new body."""
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock)
+    stmt = db.prepare(_q(), FROID)
+    params = {"cutoff": 49}
+    t = sched.submit(stmt, params)
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.return_(lit(-1.0))  # replacement body: constant
+    db.create_function(u.build())
+    sched.flush()
+    r = t.result()
+    m = np.asarray(r.masked.mask)
+    np.testing.assert_allclose(
+        np.asarray(r.masked.table.columns["v"].data)[m], -1.0
+    )
+
+
+# ---------------------------------------------------------------------------
 # coalescing microbatch scheduler
 # ---------------------------------------------------------------------------
 

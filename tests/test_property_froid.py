@@ -1,12 +1,20 @@
-"""Property-based test of the paper's core claim (§4.4): for ANY UDF built
-from the supported constructs, the algebrized + optimized + set-oriented
-froid execution equals the iterative per-tuple interpretation.
+"""Hypothesis-driven differential conformance harness (§4.4 of the paper,
+grown into an oracle suite for the engine's invocation surfaces).
 
 A hypothesis strategy generates random imperative programs over the
 supported grammar (DECLARE/SET/SELECT-assign/IF-ELSE/RETURN, scalar
-subqueries with aggregates, arithmetic/comparison/CASE expressions), random
-data, and compares froid ON vs the interpreter bit-for-bit on validity and
-within float tolerance on values.
+subqueries with aggregates, arithmetic/comparison/CASE expressions),
+random data (including zero-row tables), and random parameter sets, then
+feeds them to the shared oracles in ``conformance_util``:
+
+* **Mode oracle** — FROID == INTERPRETED == HEKATON element-wise.
+* **Invocation oracle** — ``execute_many`` (sharded over whatever device
+  mesh exists, and unsharded) == the serial ``execute`` loop, including
+  mixed-signature parameter lists, empty lists, and empty tables.
+
+``tests/test_conformance_oracle.py`` runs fixed programs through the same
+checks without hypothesis; this module is the generative layer on top
+(CI installs hypothesis — the module skips where it is absent).
 """
 import numpy as np
 import pytest
@@ -15,26 +23,21 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
-from repro.core import (
-    Database,
-    UdfBuilder,
-    avg_,
-    case,
-    col,
-    count_,
-    lit,
-    max_,
-    min_,
-    param,
-    scan,
-    sum_,
-    udf,
-    var,
+from conformance_util import (
+    AGGS,
+    N_KEYS,
+    N_ROWS,
+    build_udf,
+    check_invocation_oracle,
+    check_mode_oracle,
 )
+from repro.core import Database, case, col, lit, param, scan, udf, var
 from repro.core import scalar as S
 
-N_ROWS = 23
-N_KEYS = 7
+ORACLE_SETTINGS = dict(
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
 
 
 def make_db(seed: int) -> Database:
@@ -93,15 +96,6 @@ def expr_strategy(varnames: list[str], depth: int = 2):
     )
 
 
-AGGS = {
-    "sum": lambda e: sum_(e),
-    "min": lambda e: min_(e),
-    "max": lambda e: max_(e),
-    "avg": lambda e: avg_(e),
-    "count": lambda e: count_(e),
-}
-
-
 @st.composite
 def udf_programs(draw):
     """Generate (builder-ops, n_vars) for a random supported UDF."""
@@ -156,41 +150,9 @@ def udf_programs(draw):
     return ops
 
 
-def build_udf(ops) -> UdfBuilder:
-    u = UdfBuilder("f", [("p", "float32")], "float32")
-    for op in ops:
-        if op[0] == "declare":
-            _, name, init = op
-            u.declare(name, "float32", init)
-        elif op[0] == "set":
-            _, name, e = op
-            u.set(name, e)
-        elif op[0] == "select_agg":
-            _, tgt, agg, corr, thresh = op
-            pred = (
-                col("fk") == param("p")
-                if corr
-                else col("qty") >= lit(thresh)
-            )
-            u.select({tgt: AGGS[agg](col("val"))}, frm=scan("facts"), where=pred)
-        elif op[0] == "ifelse":
-            _, pred, t_tgt, t_expr, e_tgt, e_expr, ret_in_then = op
-            with u.if_(pred):
-                u.set(t_tgt, t_expr)
-                if ret_in_then:
-                    u.return_(var(t_tgt) + 1.0)
-            if e_tgt is not None:
-                with u.else_():
-                    u.set(e_tgt, e_expr)
-        elif op[0] == "return":
-            u.return_(op[1])
-    return u
-
-
 @settings(
     max_examples=40,
-    deadline=None,
-    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+    **ORACLE_SETTINGS,
 )
 @given(ops=udf_programs(), seed=st.integers(0, 3))
 def test_froid_equals_interpreter(ops, seed):
@@ -213,3 +175,51 @@ def test_froid_equals_interpreter(ops, seed):
     assert (av == bv).all(), f"validity mismatch: {av} vs {bv}"
     both = av & bv
     np.testing.assert_allclose(a[both], b[both], rtol=2e-3, atol=1e-3)
+
+
+# --------------------------------------------------------------------------
+# differential oracles: FROID == INTERPRETED == HEKATON, and
+# execute_many (sharded + unsharded) == the serial execute loop
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=15, **ORACLE_SETTINGS)
+@given(ops=udf_programs(), seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]))
+def test_all_policies_agree_elementwise(ops, seed, n_rows):
+    """Mode oracle: the paper's three Table-5 execution modes are
+    indistinguishable element-wise on any supported program."""
+    try:
+        build_udf(ops).build()
+    except AssertionError:
+        pytest.skip("builder rejected program")
+    check_mode_oracle(ops, seed, n_rows)
+
+
+_param_sets = st.lists(
+    st.fixed_dictionaries({
+        "cut": st.integers(0, N_KEYS + 1),
+        # int vs float shifts have different param signatures, so drawn
+        # lists exercise mixed-signature sub-batching
+        "shift": st.one_of(
+            st.integers(-2, 2),
+            st.floats(-2, 2, allow_nan=False, width=32),
+        ),
+    }),
+    min_size=0, max_size=10,
+)
+
+
+@settings(max_examples=10, **ORACLE_SETTINGS)
+@given(ops=udf_programs(), seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]), params_list=_param_sets)
+def test_execute_many_equals_serial_loop_oracle(ops, seed, n_rows, params_list):
+    """Invocation oracle: one vmapped/sharded device program over the
+    stacked parameter axis returns exactly what N serial executions do —
+    for any supported UDF, any mixed-signature parameter list, and empty
+    tables."""
+    try:
+        build_udf(ops).build()
+    except AssertionError:
+        pytest.skip("builder rejected program")
+    check_invocation_oracle(ops, seed, n_rows, params_list)
