@@ -1,0 +1,187 @@
+"""Multi-statement fusion: per-statement drain vs fused drain of one
+mixed-statement queue.
+
+A serving queue holds tickets for K *different* prepared statements over
+the same tables.  The per-statement arm drains it the PR-2/3 way — one
+``execute_many`` device program per statement (K dispatch+sync round
+trips); the fused arm drains the same queue through one fused device
+program (``CoalescingScheduler(fuse=True)`` → ``Session.execute_fused``:
+shared scans execute once, outputs come back tagged per statement).
+
+    PYTHONPATH=src python -m benchmarks.bench_fused [--quick]
+
+Rows:
+    fused/serial/<n>    — serial `execute` loop reference over the queue
+    fused/perstmt/<n>   — per-statement drain (K execute_many programs)
+    fused/fused/<n>     — fused drain (1 device program)
+
+`derived` on the fused row records speedup vs the per-statement arm plus
+statements / shared-subtree / host-CPU counts — the margin comes from
+amortizing dispatch+sync overhead and deduplicating the shared catalog
+work, so it grows with statement count and shrinks as per-statement
+compute dominates (big tables, huge batches).  Element-wise identity
+between all arms is asserted before timing; a parity failure fails the
+suite.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    FROID,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.serve.scheduler import CoalescingScheduler
+
+M_ROWS = 20_000
+N_T = 2_000
+M_ROWS_QUICK = 5_000
+N_T_QUICK = 500
+#: tickets per statement in the mixed queue
+PER_STMT = 64
+PER_STMT_QUICK = 32
+SERIAL_N = 48
+
+
+def _setup(quick: bool) -> Session:
+    m = M_ROWS_QUICK if quick else M_ROWS
+    n = N_T_QUICK if quick else N_T
+    db = Session()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, m),
+        d_val=rng.uniform(0, 100, m).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 400, n))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    return db
+
+
+def _queries():
+    """Six different statements over the shared tables: UDF-bearing,
+    arithmetic, aggregating — all scanning T (and detail through the UDF),
+    so a fused program has real work to dedup."""
+    return [
+        scan("T").filter(col("a") < param("cutoff"))
+                 .compute(v=udf("key_total", col("a"))).project("v"),
+        scan("T").filter(col("a") >= param("lo"))
+                 .compute(w=col("a") * param("scale")).project("a", "w"),
+        scan("T").compute(v=udf("key_total", col("a")) / param("div"))
+                 .project("v"),
+        scan("T").filter((col("a") > param("lo")) & (col("a") < param("hi")))
+                 .compute(z=col("a") + param("off")).project("z"),
+        scan("T").compute(b=col("a") * 2).project("b"),  # parameter-free
+        scan("T").filter(col("a") % param("mod") == lit(0))
+                 .compute(v=udf("key_total", col("a"))).project("a", "v"),
+    ]
+
+
+def _mixed_queue(stmts, per_stmt: int, seed: int = 7):
+    """Round-robin interleaved [(stmt, params)] — the serving queue shape."""
+    rng = np.random.default_rng(seed)
+    waves = []
+    for i in range(per_stmt):
+        waves.append((stmts[0], {"cutoff": int(rng.integers(1, 400))}))
+        waves.append((stmts[1], {"lo": int(rng.integers(0, 200)),
+                                 "scale": float(round(rng.uniform(0.5, 2), 2))}))
+        waves.append((stmts[2], {"div": float(round(rng.uniform(1, 4), 2))}))
+        waves.append((stmts[3], {"lo": int(rng.integers(0, 100)),
+                                 "hi": int(rng.integers(200, 400)),
+                                 "off": int(rng.integers(0, 10))}))
+        waves.append((stmts[4], None))
+        waves.append((stmts[5], {"mod": int(rng.integers(2, 6))}))
+    return waves
+
+
+def _check_identical(expected, got):
+    for s, b in zip(expected, got):
+        m = np.asarray(s.masked.mask)
+        np.testing.assert_array_equal(m, np.asarray(b.masked.mask))
+        for n, c in s.masked.table.columns.items():
+            np.testing.assert_allclose(
+                np.asarray(b.masked.table.columns[n].data)[m],
+                np.asarray(c.data)[m], rtol=1e-5,
+            )
+
+
+def _drain_time(queue, fuse: bool, iters: int = 5) -> tuple[float, dict]:
+    """Median wall seconds to drain the queue through a scheduler."""
+    last_stats = {}
+    ts = []
+    for _ in range(iters):
+        sched = CoalescingScheduler(max_batch=1024, window_s=10.0, fuse=fuse)
+        t0 = time.perf_counter()
+        tickets = [sched.submit(s, p) for s, p in queue]
+        sched.flush()
+        for t in tickets:
+            t.result().masked  # deliver every row (fair: both arms slice)
+        ts.append(time.perf_counter() - t0)
+        last_stats = tickets[0].result().stats
+    return float(np.median(ts)), last_stats
+
+
+def run(quick: bool = False):
+    db = _setup(quick)
+    per_stmt = PER_STMT_QUICK if quick else PER_STMT
+    cpus = os.cpu_count() or 1
+    stmts = [db.prepare(q, FROID) for q in _queries()]
+    queue = _mixed_queue(stmts, per_stmt)
+    n = len(queue)
+
+    # parity first (also pays both arms' jit)
+    serial_ref = [s.execute(params=p) for s, p in queue[:SERIAL_N]]
+    per_r = db.execute_fused([(s, dict(p) if p else {})
+                              for s, p in queue])  # fused path warm-up
+    _check_identical(serial_ref, per_r[:SERIAL_N])
+    sched = CoalescingScheduler(max_batch=1024, window_s=10.0, fuse=False)
+    tk = [sched.submit(s, p) for s, p in queue]
+    sched.flush()
+    _check_identical(serial_ref, [t.result() for t in tk][:SERIAL_N])
+
+    t0 = time.perf_counter()
+    for s, p in queue[:SERIAL_N]:
+        s.execute(params=p)
+    t_serial = time.perf_counter() - t0
+    emit(f"fused/serial/{SERIAL_N}", t_serial / SERIAL_N * 1e6,
+         f"{SERIAL_N} dispatch+sync round trips")
+
+    t_per, _ = _drain_time(queue, fuse=False)
+    emit(f"fused/perstmt/{n}", t_per / n * 1e6,
+         f"statements={len(stmts)} programs={len(stmts)}")
+    t_fused, st = _drain_time(queue, fuse=True)
+    emit(
+        f"fused/fused/{n}", t_fused / n * 1e6,
+        f"speedup={t_per / t_fused:.2f}x statements={st.get('fused_statements')} "
+        f"programs={st.get('fused_programs')} "
+        f"shared_subtrees={st.get('shared_subtrees')} host_cpus={cpus} "
+        f"fused={bool(st.get('fused'))}",
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

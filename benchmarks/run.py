@@ -43,7 +43,7 @@ def main() -> None:
                     help="reduced cardinalities / query subsets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
-                         "table5,prepared,execmany,shardmany")
+                         "table5,prepared,execmany,shardmany,fused")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -57,6 +57,7 @@ def main() -> None:
         bench_compile,
         bench_execute_many,
         bench_factor,
+        bench_fused,
         bench_invocations,
         bench_native,
         bench_prepared,
@@ -77,6 +78,7 @@ def main() -> None:
         "prepared": bench_prepared.run,    # Session prepare/execute lifecycle
         "execmany": bench_execute_many.run,  # batched invocation engine
         "shardmany": bench_sharded_many.run,  # mesh-sharded batches
+        "fused": bench_fused.run,          # multi-statement fusion
     }
     only = args.only.split(",") if args.only else list(suites)
 

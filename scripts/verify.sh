@@ -16,7 +16,18 @@ if [ "${VERIFY_SHARDED:-1}" != "0" ]; then
   echo "--- sharded parity: pytest on a forced 8-device host mesh"
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q tests/test_sharded_many.py \
-      tests/test_conformance_oracle.py tests/test_execute_many.py
+      tests/test_conformance_oracle.py tests/test_execute_many.py \
+      tests/test_fused.py
+fi
+
+# multi-statement fusion: fused-drain parity + perf smoke (the in-bench
+# asserts are the parity check; the speedup bar is host-aware — see the CI
+# fused gate).  VERIFY_FUSED=0 skips.
+if [ "${VERIFY_FUSED:-1}" != "0" ]; then
+  echo "--- fused drain parity + perf smoke: benchmarks.run --quick --only fused"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only fused \
+      --run-id verify-fused --json-dir /tmp
 fi
 
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then

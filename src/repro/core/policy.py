@@ -74,6 +74,19 @@ class ExecutionPolicy:
     #: axes don't divide run on the replicated single-device path
     shard_batches: bool = dataclasses.field(default=False, compare=False)
 
+    # -- multi-statement fusion knobs (tuning like the batch/shard knobs:
+    # never part of plan/executable identity — the fused-executable cache
+    # tier keys on the member set separately, so policies that differ only
+    # here still share plans and per-statement executables) ----------------
+    #: allow this statement to be coalesced with *other* statements into one
+    #: fused device program (shared scans, tagged outputs); False always
+    #: takes the per-statement path
+    fuse: bool = dataclasses.field(default=True, compare=False)
+    #: most distinct statements one fused program may carry; larger mixed
+    #: queues split into multiple fused programs (singleton remainders fall
+    #: back to the per-statement path)
+    max_fused_statements: int = dataclasses.field(default=8, compare=False)
+
     def __post_init__(self):
         if self.udf_mode not in ("python", "scan"):
             raise ValueError(f"udf_mode must be python|scan, got {self.udf_mode!r}")
@@ -118,6 +131,18 @@ class ExecutionPolicy:
         """The same policy placing `execute_many` batches on ``mesh``."""
         return dataclasses.replace(
             self, name=self.name, mesh=mesh, shard_batches=shard_batches,
+        )
+
+    def fused(self, fuse: bool | None = None,
+              max_fused_statements: int | None = None) -> "ExecutionPolicy":
+        """The same policy with different multi-statement fusion knobs."""
+        return dataclasses.replace(
+            self,
+            name=self.name,
+            fuse=self.fuse if fuse is None else fuse,
+            max_fused_statements=(self.max_fused_statements
+                                  if max_fused_statements is None
+                                  else max_fused_statements),
         )
 
     def shard_devices(self) -> int:

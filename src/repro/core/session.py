@@ -371,6 +371,27 @@ class _ShardedExecutable:
     devices: int  # data-parallel shard count the bucket spreads over
 
 
+@dataclasses.dataclass
+class _FuseMember:
+    """One member of a fused program: a (statement plan, parameter
+    signature) pair stacked over its own batch bucket."""
+
+    plan: R.RelNode
+    sig: tuple
+    bucket: int
+    pdicts: dict  # param name -> DictEncoding | None (host metadata)
+    key: tuple  # (query fingerprint, signature, bucket) — cache identity
+
+
+@dataclasses.dataclass
+class _FusedExecutable:
+    fn: Any  # (pargs_tuple, catalog_token) -> ((mask (B,n), cols), ...) per member
+    plans: list  # member plans, fusion order
+    out_dicts: list  # per-member {column -> DictEncoding | None} capture
+    stats: dict  # trace stats + merge stats (shared_subtrees, ...)
+    members: list  # _FuseMember descriptors, fusion order
+
+
 # ---------------------------------------------------------------------------
 # Session
 # ---------------------------------------------------------------------------
@@ -394,12 +415,14 @@ class Session:
         self._execs: _BoundedCache = _BoundedCache(cap)
         self._batch_execs: _BoundedCache = _BoundedCache(cap)
         self._shard_execs: _BoundedCache = _BoundedCache(cap)
+        self._fuse_execs: _BoundedCache = _BoundedCache(cap)
         self._prepared: _BoundedCache = _BoundedCache(cap)
         self.cache_stats = {
             "plan_hits": 0, "plan_misses": 0,
             "exec_hits": 0, "exec_misses": 0,
             "batch_hits": 0, "batch_misses": 0,
             "shard_hits": 0, "shard_misses": 0,
+            "fuse_hits": 0, "fuse_misses": 0,
         }
         # dispatched-but-unsynced AsyncResults, oldest first (backpressure)
         self._inflight: deque = deque()
@@ -428,7 +451,8 @@ class Session:
         # the knobs live on the returned statement's policy)
         key = (plan_fingerprint(node), policy.fingerprint(),
                policy.max_batch, policy.coalesce_window_s, policy.allow_async,
-               policy.max_inflight, policy.shard_batches, policy.shard_token())
+               policy.max_inflight, policy.shard_batches, policy.shard_token(),
+               policy.fuse, policy.max_fused_statements)
         ps = self._prepared.get(key)
         if ps is None:
             ps = PreparedStatement(self, node, policy)
@@ -710,6 +734,219 @@ class Session:
         self._shard_execs[key] = entry
         return entry, False
 
+    # -- multi-statement fusion ----------------------------------------------
+    def _fused_executable(self, members: list, policy: ExecutionPolicy,
+                          shard: bool, env_token: tuple
+                          ) -> tuple[_FusedExecutable, bool]:
+        """(fused executable, fuse-cache-hit).  One jitted program carrying
+        every member: the merge pass's shared subtrees execute once, then
+        each member's plan vmaps over its own stacked parameter axis (see
+        ``repro.fuse.program``).  Keyed by the member tuple in canonical
+        (sorted) order × policy × env token, so a mixed queue arriving in
+        any order warm-hits, and any DDL/catalog poke invalidates every
+        member at once via the env token."""
+        shard_token = policy.shard_token() if shard else ()
+        key = (tuple(m.key for m in members), policy.fingerprint(),
+               env_token, shard, shard_token)
+        entry = self._fuse_execs.get(key)
+        if entry is not None:
+            self.cache_stats["fuse_hits"] += 1
+            return entry, True
+        self.cache_stats["fuse_misses"] += 1
+        from repro.fuse.program import build_fused_raw
+
+        raw, out_dicts, trace_stats, _ = build_fused_raw(self, members, policy)
+        jitted = jax.jit(raw)
+        if shard:
+            from repro.dist.sharding import batch_sharding, replicated_sharding
+
+            mesh = policy.mesh
+            # parameter-free members are unbatched: their (empty) arg
+            # pytree replicates; batched members shard their stacked axis
+            shardings = tuple(
+                batch_sharding(mesh, m.bucket) if m.sig
+                else replicated_sharding(mesh)
+                for m in members
+            )
+
+            def fn(pargs_tuple, catalog_token: tuple | None = None):
+                cats = self._catalog_args_replicated(
+                    mesh, catalog_token if catalog_token is not None
+                    else self._catalog_token(), shard_token)
+                placed = tuple(
+                    jax.device_put(p, s) for p, s in zip(pargs_tuple, shardings)
+                )
+                return jitted(cats, placed)
+        else:
+            def fn(pargs_tuple, catalog_token: tuple | None = None):
+                return jitted(self._catalog_args(catalog_token), pargs_tuple)
+
+        entry = _FusedExecutable(fn, [m.plan for m in members], out_dicts,
+                                 trace_stats, members)
+        self._fuse_execs[key] = entry
+        return entry, False
+
+    def execute_fused(self, calls) -> list[QueryResult]:
+        """Execute a mixed-statement call list — ``[(stmt, params), ...]``
+        — through as few fused device programs as fusability allows.
+
+        Calls whose statements may share a program (same session, policy
+        fingerprint and sharding placement; ``policy.fuse`` on; pure
+        plans — see ``repro.fuse.analysis``) coalesce into fused programs
+        of at most ``policy.max_fused_statements`` distinct statements;
+        everything else (eager policies, foreign sessions, singleton
+        groups) falls back to the per-statement ``execute_many`` path.
+
+        Returns one :class:`QueryResult` per call, in input order,
+        element-wise equal to the per-statement serial loop.  Fused
+        results carry ``stats['fused'] / fused_statements /
+        fused_programs / shared_subtrees`` — the shared-scan evidence."""
+        from repro.fuse.analysis import partition_calls
+
+        calls = [(stmt, dict(p) if p else {}) for stmt, p in calls]
+        if not calls:
+            return []
+        results: list[QueryResult | None] = [None] * len(calls)
+        groups, fallbacks = partition_calls(self, calls)
+        for stmt, items in fallbacks:
+            rs = stmt.execute_many([p for _, p in items])
+            for (i, _), r in zip(items, rs):
+                results[i] = r
+        for group in groups:
+            self._run_fused(group, results)
+        return results  # type: ignore[return-value]
+
+    def _run_fused(self, group: list, results: list) -> None:
+        """Run one fused group — ``[(index, stmt, params), ...]`` with ≥ 2
+        distinct statements and compatible policies — and scatter its
+        QueryResults into ``results``."""
+        env_token = self._env_token()
+        policy = group[0][1].policy  # fingerprint-equal across the group
+        # member = one (statement, signature) pair stacked over its tickets
+        order: list[tuple] = []
+        by_key: dict[tuple, dict] = {}
+        for idx, stmt, params in group:
+            sig = param_signature(params)
+            k = (stmt._query_fp, sig)
+            ent = by_key.get(k)
+            if ent is None:
+                ent = by_key[k] = {"stmt": stmt, "sig": sig,
+                                   "idxs": [], "params": []}
+                order.append(k)
+            ent["idxs"].append(idx)
+            ent["params"].append(params)
+        # one fused wave per drain: tickets beyond the mesh-scaled batch
+        # bound ride the per-statement path (already batched + pipelined).
+        # max_batch is a non-identity knob, so fingerprint-equal members
+        # may disagree — honor the strictest bound (and keep the cap, and
+        # therefore the buckets and cache keys, arrival-order independent)
+        cap = max(1, min(s.policy.max_batch for _, s, _ in group)
+                  * policy.shard_devices())
+        for k in order:
+            ent = by_key[k]
+            if len(ent["params"]) > cap:
+                extra_i, extra_p = ent["idxs"][cap:], ent["params"][cap:]
+                ent["idxs"], ent["params"] = ent["idxs"][:cap], ent["params"][:cap]
+                for i, r in zip(extra_i, ent["stmt"].execute_many(extra_p)):
+                    results[i] = r
+        # canonical member order: fused cache keys are insensitive to the
+        # queue's arrival order (repr: fingerprints are not comparable)
+        order.sort(key=repr)
+        members: list[_FuseMember] = []
+        for k in order:
+            ent = by_key[k]
+            stmt = ent["stmt"]
+            plan, _ = self._cached_plan(stmt.node, stmt._query_fp, stmt.policy)
+            # parameter-free members execute once, unbatched — every ticket
+            # shares the single result (mirrors execute_many's group path)
+            bucket = 1 if not ent["sig"] else batch_bucket(len(ent["params"]), cap)
+            pdicts = {
+                name: _param_value(v).dictionary
+                for name, v in ent["params"][0].items()
+            }
+            members.append(_FuseMember(plan, ent["sig"], bucket, pdicts,
+                                       (stmt._query_fp, ent["sig"], bucket)))
+        devices = policy.shard_devices()
+        shard = False
+        if devices > 1:
+            from repro.dist.sharding import pick_data_axes
+
+            # one program, one placement: shard only when every batched
+            # member's bucket divides the data axes (else whole program
+            # replicates; parameter-free members are unbatched and always
+            # ride replicated)
+            shard = all(
+                pick_data_axes(policy.mesh, m.bucket) is not None
+                for m in members if m.sig
+            ) and any(m.sig for m in members)
+        entry, hit = self._fused_executable(members, policy, shard, env_token)
+        pargs_tuple = []
+        t0 = time.perf_counter()
+        for m, k in zip(members, order):
+            plist = by_key[k]["params"]
+            if m.sig:
+                padded = plist + [plist[-1]] * (m.bucket - len(plist))
+                pargs_tuple.append(_stack_params(padded))
+            else:  # parameter-free member: unbatched, no stacked args
+                pargs_tuple.append({})
+        outs = entry.fn(tuple(pargs_tuple), env_token[0])
+        t_dispatch = time.perf_counter() - t0
+        jax.block_until_ready([mask for mask, _ in outs])
+        elapsed = time.perf_counter() - t0
+        n_stmts = len({m.key[0] for m in members})
+        for j, (m, k) in enumerate(zip(members, order)):
+            ent = by_key[k]
+            mask, cols = outs[j]
+            stats = {
+                **entry.stats, "compiled": True, "batched": True,
+                "fused": True, "fused_programs": 1,
+                "fused_statements": n_stmts, "fused_members": len(members),
+                "batch_size": len(ent["params"]), "batch_bucket": m.bucket,
+                "dispatch_s": t_dispatch, "sync_s": elapsed - t_dispatch,
+            }
+            if shard:
+                stats["sharded"] = True
+                stats["shard_devices"] = devices
+            out_dicts = entry.out_dicts[j]
+
+            if not m.sig:
+                # unbatched member: one shared materialization serves
+                # every ticket (distinct QueryResult shells, like
+                # execute_many's parameter-free group)
+                cell: dict = {}
+
+                def mat_shared(mask=mask, cols=cols, out_dicts=out_dicts,
+                               cell=cell):
+                    if "v" not in cell:
+                        cell["v"] = MaskedTable(
+                            Table({n: Column(data, valid, out_dicts.get(n))
+                                   for n, (data, valid) in cols.items()}),
+                            mask,
+                        )
+                    return cell["v"]
+
+                for i in ent["idxs"]:
+                    results[i] = QueryResult(
+                        None, m.plan, elapsed, dict(stats),
+                        policy=ent["stmt"].policy, cache_hit=hit,
+                        materialize=mat_shared,
+                    )
+                continue
+
+            def materialize(row, mask=mask, cols=cols, out_dicts=out_dicts):
+                table = Table(
+                    {n: Column(data[row], valid[row], out_dicts.get(n))
+                     for n, (data, valid) in cols.items()}
+                )
+                return MaskedTable(table, mask[row])
+
+            for row, i in enumerate(ent["idxs"]):
+                results[i] = QueryResult(
+                    None, m.plan, elapsed, dict(stats),
+                    policy=ent["stmt"].policy, cache_hit=hit,
+                    materialize=(lambda row=row, mat=materialize: mat(row)),
+                )
+
     # -- async backpressure --------------------------------------------------
     @property
     def inflight(self) -> int:
@@ -822,6 +1059,14 @@ class PreparedStatement:
         (small remainders, tiny batches) run on the replicated
         single-device path, never padded onto a mesh that doesn't fit.
 
+        Chunked dispatches are **pipelined**: every chunk is dispatched
+        before any chunk syncs (bounded by ``policy.max_inflight`` unsynced
+        dispatches — past the bound a new dispatch first syncs the oldest),
+        then one barrier at the end collects them all, so host-side
+        stacking of chunk i+1 overlaps device compute of chunk i.
+        ``stats['pipelined_chunks']`` reports how many chunks the call
+        dispatched before that barrier.
+
         Results materialize lazily from the shared device batch, so an
         unmaterialized result keeps its whole bucket's outputs alive —
         callers holding results long-term should touch ``masked`` (or
@@ -837,6 +1082,7 @@ class PreparedStatement:
         for i, p in enumerate(params_list):
             groups.setdefault(param_signature(p), []).append(i)
         results: list[QueryResult | None] = [None] * len(params_list)
+        pending: list[dict] = []  # dispatched-but-unsynced chunk records
         for sig, idxs in groups.items():
             if not sig:
                 # parameter-free: every invocation is the same program run —
@@ -853,13 +1099,19 @@ class PreparedStatement:
             cap = max(1, self.policy.max_batch * self.policy.shard_devices())
             for s in range(0, len(idxs), cap):
                 chunk = idxs[s:s + cap]
-                self._run_batch(chunk, [params_list[i] for i in chunk],
-                                sig, env_token, results, cap)
+                self._dispatch_batch(chunk, [params_list[i] for i in chunk],
+                                     sig, env_token, pending, cap)
+        # the barrier: all chunks are in flight; sync in dispatch order
+        npend = len(pending)
+        for rec in pending:
+            self._finalize_batch(rec, results, npend)
         return results  # type: ignore[return-value]
 
-    def _run_batch(self, idxs: list[int], plist: list[dict], sig: tuple,
-                   env_token: tuple, results: list,
-                   cap: int | None = None) -> None:
+    def _dispatch_batch(self, idxs: list[int], plist: list[dict], sig: tuple,
+                        env_token: tuple, pending: list,
+                        cap: int | None = None) -> None:
+        """Dispatch one chunk (no sync) and append its record to
+        ``pending`` for the caller's end-of-call barrier."""
         k = len(plist)
         bucket = batch_bucket(k, cap if cap is not None else self.policy.max_batch)
         devices = self.policy.shard_devices()
@@ -875,8 +1127,8 @@ class PreparedStatement:
                 mb = max(1, self.policy.max_batch)
                 if k > mb:
                     for s in range(0, k, mb):
-                        self._run_batch(idxs[s:s + mb], plist[s:s + mb],
-                                        sig, env_token, results, mb)
+                        self._dispatch_batch(idxs[s:s + mb], plist[s:s + mb],
+                                             sig, env_token, pending, mb)
                     return
                 bucket = batch_bucket(k, mb)
         if shard:
@@ -889,6 +1141,15 @@ class PreparedStatement:
                 self.node, self._query_fp, self.policy, plist[0], sig,
                 bucket, env_token,
             )
+        # runahead bound: past max_inflight unsynced chunks, sync the
+        # oldest before issuing another dispatch (same backpressure rule
+        # as execute_async — the host cannot queue unbounded device work)
+        bound = max(1, self.policy.max_inflight)
+        unsynced = [r for r in pending if not r["synced"]]
+        while len(unsynced) >= bound:
+            oldest = unsynced.pop(0)
+            jax.block_until_ready(oldest["mask"])
+            oldest["synced"] = True
         # pad to the bucket by repeating the last param set; padding rows
         # are computed and discarded (never surfaced in results)
         padded = plist + [plist[-1]] * (bucket - k)
@@ -896,16 +1157,33 @@ class PreparedStatement:
         pargs = _stack_params(padded)
         mask, cols = entry.fn(pargs, env_token[0])
         t_dispatch = time.perf_counter() - t0
+        pending.append({
+            "idxs": idxs, "entry": entry, "hit": hit, "mask": mask,
+            "cols": cols, "k": k, "bucket": bucket, "shard": shard,
+            "devices": devices, "t0": t0, "dispatch_s": t_dispatch,
+            "synced": False,
+        })
+
+    def _finalize_batch(self, rec: dict, results: list,
+                        pipelined: int) -> None:
+        """Sync one dispatched chunk and build its QueryResults.
+        ``sync_s`` is the wait from dispatch end to this chunk's barrier
+        arrival — under pipelining that wait overlaps the later chunks'
+        host-side stacking, which is the point."""
+        entry, mask, cols = rec["entry"], rec["mask"], rec["cols"]
         jax.block_until_ready(mask)
-        elapsed = time.perf_counter() - t0
+        rec["synced"] = True
+        elapsed = time.perf_counter() - rec["t0"]
         stats = {
             **entry.stats, "compiled": True, "batched": True,
-            "batch_size": k, "batch_bucket": bucket,
-            "dispatch_s": t_dispatch, "sync_s": elapsed - t_dispatch,
+            "batch_size": rec["k"], "batch_bucket": rec["bucket"],
+            "dispatch_s": rec["dispatch_s"],
+            "sync_s": elapsed - rec["dispatch_s"],
+            "pipelined_chunks": pipelined,
         }
-        if shard:
+        if rec["shard"]:
             stats["sharded"] = True
-            stats["shard_devices"] = devices
+            stats["shard_devices"] = rec["devices"]
 
         def materialize(j: int) -> MaskedTable:
             table = Table(
@@ -914,10 +1192,10 @@ class PreparedStatement:
             )
             return MaskedTable(table, mask[j])
 
-        for j, i in enumerate(idxs):
+        for j, i in enumerate(rec["idxs"]):
             results[i] = QueryResult(
                 None, entry.plan, elapsed, dict(stats), policy=self.policy,
-                cache_hit=hit,
+                cache_hit=rec["hit"],
                 materialize=(lambda j=j: materialize(j)),
             )
 

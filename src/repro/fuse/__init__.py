@@ -1,0 +1,46 @@
+"""Multi-statement fusion engine.
+
+The paper's set-oriented argument, applied one level beyond PR 2/3's
+batching: a serving queue holding N *different* prepared statements over
+the same tables still pays N device dispatches and N redundant evaluations
+of whatever catalog-only work the statements share.  This package merges
+the members of such a queue into **one fused device program** — shared
+scans/subtrees execute once, per-statement outputs come back tagged — with
+a fusability analysis that routes anything unsafe back to the
+per-statement path.
+
+Layers (front to back):
+
+* :mod:`repro.fuse.analysis` — which calls may fuse, grouped by
+  compatible policy; everything else falls back.
+* :mod:`repro.fuse.merge` — the plan-merge pass: dedup common param-free
+  subtrees across member plans by structural fingerprint.
+* :mod:`repro.fuse.program` — the fused raw closure: shared-subtree pool
+  plus one ``vmap`` per member inside a single jit.
+
+Entry points: :meth:`repro.core.Session.execute_fused` runs a mixed call
+list; ``CoalescingScheduler(fuse=True)`` drains mixed-statement queues
+through it; fused executables live in the session's ``fuse_hits`` /
+``fuse_misses`` cache tier.
+"""
+from repro.fuse.analysis import fusion_group_key, is_fusable, partition_calls
+from repro.fuse.merge import (
+    FusedPlan,
+    merge_plans,
+    plan_is_pure,
+    subtree_is_constant,
+)
+from repro.fuse.program import FUSE_PAD, SharedScanExecutor, build_fused_raw
+
+__all__ = [
+    "FusedPlan",
+    "FUSE_PAD",
+    "SharedScanExecutor",
+    "build_fused_raw",
+    "fusion_group_key",
+    "is_fusable",
+    "merge_plans",
+    "partition_calls",
+    "plan_is_pure",
+    "subtree_is_constant",
+]

@@ -1,0 +1,111 @@
+"""Fusability analysis: which calls of a mixed-statement queue may share
+one fused device program, and which must fall back.
+
+A call ``(stmt, params)`` is **fusable** when:
+
+* the statement belongs to the session doing the fusing (a foreign
+  session has its own catalog/registry state — its calls fall back to
+  that session's own per-statement path);
+* its policy compiles whole plans (eager policies have no device program
+  to merge) and has ``fuse`` enabled;
+* its bound plan is side-effect free (:func:`repro.fuse.merge.plan_is_pure`
+  — true of every operator the executor knows today; the gate exists so a
+  future effectful node degrades to the per-statement path instead of
+  silently re-ordering effects across statements).
+
+Fusable calls group by **compatible policy**: equal identity fingerprints
+(the plans must agree on inlining/optimization/compilation) and equal
+sharding placement (one fused program has one mesh layout).  Groups wider
+than ``policy.max_fused_statements`` distinct statements split; a split
+remainder (or a group) holding a single distinct statement gains nothing
+from fusion and falls back to ``execute_many``.
+"""
+from __future__ import annotations
+
+from repro.fuse.merge import plan_is_pure
+
+
+def fusion_group_key(stmt) -> tuple:
+    """Compatibility key: calls fuse only within one of these."""
+    p = stmt.policy
+    return (p.fingerprint(), p.shard_devices(), p.shard_token())
+
+
+def _plan_pure_cached(stmt) -> bool:
+    """Purity of the statement's *current* plan, memoized per plan object
+    (the plan changes identity on DDL, refreshing the verdict; the walk
+    itself must not run once per ticket on the drain hot path)."""
+    plan = stmt._ensure_plan()
+    cached = getattr(stmt, "_fuse_pure", None)
+    if cached is not None and cached[0] is plan:
+        return cached[1]
+    ok = plan_is_pure(plan)
+    stmt._fuse_pure = (plan, ok)
+    return ok
+
+
+def is_fusable(session, stmt) -> bool:
+    """Per-statement gate (see module docstring)."""
+    if stmt.session is not session:
+        return False
+    p = stmt.policy
+    if not (p.compile_plan and p.fuse):
+        return False
+    return _plan_pure_cached(stmt)
+
+
+def partition_calls(session, calls):
+    """Split an indexed call list into fused groups and fallbacks.
+
+    ``calls`` is ``[(stmt, params), ...]``; returns ``(groups, fallbacks)``
+    where each group is ``[(index, stmt, params), ...]`` destined for one
+    fused program, and ``fallbacks`` is ``[(stmt, [(index, params), ...])]``
+    in first-appearance order for the per-statement path.  Input order is
+    carried by the indices; callers scatter results back through them.
+    """
+    fallback_by_stmt: dict[int, tuple] = {}  # id(stmt) -> (stmt, items)
+    grouped: dict[tuple, list] = {}
+    verdicts: dict[int, tuple | None] = {}  # id(stmt) -> group key | fallback
+
+    def fall_back(idx, stmt, params):
+        ent = fallback_by_stmt.get(id(stmt))
+        if ent is None:
+            ent = fallback_by_stmt[id(stmt)] = (stmt, [])
+        ent[1].append((idx, params))
+
+    for idx, (stmt, params) in enumerate(calls):
+        # one fusability verdict + group key per distinct statement, not
+        # per ticket (queues repeat statements thousands of times)
+        v = verdicts.get(id(stmt), "unseen")
+        if v == "unseen":
+            v = (fusion_group_key(stmt) if is_fusable(session, stmt)
+                 else None)
+            verdicts[id(stmt)] = v
+        if v is not None:
+            grouped.setdefault(v, []).append((idx, stmt, params))
+        else:
+            fall_back(idx, stmt, params)
+
+    groups = []
+    for items in grouped.values():
+        # distinct statements in first-appearance order
+        order: list[tuple] = []
+        by_fp: dict[tuple, list] = {}
+        for idx, stmt, params in items:
+            fp = stmt._query_fp
+            if fp not in by_fp:
+                by_fp[fp] = []
+                order.append(fp)
+            by_fp[fp].append((idx, stmt, params))
+        cap = max(1, min(s.policy.max_fused_statements for _, s, _ in items))
+        for s in range(0, len(order), cap):
+            chunk_fps = order[s:s + cap]
+            chunk = [it for fp in chunk_fps for it in by_fp[fp]]
+            if len(chunk_fps) < 2:
+                # fusing one statement is the per-statement path with extra
+                # steps — route it there directly
+                for idx, stmt, params in chunk:
+                    fall_back(idx, stmt, params)
+            else:
+                groups.append(chunk)
+    return groups, list(fallback_by_stmt.values())

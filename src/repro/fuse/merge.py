@@ -1,0 +1,134 @@
+"""Plan-merge pass: align fusable plans over a shared table set.
+
+The fusion engine's front half.  Given the bound+optimized plans of the
+statements a fused program will carry, this pass finds the work they have
+in common so the back half (:mod:`repro.fuse.program`) computes it once:
+
+* every **param-free subtree** (no ``Param``/``Outer``/``Var`` references
+  anywhere below it, including inside nested subquery plans) is a candidate
+  for sharing — its result depends only on catalog state, which all members
+  of a fused program see identically;
+* candidates are keyed by :func:`repro.core.session.plan_fingerprint`, so
+  two independently-built trees of the same shape dedup (the cross-
+  statement version of the executor's per-``node_id`` CSE memo);
+* sharing is **maximal**: when a subtree is shared, its descendants are
+  subsumed (they execute inside the one shared evaluation).
+
+The output is a :class:`FusedPlan`: the member plans in fusion order, the
+distinct shared subtrees (each with a canonical node to execute), and a
+``node_id -> fingerprint`` map the fused executor consults to skip straight
+to the shared result.  Identical *whole* statements still fuse — their
+param-dependent roots simply contribute no shared subtree beyond whatever
+catalog-only work they contain.
+
+Deliberately out of scope (ROADMAP open item): common subexpressions that
+are *not* identical subtrees — correlated subquery bodies differing only in
+their outer binding, and shared sub-subtrees between two distinct shared
+roots.  Those need expression-level rewriting, not plan alignment.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.session import plan_fingerprint
+
+#: every relalg node the executor can run is side-effect free; anything
+#: else (a future effectful node, a foreign plan object) blocks fusion
+PURE_NODES = (
+    R.Scan, R.ConstantScan, R.Compute, R.Project, R.Filter,
+    R.Join, R.Apply, R.GroupAgg, R.Sort,
+)
+
+
+def plan_is_pure(plan: R.RelNode) -> bool:
+    """True when every node of ``plan`` is a known side-effect-free
+    operator — the fusability analysis's safety gate."""
+    return all(isinstance(n, PURE_NODES) for n in R.walk_plan(plan))
+
+
+def subtree_is_constant(node: R.RelNode) -> bool:
+    """True when the subtree's result depends only on catalog state: no
+    query parameters, no outer-row references, no unbound UDF locals, and
+    no non-deterministic intrinsics (``rand()`` must evaluate per
+    statement, not once per pool) — anywhere below it, including nested
+    subquery plans (``S.walk`` descends into ``ScalarSubquery``/``Exists``
+    plans)."""
+    for n in R.walk_plan(node):
+        for e in n.exprs():
+            for s in S.walk(e):
+                if isinstance(s, (S.Param, S.Outer, S.Var)):
+                    return False
+                if isinstance(s, S.Func) and s.name in S.Func.NON_DETERMINISTIC:
+                    return False
+    return True
+
+
+@dataclasses.dataclass
+class FusedPlan:
+    """The merge pass's product (see module docstring)."""
+
+    members: list  # member plans, fusion order
+    shared: list  # [(fingerprint, canonical subtree)] — execute-once set
+    shared_ids: dict  # node_id -> fingerprint, across every member plan
+    stats: dict  # merge-level counters (shared_subtrees, shared_refs, ...)
+
+
+def merge_plans(plans: list) -> FusedPlan:
+    """Merge ``plans`` into one fused-program description.
+
+    Two passes: count occurrences of every constant subtree fingerprint
+    across all members (a subtree occurring twice — in two members, or
+    twice within one — is worth computing once), then mark shared subtrees
+    top-down so only maximal ones survive.
+    """
+    const_fp: dict[int, tuple | None] = {}  # node_id -> fp | not-shareable
+    occurrences: dict[tuple, int] = {}
+    canonical: dict[tuple, R.RelNode] = {}
+    for plan in plans:
+        for n in R.walk_plan(plan):
+            fp = const_fp.get(n.node_id, "unseen")
+            if fp == "unseen":
+                fp = plan_fingerprint(n) if subtree_is_constant(n) else None
+                const_fp[n.node_id] = fp
+            if fp is not None:
+                occurrences[fp] = occurrences.get(fp, 0) + 1
+                canonical.setdefault(fp, n)
+
+    shared_fps = {fp for fp, c in occurrences.items() if c >= 2}
+    shared: list[tuple[tuple, R.RelNode]] = []
+    shared_ids: dict[int, tuple] = {}
+    emitted: set = set()
+
+    def mark(n: R.RelNode) -> None:
+        fp = const_fp.get(n.node_id)
+        if fp is not None and fp in shared_fps:
+            shared_ids[n.node_id] = fp
+            if fp not in emitted:
+                emitted.add(fp)
+                shared.append((fp, canonical[fp]))
+            return  # maximal: descendants execute inside the shared result
+        for c in n.children():
+            mark(c)
+
+    for plan in plans:
+        mark(plan)
+
+    total_scans = sum(
+        1 for p in plans for n in R.walk_plan(p) if isinstance(n, R.Scan)
+    )
+    shared_scan_nodes = sum(
+        1 for _, sub in shared for n in R.walk_plan(sub)
+        if isinstance(n, R.Scan)
+    )
+    stats = {
+        "fused_members": len(plans),
+        "shared_subtrees": len(shared),
+        # marked references across members; refs - subtrees = evaluations
+        # the fused program skips relative to the per-statement path
+        "shared_refs": len(shared_ids),
+        "total_scans": total_scans,
+        "shared_scan_nodes": shared_scan_nodes,
+    }
+    return FusedPlan(list(plans), shared, shared_ids, stats)

@@ -1,0 +1,154 @@
+"""Fused device programs: N statements, one trace, shared scans.
+
+The fusion engine's back half.  Given the member descriptors the session
+assembled (plan, parameter signature, batch bucket per member) this module
+builds the single **raw closure** the session jits into the fused
+executable:
+
+1. rebuild the catalog from the (broadcast) table arguments — exactly as
+   the per-statement closure in ``Session._executable`` does;
+2. execute every shared subtree the merge pass found **once**, on an
+   ordinary executor, into a ``fingerprint -> MaskedTable`` pool;
+3. ``vmap`` each member's plan over its own stacked parameter axis, with a
+   :class:`SharedScanExecutor` that answers marked subtrees straight from
+   the pool (the pool entries are loop-invariant w.r.t. the parameter
+   axis, so they enter each member's trace as broadcast constants);
+4. return one ``(mask, columns)`` pair per member — the tagged fused
+   result the session slices per-ticket.
+
+Members with an empty parameter signature skip the batch axis entirely
+(their tickets are all the same execution): the plan runs once, unbatched,
+and every ticket shares the single result — mirroring ``execute_many``'s
+parameter-free group handling.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.executor import Executor
+from repro.core.interpreter import Interpreter
+from repro.fuse.merge import merge_plans
+from repro.tables.table import Column, Table
+
+#: reserved stacked-parameter name (filtered out before the executor binds
+#: params) — kept for callers that need a dummy batch axis; the leading
+#: underscores keep it out of any legal identifier's way
+FUSE_PAD = "__fuse_pad__"
+
+
+class SharedScanExecutor(Executor):
+    """An :class:`Executor` that serves marked subtrees from the fused
+    program's shared-result pool instead of re-executing them.
+
+    ``shared_ids`` is the merge pass's ``node_id -> fingerprint`` map;
+    ``shared_results`` the pool built in step 2 of the fused closure.  Any
+    node not in the map executes normally — including everything *inside*
+    a shared subtree, which only ever runs under the pool builder.
+    """
+
+    def __init__(self, catalog, shared_ids, shared_results, **kwargs):
+        super().__init__(catalog, **kwargs)
+        self._shared_ids = shared_ids
+        self._shared_results = shared_results
+
+    def _exec(self, node, ctx, memo):
+        fp = self._shared_ids.get(node.node_id)
+        if fp is not None:
+            hit = self._shared_results.get(fp)
+            if hit is not None:
+                return hit
+        return super()._exec(node, ctx, memo)
+
+
+def _plans_have_udf_calls(plans) -> bool:
+    return any(
+        isinstance(e, S.UdfCall)
+        for p in plans
+        for n in R.walk_plan(p)
+        for ex in n.exprs()
+        for e in S.walk(ex)
+    )
+
+
+def build_fused_raw(session, members, policy):
+    """Build the fused raw closure for ``members`` (see module docstring).
+
+    Returns ``(raw, out_dicts, trace_stats, merged)``: the untraced
+    closure, the per-member output-dictionary captures, the trace-time
+    stats dict (both filled on first execution, like the per-statement
+    executable's), and the :class:`~repro.fuse.merge.FusedPlan`.
+    """
+    plans = [m.plan for m in members]
+    merged = merge_plans(plans)
+
+    # iterative hook for UDF calls left in the plans (froid OFF / hybrid);
+    # 'scan' mode is the only jit-traceable interpreter (see _executable)
+    hook = None
+    if _plans_have_udf_calls(plans):
+        interp = Interpreter(session.catalog, session.registry, mode="scan")
+        hook = interp.eval_udf_call
+
+    meta = {
+        tname: {c: col.dictionary for c, col in t.columns.items()}
+        for tname, t in session.catalog.items()
+    }
+    out_dicts: list[dict] = [{} for _ in members]
+    trace_stats: dict = {}
+
+    def raw(table_args, pargs_tuple):
+        catalog = {
+            tname: Table(
+                {
+                    c: Column(data, valid, meta[tname][c])
+                    for c, (data, valid) in cols.items()
+                }
+            )
+            for tname, cols in table_args.items()
+        }
+        # step 2: the shared pool — each distinct cross-statement subtree
+        # executes once, outside every member's vmap
+        shared_ex = Executor(catalog, udf_column_evaluator=hook,
+                             use_pallas_agg=policy.pallas_agg)
+        shared_results = {
+            fp: shared_ex.execute(sub) for fp, sub in merged.shared
+        }
+        scanned = shared_ex.stats
+        outs = []
+        for i, (m, pargs) in enumerate(zip(members, pargs_tuple)):
+            # hoisted out of the traced per-row closure (executor state is
+            # batch-independent)
+            ex = SharedScanExecutor(
+                catalog, merged.shared_ids, shared_results,
+                udf_column_evaluator=hook, use_pallas_agg=policy.pallas_agg,
+            )
+
+            def one(pa, i=i, m=m, ex=ex):
+                pvals = {
+                    name: S.Value(data, valid, m.pdicts.get(name))
+                    for name, (data, valid) in pa.items()
+                    if name != FUSE_PAD
+                }
+                out = ex.execute(m.plan, params=pvals)
+                for cname, c in out.table.columns.items():
+                    out_dicts[i][cname] = c.dictionary  # host metadata
+                cols = {
+                    cname: (c.data, c.validity())
+                    for cname, c in out.table.columns.items()
+                }
+                return out.mask, cols
+
+            if m.sig:
+                outs.append(jax.vmap(one)(pargs))
+            else:
+                # parameter-free member: one unbatched execution serves
+                # every ticket (no per-ticket slicing at delivery)
+                outs.append(one({}))
+            for k, v in ex.stats.items():
+                scanned[k] = scanned.get(k, 0) + v
+        trace_stats.update(scanned)
+        trace_stats.update(merged.stats)
+        return tuple(outs)
+
+    return raw, out_dicts, trace_stats, merged

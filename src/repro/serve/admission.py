@@ -140,7 +140,7 @@ class AdmissionPolicy:
     def __init__(self, froid: bool = True,
                  policy: ExecutionPolicy | str | None = None,
                  scheduler: CoalescingScheduler | None = None,
-                 mesh=None):
+                 mesh=None, fuse: bool = False, adaptive: bool = False):
         self.session = Session()
         default_rules(self.session)
         if policy is None:
@@ -159,7 +159,12 @@ class AdmissionPolicy:
         self._request_session = Session()
         self._request_session.registry = self.session.registry
         self._request_stmt = None
-        self.scheduler = scheduler or CoalescingScheduler()
+        # fuse: mixed-statement waves (e.g. custom rule statements sharing
+        # the request session) drain as one fused device program; adaptive:
+        # the flush window tracks the observed arrival rate
+        self.scheduler = scheduler or CoalescingScheduler(
+            fuse=fuse, adaptive=adaptive,
+        )
 
     def evaluate(self, requests: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
         """requests: columns tier, prompt_len, max_new_tokens, temperature.

@@ -50,7 +50,8 @@ class ServeEngine:
                  eos_id: int | None = None, froid_admission: bool = True,
                  admission_policy=None, seed: int = 0,
                  admission_scheduler: CoalescingScheduler | None = None,
-                 admission_mesh=None):
+                 admission_mesh=None, admission_fuse: bool = False,
+                 admission_adaptive: bool = False):
         self.model = model
         self.params = params
         self.slots = slots
@@ -60,9 +61,13 @@ class ServeEngine:
         # "interpreted", "hekaton"); froid_admission is the legacy switch.
         # admission_mesh shards the online (submit/drain) admission
         # microbatches over a device mesh so intake traffic fills devices.
+        # admission_fuse drains mixed-statement admission waves as one
+        # fused device program; admission_adaptive tracks the arrival rate
+        # with the coalescing window.
         self.admission = AdmissionPolicy(
             froid=froid_admission, policy=admission_policy,
             scheduler=admission_scheduler, mesh=admission_mesh,
+            fuse=admission_fuse, adaptive=admission_adaptive,
         )
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)

@@ -85,15 +85,47 @@ class CoalescingScheduler:
     D devices coalesces up to ``max_batch × D`` requests before a full
     flush — online traffic fills every device instead of one.
 
-    Stats (``self.stats``): submitted, batches, drained, flush reasons.
+    **Fusion drain mode** (``fuse=True``): when several *different*
+    statements' batches drain together (a ``flush()``, an expired-window
+    ``poll()``, or a submit that trips multiple groups), they go down as
+    one mixed-statement wave through ``Session.execute_fused`` — one fused
+    device program with shared scans — instead of one ``execute_many`` per
+    statement.  Statements the fusability analysis rejects fall back to the
+    per-statement path inside ``execute_fused``; a lone draining batch
+    skips fusion entirely.
+
+    **Adaptive coalescing** (``adaptive=True``): each statement's effective
+    flush window tracks an EMA of *that statement's* inter-arrival gaps —
+    ``min(window_s, adaptive_hold × ema_gap)``, i.e. hold a partial batch
+    only about as long as the next few same-statement arrivals should
+    take, clamped to ``[0, window_s]``.  Fast traffic drains almost
+    immediately (latency tracks the arrival rate, not the worst-case
+    window); sparse traffic degrades to the configured window.  The EMA is
+    per statement, not global — round-robin traffic over many statements
+    must not shrink every group's window below its own refill rate.  The
+    injectable ``clock`` keeps the EMA deterministic in tests.
+
+    Stats (``self.stats``): submitted, batches, drained, flush reasons,
+    fused_batches / fused_statements.
     """
 
     def __init__(self, max_batch: int | None = None,
                  window_s: float | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 fuse: bool = False,
+                 adaptive: bool = False,
+                 adaptive_alpha: float = 0.2,
+                 adaptive_hold: float = 4.0):
         self.max_batch = max_batch
         self.window_s = window_s
         self.clock = clock
+        self.fuse = fuse
+        self.adaptive = adaptive
+        self.adaptive_alpha = adaptive_alpha
+        self.adaptive_hold = adaptive_hold
+        # id(stmt) -> (last arrival, EMA gap | None); bounded by the
+        # statement population (sessions cap prepared handles)
+        self._arrivals: dict[int, tuple[float, float | None]] = {}
         self._lock = threading.Lock()
         # serializes drains: execute_many mutates Session caches that have
         # no synchronization of their own
@@ -102,6 +134,7 @@ class CoalescingScheduler:
         self.stats = {
             "submitted": 0, "batches": 0, "drained": 0,
             "flush_full": 0, "flush_window": 0, "flush_forced": 0,
+            "fused_batches": 0, "fused_statements": 0,
         }
 
     # -- knob resolution ----------------------------------------------------
@@ -115,6 +148,32 @@ class CoalescingScheduler:
         return (self.window_s if self.window_s is not None
                 else stmt.policy.coalesce_window_s)
 
+    def ema_gap_s(self, stmt: PreparedStatement) -> float | None:
+        """``stmt``'s inter-arrival EMA (None until two submits arrive)."""
+        _, ema = self._arrivals.get(id(stmt), (None, None))
+        return ema
+
+    def effective_window(self, stmt: PreparedStatement) -> float:
+        """The flush window actually in force for ``stmt``: the configured
+        window, shrunk by ``stmt``'s own arrival-rate EMA under
+        ``adaptive``."""
+        base = self._window(stmt)
+        ema = self.ema_gap_s(stmt)
+        if not self.adaptive or ema is None:
+            return base
+        return min(base, max(0.0, ema * self.adaptive_hold))
+
+    def _observe_arrival_locked(self, stmt: PreparedStatement,
+                                now: float) -> None:
+        if not self.adaptive:
+            return
+        last, ema = self._arrivals.get(id(stmt), (None, None))
+        if last is not None:
+            gap = now - last
+            a = self.adaptive_alpha
+            ema = gap if ema is None else a * gap + (1.0 - a) * ema
+        self._arrivals[id(stmt)] = (now, ema)
+
     # -- public API ----------------------------------------------------------
     def submit(self, stmt: PreparedStatement, params: dict | None = None) -> Ticket:
         """Queue one execution of ``stmt``; returns its :class:`Ticket`.
@@ -122,9 +181,11 @@ class CoalescingScheduler:
         to_drain: list[_Group] = []
         with self._lock:
             self.stats["submitted"] += 1
+            now = self.clock()
+            self._observe_arrival_locked(stmt, now)
             g = self._groups.get(id(stmt))
             if g is None:
-                g = _Group(stmt, self.clock())
+                g = _Group(stmt, now)
                 self._groups[id(stmt)] = g
             t = Ticket(self, g)
             g.params.append(dict(params) if params else {})
@@ -134,8 +195,7 @@ class CoalescingScheduler:
                 self._groups.pop(id(stmt), None)
                 to_drain.append(g)
             to_drain.extend(self._take_expired_locked())
-        for g in to_drain:
-            self._drain(g)
+        self._drain_all(to_drain)
         return t
 
     def poll(self) -> int:
@@ -143,24 +203,21 @@ class CoalescingScheduler:
         number of requests drained.  Serving loops call this once per tick."""
         with self._lock:
             expired = self._take_expired_locked()
-        n = 0
-        for g in expired:
-            n += len(g.params)
-            self._drain(g)
+        n = sum(len(g.params) for g in expired)
+        self._drain_all(expired)
         return n
 
     def flush(self) -> int:
         """Drain all pending batches regardless of window; returns the
-        number of requests drained."""
+        number of requests drained.  Under fusion drain mode a
+        mixed-statement flush goes down as one fused wave."""
         with self._lock:
             groups = list(self._groups.values())
             self._groups.clear()
             if groups:
                 self.stats["flush_forced"] += len(groups)
-        n = 0
-        for g in groups:
-            n += len(g.params)
-            self._drain(g)
+        n = sum(len(g.params) for g in groups)
+        self._drain_all(groups)
         return n
 
     @property
@@ -173,7 +230,7 @@ class CoalescingScheduler:
         now = self.clock()
         expired = [
             g for g in self._groups.values()
-            if now - g.opened_at >= self._window(g.stmt)
+            if now - g.opened_at >= self.effective_window(g.stmt)
         ]
         for g in expired:
             self._groups.pop(id(g.stmt), None)
@@ -189,6 +246,49 @@ class CoalescingScheduler:
             self._groups.pop(id(group.stmt), None)
             self.stats["flush_forced"] += 1
         self._drain(group)
+
+    def _drain_all(self, groups: list[_Group]) -> None:
+        """Drain a set of batches that tripped together: one fused wave
+        when fusion drain mode is on and the wave is mixed-statement,
+        else one per-statement drain each."""
+        if self.fuse and len(groups) >= 2:
+            self._drain_fused(groups)
+            return
+        for g in groups:
+            self._drain(g)
+
+    def _drain_fused(self, groups: list[_Group]) -> None:
+        """Mixed-statement drain through ``Session.execute_fused``.  The
+        whole wave succeeds or fails together (an error from any member
+        fans out to every ticket of the wave — acceptable for the serving
+        path, where a drain-time failure is an engine fault, not a
+        per-request verdict)."""
+        self.stats["batches"] += 1
+        self.stats["drained"] += sum(len(g.params) for g in groups)
+        self.stats["fused_batches"] += 1
+        self.stats["fused_statements"] += len(groups)
+        calls = [(g.stmt, p) for g in groups for p in g.params]
+        try:
+            with self._drain_lock:
+                # execute_fused routes foreign-session / non-fusable
+                # statements back to their own per-statement path
+                results = groups[0].stmt.session.execute_fused(calls)
+            it = iter(results)
+            for g in groups:
+                for t in g.tickets:
+                    t._result = next(it)
+        except Exception as e:  # fan the failure out to every waiter
+            for g in groups:
+                for t in g.tickets:
+                    t._error = e
+        except BaseException as e:  # KeyboardInterrupt/SystemExit: park a
+            for g in groups:         # diagnostic on the tickets, but let
+                for t in g.tickets:  # the interrupt reach the caller
+                    t._error = e
+            raise
+        finally:
+            for g in groups:
+                g.done_evt.set()
 
     def _drain(self, group: _Group) -> None:
         self.stats["batches"] += 1

@@ -16,6 +16,11 @@ Oracles (both element-wise):
 * **Invocation oracle** — ``execute_many`` (sharded over whatever device
   mesh exists, and unsharded) == the serial ``execute`` loop, including
   mixed-signature parameter lists, empty lists, and empty tables.
+* **Fusion oracle** — a mixed-statement queue drained through the fusion
+  scheduler (one fused device program, shared scans) == the per-statement
+  serial loop, element-wise, across policies and sharding, including
+  mixed-signature tickets, parameter-free tickets, non-fusable fallbacks,
+  and DDL landing between submit and drain.
 """
 from __future__ import annotations
 
@@ -195,6 +200,83 @@ def check_mode_oracle(ops, seed: int, n_rows: int = N_ROWS) -> None:
     for policy in (INTERPRETED, HEKATON):
         r = db.execute(q, policy, params=params)
         assert_rows_equal(baseline, r, f"FROID vs {policy.name}")
+
+
+def fusion_queries():
+    """Three *different* statements over the shared tables: the UDF-bearing
+    parameterized query, an arithmetic filter over ``facts``, and a
+    parameter-free projection of ``keys``.  q1 and q3 both scan ``keys``,
+    so a fused program of the three has at least one shared subtree."""
+    q1 = param_query()
+    q2 = (
+        scan("facts")
+        .filter(col("qty") >= param("minq"))
+        .compute(w=col("val") * param("scale"))
+        .project("fk", "w")
+    )
+    q3 = scan("keys").compute(z=col("k") * 2.0).project("k", "z")
+    return [q1, q2, q3]
+
+
+def fusion_calls_spec():
+    """Interleaved mixed-statement queue: ``[(statement index, params)]``.
+    Carries a mixed signature for q1 (float ``cut`` re-specializes) and
+    parameter-free tickets for q3."""
+    return [
+        (0, {"cut": 5, "shift": 0.5}),
+        (1, {"minq": 4, "scale": 2.0}),
+        (2, None),
+        (0, {"cut": 3, "shift": 1.5}),
+        (1, {"minq": 1, "scale": 0.5}),
+        (0, {"cut": 6.5, "shift": 2.0}),
+        (2, {}),
+    ]
+
+
+def check_fusion_oracle(seed: int, n_rows: int, policy, calls_spec=None, *,
+                        ddl: bool = False, expect_fused: bool = True):
+    """Fused drain of a mixed-statement queue == per-statement serial loop.
+
+    Submits the queue to a fusion-mode scheduler, optionally lands DDL
+    between submit and drain (the drain must see the *new* catalog state),
+    flushes, and compares every ticket element-wise against the serial
+    ``execute`` loop run afterwards under the same catalog state.  For
+    policies the fusability analysis accepts, also asserts the shared-scan
+    evidence (fused program count < statement count, ≥ 1 shared subtree);
+    for non-fusable policies asserts the fallback ran instead.  Returns
+    the fused results for extra caller assertions."""
+    from repro.serve.scheduler import CoalescingScheduler
+
+    db = make_session(seed, n_rows)
+    db.create_function(build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    stmts = [db.prepare(q, policy) for q in fusion_queries()]
+    spec = calls_spec if calls_spec is not None else fusion_calls_spec()
+    sched = CoalescingScheduler(max_batch=256, window_s=10.0,
+                                clock=lambda: 0.0, fuse=True)
+    tickets = [sched.submit(stmts[i], p) for i, p in spec]
+    if ddl:
+        rng = np.random.default_rng(seed + 1)
+        db.create_table(
+            "facts",
+            fk=rng.integers(0, N_KEYS, max(n_rows, 1)),
+            val=np.round(rng.uniform(-10, 10, max(n_rows, 1)), 2)
+                .astype(np.float32),
+            qty=rng.integers(0, 9, max(n_rows, 1)),
+        )
+    sched.flush()
+    fused = [t.result() for t in tickets]
+    serial = [stmts[i].execute(params=p) for i, p in spec]
+    for j, (s, f) in enumerate(zip(serial, fused)):
+        assert_rows_equal(s, f, f"fused[{j}] vs serial")
+    fusable = policy.compile_plan and policy.fuse
+    if expect_fused and fusable:
+        st = next(r.stats for r in fused if r.stats.get("fused"))
+        assert st["fused_programs"] < st["fused_statements"], st
+        assert st["shared_subtrees"] >= 1, st
+        assert sched.stats["fused_batches"] >= 1
+    elif not fusable:
+        assert all("fused" not in r.stats for r in fused)
+    return fused
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

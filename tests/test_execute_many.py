@@ -212,6 +212,104 @@ def test_prepare_distinct_batch_knobs_do_not_alias(db):
 
 
 # ---------------------------------------------------------------------------
+# chunk pipelining
+# ---------------------------------------------------------------------------
+
+
+def test_chunked_dispatches_are_pipelined(db):
+    """All chunks dispatch before the end-of-call barrier: every result
+    reports the call's chunk count, and parity with the serial loop holds."""
+    stmt = db.prepare(_q(), FROID.batched(max_batch=4))
+    params_list = [{"cutoff": int(k)} for k in range(10)]
+    rs = stmt.execute_many(params_list)
+    assert all(r.stats["pipelined_chunks"] == 3 for r in rs)
+    _assert_same([stmt.execute(params=p) for p in params_list], rs)
+    # single-chunk calls still report (a pipeline of one)
+    r1 = stmt.execute_many([{"cutoff": 5}])
+    assert r1[0].stats["pipelined_chunks"] == 1
+
+
+def test_pipelining_bounded_by_max_inflight(db):
+    """max_inflight=1 degrades to sync-per-chunk dispatch order but stays
+    element-wise identical."""
+    stmt = db.prepare(_q(), FROID.batched(max_batch=2, max_inflight=1))
+    params_list = [{"cutoff": int(k)} for k in range(7)]
+    rs = stmt.execute_many(params_list)
+    assert rs[0].stats["pipelined_chunks"] == 4
+    _assert_same([stmt.execute(params=p) for p in params_list], rs)
+
+
+# ---------------------------------------------------------------------------
+# adaptive coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_window_tracks_arrival_rate(db):
+    """Fast arrivals shrink the effective window to ~hold×EMA; the batch
+    drains as soon as that passes instead of waiting out the full window."""
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock,
+                                adaptive=True, adaptive_alpha=0.5,
+                                adaptive_hold=4.0)
+    stmt = db.prepare(_q(), FROID)
+    ts = []
+    for k in (1, 2, 3):
+        ts.append(sched.submit(stmt, {"cutoff": k}))
+        clock.advance(0.01)
+    assert abs(sched.ema_gap_s(stmt) - 0.01) < 1e-12
+    assert abs(sched.effective_window(stmt) - 0.04) < 1e-12
+    assert sched.poll() == 0  # 0.02 elapsed since open < 0.04
+    clock.advance(0.02)       # 0.04+ since the group opened
+    assert sched.poll() == 3  # drained at the adaptive window, not 10s
+    _assert_same([stmt.execute(params={"cutoff": k}) for k in (1, 2, 3)],
+                 [t.result() for t in ts])
+
+
+def test_adaptive_window_clamped_to_configured_window(db):
+    """Sparse traffic degrades to the configured window — the EMA never
+    *extends* the latency bound."""
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=0.05, clock=clock,
+                                adaptive=True)
+    stmt = db.prepare(_q(), FROID)
+    sched.submit(stmt, {"cutoff": 1})
+    clock.advance(100.0)      # huge gap -> EMA far above the window
+    sched.poll()              # drains the first (window long expired)
+    sched.submit(stmt, {"cutoff": 2})
+    assert sched.ema_gap_s(stmt) == 100.0
+    assert sched.effective_window(stmt) == 0.05  # clamped
+    # off by default: the plain scheduler never adapts
+    plain = CoalescingScheduler(window_s=0.05, clock=clock)
+    assert not plain.adaptive and plain.effective_window(stmt) == 0.05
+    sched.flush()
+
+
+def test_adaptive_window_is_per_statement(db):
+    """Round-robin traffic over many statements must not shrink any one
+    statement's window below its own refill rate: the EMA tracks the
+    same-statement gap (here 3×global), so groups still coalesce instead
+    of degrading to batch-size-1 drains."""
+    clock = FakeClock()
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0, clock=clock,
+                                adaptive=True, adaptive_hold=4.0)
+    stmts = [db.prepare(_q(), FROID),
+             db.prepare(scan("T").filter(col("a") < param("cutoff")), FROID),
+             db.prepare(scan("T").compute(b=col("a") * 2), FROID)]
+    for wave in range(3):           # s0 s1 s2 s0 s1 s2 ... gap 0.01 global
+        for s in stmts:
+            sched.submit(s, {"cutoff": wave + 1} if s is not stmts[2] else {})
+            clock.advance(0.01)
+    for s in stmts:
+        assert abs(sched.ema_gap_s(s) - 0.03) < 1e-12  # per-stmt, not 0.01
+        assert abs(sched.effective_window(s) - 0.12) < 1e-12
+    # nothing drained mid-stream: every group kept coalescing its wave
+    assert sched.stats["batches"] == 0 and sched.pending == 9
+    assert sched.flush() == 9
+    assert all(sched.stats[k] == v for k, v in
+               [("batches", 3), ("flush_window", 0)])
+
+
+# ---------------------------------------------------------------------------
 # invalidation
 # ---------------------------------------------------------------------------
 
