@@ -11,11 +11,20 @@ shared scans execute once, outputs come back tagged per statement).
     PYTHONPATH=src python -m benchmarks.bench_fused [--quick]
 
 Rows:
-    fused/serial/<n>    — serial `execute` loop reference over the queue
-    fused/perstmt/<n>   — per-statement drain (K execute_many programs)
-    fused/fused/<n>     — fused drain (1 device program)
+    fused/serial/<n>          — serial `execute` loop reference
+    fused/perstmt/<n>         — per-statement drain (K execute_many programs)
+    fused/fused/<n>           — fused drain (1 device program)
+    fused/overlap_perstmt/<n> — per-statement drain, overlap-heavy queue
+    fused/overlap_fused/<n>   — fused drain, overlap-heavy queue
 
-`derived` on the fused row records speedup vs the per-statement arm plus
+The overlap-heavy variant (PR-5) drains six statements that all share one
+correlated subquery body (the same UDF aggregate, decorrelated into a
+shared GroupAgg) plus a parameter-unified filter template — cutoffs drawn
+from a small value pool, so the template binding pool evaluates d << k
+times.  Its fused row's `derived` carries the cse evidence
+(`cse_shared_nodes` / `cse_bindings`) the CI fused smoke asserts on.
+
+`derived` on the fused rows records speedup vs the per-statement arm plus
 statements / shared-subtree / host-CPU counts — the margin comes from
 amortizing dispatch+sync overhead and deduplicating the shared catalog
 work, so it grows with statement count and shrinks as per-statement
@@ -96,6 +105,33 @@ def _queries():
     ]
 
 
+def _overlap_queries():
+    """Six statements sharing one correlated subquery body: every one
+    calls ``key_total`` (whose correlated aggregate decorrelates into the
+    same shared GroupAgg-over-detail subtree) under a filter that is the
+    same shape modulo its parameter slot — ``a < Param(c_i)`` unifies into
+    one template across all six members."""
+    def q(i):
+        return (
+            scan("T").filter(col("a") < param(f"c{i}"))
+                     .compute(**{f"v{i}": udf("key_total", col("a"))})
+                     .project(f"v{i}")
+        )
+    return [q(i) for i in range(6)]
+
+
+def _overlap_queue(stmts, per_stmt: int, seed: int = 11):
+    """Round-robin queue whose cutoffs come from a small value pool, so
+    the unified template sees d << k distinct bindings."""
+    rng = np.random.default_rng(seed)
+    pool = rng.integers(1, 400, 8)
+    waves = []
+    for _ in range(per_stmt):
+        for i, s in enumerate(stmts):
+            waves.append((s, {f"c{i}": int(rng.choice(pool))}))
+    return waves
+
+
 def _mixed_queue(stmts, per_stmt: int, seed: int = 7):
     """Round-robin interleaved [(stmt, params)] — the serving queue shape."""
     rng = np.random.default_rng(seed)
@@ -173,8 +209,33 @@ def run(quick: bool = False):
         f"fused/fused/{n}", t_fused / n * 1e6,
         f"speedup={t_per / t_fused:.2f}x statements={st.get('fused_statements')} "
         f"programs={st.get('fused_programs')} "
-        f"shared_subtrees={st.get('shared_subtrees')} host_cpus={cpus} "
+        f"shared_subtrees={st.get('shared_subtrees')} "
+        f"cse_shared_nodes={st.get('cse_shared_nodes', 0)} "
+        f"cse_bindings={st.get('cse_bindings', 0)} host_cpus={cpus} "
         f"fused={bool(st.get('fused'))}",
+    )
+
+    # overlap-heavy variant: 6 statements sharing a correlated subquery
+    # body + a parameter-unified filter template (PR-5 cse evidence)
+    ostmts = [db.prepare(q, FROID) for q in _overlap_queries()]
+    oqueue = _overlap_queue(ostmts, per_stmt)
+    on = len(oqueue)
+    oserial_ref = [s.execute(params=p) for s, p in oqueue[:SERIAL_N]]
+    owarm = db.execute_fused([(s, dict(p)) for s, p in oqueue])
+    _check_identical(oserial_ref, owarm[:SERIAL_N])
+    t_oper, _ = _drain_time(oqueue, fuse=False)
+    emit(f"fused/overlap_perstmt/{on}", t_oper / on * 1e6,
+         f"statements={len(ostmts)} programs={len(ostmts)}")
+    t_ofused, ost = _drain_time(oqueue, fuse=True)
+    emit(
+        f"fused/overlap_fused/{on}", t_ofused / on * 1e6,
+        f"speedup={t_oper / t_ofused:.2f}x "
+        f"statements={ost.get('fused_statements')} "
+        f"programs={ost.get('fused_programs')} "
+        f"shared_subtrees={ost.get('shared_subtrees')} "
+        f"cse_shared_nodes={ost.get('cse_shared_nodes', 0)} "
+        f"cse_bindings={ost.get('cse_bindings', 0)} host_cpus={cpus} "
+        f"fused={bool(ost.get('fused'))}",
     )
 
 

@@ -17,7 +17,7 @@ if [ "${VERIFY_SHARDED:-1}" != "0" ]; then
   XLA_FLAGS="--xla_force_host_platform_device_count=8" \
     python -m pytest -q tests/test_sharded_many.py \
       tests/test_conformance_oracle.py tests/test_execute_many.py \
-      tests/test_fused.py
+      tests/test_fused.py tests/test_fuse_cse.py
 fi
 
 # multi-statement fusion: fused-drain parity + perf smoke (the in-bench

@@ -91,6 +91,14 @@ class Executor:
         """Logical-read counters (copy; accumulates across executions)."""
         return dict(self._stats)
 
+    def _sub_executor(self) -> "Executor":
+        """Executor used for nested plan evaluation (correlated applies,
+        scalar subqueries, EXISTS).  Subclasses override to propagate extra
+        state — the fused SharedScanExecutor carries its shared-result
+        pools into subquery bodies this way."""
+        return Executor(self.catalog, self.udf_column_evaluator,
+                        self.use_pallas_agg)
+
     # -- public API --------------------------------------------------------
     def execute(self, plan: R.RelNode, params=None, outer=None, vars=None) -> MaskedTable:
         ctx = S.EvalContext(
@@ -300,7 +308,7 @@ class Executor:
         captured_dicts: dict = {}
         # hoisted: executor state is row-independent, so building it inside
         # the traced closure would rebuild it once per traced row
-        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+        sub = self._sub_executor()
 
         def one_row(scalars):
             outer = {
@@ -628,7 +636,7 @@ class Executor:
             dicts[m] = v.dictionary
 
         captured: dict = {}
-        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+        sub = self._sub_executor()
 
         def one(scalars):
             outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}
@@ -658,7 +666,7 @@ class Executor:
             b = v.broadcast(n)
             cols[m] = (b.data, b.validity())
 
-        sub = Executor(self.catalog, self.udf_column_evaluator, self.use_pallas_agg)
+        sub = self._sub_executor()
 
         def one(scalars):
             outer = {m: S.Value(scalars[m][0], scalars[m][1], dicts[m]) for m in names}

@@ -263,6 +263,35 @@ def walk_plan(node: RelNode):
         yield from walk_plan(c)
 
 
+def embedded_plans(node: RelNode):
+    """The relational plans embedded in ``node``'s own scalar expressions
+    (``ScalarSubquery`` / ``Exists``), each yielded once.  The scalar
+    traversal stays shallow — plans nested *inside* an embedded plan are
+    that plan's business; recurse at the plan level (as
+    :func:`walk_plan_deep` does) to reach them.  The single source of
+    truth for expression→plan descent: the merge pass's marking and the
+    session's occurrence planning both reuse it, so candidate discovery
+    and answering can never disagree on what counts as an embedded plan."""
+    for e in node.exprs():
+        stack = [e]
+        while stack:
+            x = stack.pop()
+            if isinstance(x, (S.ScalarSubquery, S.Exists)):
+                yield x.plan
+            stack.extend(x.children())
+
+
+def walk_plan_deep(node: RelNode):
+    """Like :func:`walk_plan`, but also descends into the relational plans
+    embedded in scalar expressions (:func:`embedded_plans`) — the full set
+    of plan nodes an execution of ``node`` may run."""
+    yield node
+    for p in embedded_plans(node):
+        yield from walk_plan_deep(p)
+    for c in node.children():
+        yield from walk_plan_deep(c)
+
+
 def node_exprs(node: RelNode) -> list[S.Scalar]:
     return node.exprs()
 

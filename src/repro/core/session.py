@@ -49,19 +49,31 @@ from repro.tables.table import Column, DictEncoding, Table
 # ---------------------------------------------------------------------------
 
 
-def _norm(v) -> Any:
-    """Normalize an attribute value into a hashable structure."""
+def _norm(v, special=None) -> Any:
+    """Normalize an attribute value into a hashable structure.
+
+    ``special(v) -> tuple | None`` pre-empts the default rules when it
+    returns non-None — :func:`parametric_fingerprint` uses it to replace
+    parameter/outer references with canonical slot holes while sharing the
+    rest of the structural normalization."""
+    if special is not None:
+        out = special(v)
+        if out is not None:
+            return out
     if isinstance(v, S.Scalar):
-        return _expr_key(v)
+        return _expr_key(v, special)
     if isinstance(v, R.RelNode):
-        return plan_fingerprint(v)
+        return ("Rel:" + type(v).__name__,) + tuple(
+            (k, _norm(x, special)) for k, x in vars(v).items() if k != "node_id"
+        )
     if isinstance(v, dict):
-        return ("dict",) + tuple((k, _norm(x)) for k, x in v.items())
+        return ("dict",) + tuple((k, _norm(x, special)) for k, x in v.items())
     if isinstance(v, (list, tuple)):
-        return ("seq",) + tuple(_norm(x) for x in v)
+        return ("seq",) + tuple(_norm(x, special) for x in v)
     if dataclasses.is_dataclass(v) and not isinstance(v, type):
         return (type(v).__name__,) + tuple(
-            (f.name, _norm(getattr(v, f.name))) for f in dataclasses.fields(v)
+            (f.name, _norm(getattr(v, f.name), special))
+            for f in dataclasses.fields(v)
         )
     if isinstance(v, (str, int, float, bool, type(None))):
         return v
@@ -74,18 +86,52 @@ def _norm(v) -> Any:
     return repr(v)
 
 
-def _expr_key(e: S.Scalar) -> tuple:
+def _expr_key(e: S.Scalar, special=None) -> tuple:
     return (type(e).__name__,) + tuple(
-        (k, _norm(v)) for k, v in vars(e).items()
+        (k, _norm(v, special)) for k, v in vars(e).items()
     )
 
 
 def plan_fingerprint(node: R.RelNode) -> tuple:
     """Identity-free structural fingerprint of a plan/query tree: two
     independently-built trees of the same shape fingerprint equal."""
-    return ("Rel:" + type(node).__name__,) + tuple(
-        (k, _norm(v)) for k, v in vars(node).items() if k != "node_id"
-    )
+    return _norm(node)
+
+
+def parametric_fingerprint(node: R.RelNode) -> tuple[tuple, tuple]:
+    """``(fingerprint, holes)`` with parameter slots canonicalized.
+
+    The fingerprint is :func:`plan_fingerprint` with every ``Param``/``Outer``
+    reference replaced by a numbered hole in first-encounter order, so two
+    subtrees equal *modulo parameter naming* fingerprint equal — the
+    unification test of the cross-statement CSE engine (repro.fuse.merge).
+    Hole numbering is per-name: ``Param(a) + Param(a)`` canonicalizes to
+    ``hole0 + hole0`` and therefore never unifies with ``Param(x) +
+    Param(y)`` (``hole0 + hole1``); param and outer references are distinct
+    hole kinds and never unify with each other.
+
+    ``holes`` is the tuple of ``(kind, actual_name)`` in canonical order —
+    the subtree's slot signature, which callers combine with the canonical
+    hole spelling (``merge.hole_name``) to build per-occurrence binding
+    maps.  A hole-free subtree fingerprints identically to its plain
+    :func:`plan_fingerprint`."""
+    holes: list[tuple[str, str]] = []
+    index: dict[tuple[str, str], int] = {}
+
+    def special(v):
+        if isinstance(v, S.Param):
+            kind, name = "param", v.name
+        elif isinstance(v, S.Outer):
+            kind, name = "outer", v.name
+        else:
+            return None
+        k = (kind, name)
+        if k not in index:
+            index[k] = len(holes)
+            holes.append(k)
+        return ("hole", kind, index[k])
+
+    return _norm(node, special), tuple(holes)
 
 
 # ---------------------------------------------------------------------------
@@ -277,12 +323,8 @@ def param_signature(params: dict | None) -> tuple:
             # the dictionary is baked into the trace as host metadata, so
             # it is part of the signature (same codes, different vocab
             # would otherwise warm-hit the wrong executable)
-            vocab = None
-            if v.dictionary is not None:
-                vocab = tuple(
-                    v.dictionary.decode(i) for i in range(len(v.dictionary))
-                )
-            out.append((name, str(v.data.dtype), tuple(v.data.shape), vocab))
+            out.append((name, str(v.data.dtype), tuple(v.data.shape),
+                        _vocab(v.dictionary)))
         elif isinstance(v, bool):
             out.append((name, "bool", ()))
         elif isinstance(v, (int, np.integer)):
@@ -338,6 +380,142 @@ def _stack_params(params_list: list[dict]) -> dict:
     return out
 
 
+def _vocab(dictionary) -> tuple | None:
+    """Host tuple of a DictEncoding's contents (shared by the signature
+    and binding-key paths)."""
+    if dictionary is None:
+        return None
+    return tuple(dictionary.decode(i) for i in range(len(dictionary)))
+
+
+def _binding_key(v) -> tuple:
+    """Hashable identity of one parameter value — the dedup key of the
+    template binding pools (value-level, unlike :func:`param_signature`
+    which deliberately erases values for numeric params).  ``S.Value``
+    bindings cost a device→host read, so their key is memoized on the
+    instance — repeated tickets carrying the same Value object sync
+    once, not once per ticket."""
+    if isinstance(v, S.Value):
+        cached = getattr(v, "_binding_key_cache", None)
+        if cached is not None:
+            return cached
+        arr = np.asarray(v.data)
+        valid = None if v.valid is None else np.asarray(v.valid).tobytes()
+        key = ("value", str(arr.dtype), arr.shape, arr.tobytes(), valid,
+               _vocab(v.dictionary))
+        v._binding_key_cache = key
+        return key
+    if isinstance(v, str):
+        return ("str", v)
+    if isinstance(v, bool):
+        return ("bool", v)
+    if isinstance(v, (int, np.integer)):
+        return ("int", int(v))
+    if isinstance(v, (float, np.floating)):
+        # bit-pattern identity at the executed precision: -0.0 must not
+        # dedup against 0.0 (sign-sensitive templates would answer with
+        # the wrong sign of infinity), and NaN must dedup against itself
+        # (value equality would mint a fresh pool slot per NaN ticket)
+        return ("float", np.float32(float(v)).tobytes())
+    arr = np.asarray(v)
+    return ("array", str(arr.dtype), arr.shape, arr.tobytes())
+
+
+def _maximal_cse_occurrences(merged, plan) -> list:
+    """Template occurrences of ``plan`` that actually execute in a member's
+    trace: top-down, stopping at the first marked node (a shared-constant
+    or template mark) — everything beneath it is answered from a pool and
+    never runs, so nested occurrences must not open pool groups of their
+    own.  Memoized on the (cached, immutable) FusedPlan per member plan —
+    warm drains must not re-walk plans they have already planned."""
+    cache = getattr(merged, "_occ_cache", None)
+    if cache is None:
+        cache = merged._occ_cache = {}
+    # entries hold the plan itself, so a hit is identity-verified — an
+    # id() recycled onto a different plan object can never match
+    hit = cache.get(id(plan))
+    if hit is not None and hit[0] is plan:
+        return hit[1]
+    out = []
+
+    def visit(n):
+        nid = n.node_id
+        if nid in merged.template_ids:
+            out.append(n)
+            return
+        if nid in merged.shared_ids:
+            return  # answered from the constant pool; nothing below runs
+        for p in R.embedded_plans(n):
+            visit(p)
+        for c in n.children():
+            visit(c)
+
+    visit(plan)
+    cache[id(plan)] = (plan, out)
+    return out
+
+
+def _plan_template_groups(merged, members, params_by_member):
+    """Host-side binding planning for a fused wave.
+
+    For every maximal template occurrence of every batched member, group by
+    (template fingerprint, binding signature) into a :class:`_PoolGroup`,
+    dedup the tickets' hole-value tuples into the group's distinct-binding
+    list, and record each ticket's pool slot.  Returns ``(groups,
+    member_tmaps, slot_maps, template_token)`` where ``member_tmaps[i]``
+    maps occurrence ``node_id -> group index`` for member ``i``,
+    ``slot_maps[i]`` maps ``node_id -> [slot per ticket]``, and
+    ``template_token`` — ``((fp, sig, d), ...)`` in group order — is the
+    template identity the fused cache key incorporates (members arrive
+    canonically sorted, so the token is arrival-order independent)."""
+    by_fp = {t.fp: t for t in merged.templates}
+    groups: list[_PoolGroup] = []
+    gindex: dict[tuple, int] = {}
+    member_tmaps: list[dict] = []
+    slot_maps: list[dict] = []
+    for m, plist in zip(members, params_by_member):
+        tmap: dict[int, int] = {}
+        smap: dict[int, list] = {}
+        if m.sig and plist:
+            for n in _maximal_cse_occurrences(merged, m.plan):
+                fp = merged.template_ids[n.node_id]
+                bind = merged.template_binds[n.node_id]
+                tmpl = by_fp[fp]
+                # an occurrence whose actual parameters are not all
+                # supplied cannot be pooled; the member trace will raise
+                # (or not reach it) exactly as the per-statement path would
+                if any(bind[h] not in plist[0] for h in tmpl.holes):
+                    continue
+                sig = param_signature({h: plist[0][bind[h]]
+                                       for h in tmpl.holes})
+                gk = (fp, sig)
+                gi = gindex.get(gk)
+                if gi is None:
+                    gi = gindex[gk] = len(groups)
+                    groups.append(_PoolGroup(
+                        fp, sig, tmpl.node, tmpl.holes,
+                        {h: _param_value(plist[0][bind[h]]).dictionary
+                         for h in tmpl.holes},
+                        [], {},
+                    ))
+                g = groups[gi]
+                slots = []
+                for p in plist:
+                    b = {h: p[bind[h]] for h in tmpl.holes}
+                    key = tuple(_binding_key(b[h]) for h in tmpl.holes)
+                    slot = g.index.get(key)
+                    if slot is None:
+                        slot = g.index[key] = len(g.bindings)
+                        g.bindings.append(b)
+                    slots.append(slot)
+                tmap[n.node_id] = gi
+                smap[n.node_id] = slots
+        member_tmaps.append(tmap)
+        slot_maps.append(smap)
+    token = tuple((g.fp, g.sig, len(g.bindings)) for g in groups)
+    return groups, member_tmaps, slot_maps, token
+
+
 # ---------------------------------------------------------------------------
 # compiled executables
 # ---------------------------------------------------------------------------
@@ -385,11 +563,37 @@ class _FuseMember:
 
 @dataclasses.dataclass
 class _FusedExecutable:
-    fn: Any  # (pargs_tuple, catalog_token) -> ((mask (B,n), cols), ...) per member
+    fn: Any  # (pargs_tuple, targs_tuple, catalog_token) -> ((mask, cols), ...)
     plans: list  # member plans, fusion order
     out_dicts: list  # per-member {column -> DictEncoding | None} capture
-    stats: dict  # trace stats + merge stats (shared_subtrees, ...)
+    stats: dict  # trace stats + merge stats (shared_subtrees, cse_*, ...)
     members: list  # _FuseMember descriptors, fusion order
+    merged: Any = None  # repro.fuse.merge.FusedPlan (sharing maps + explain)
+    eval_counts: dict | None = None  # pool key -> trace-time evaluations
+
+
+@dataclasses.dataclass
+class _PoolGroup:
+    """One template pool of a fused program: a parameter-unified shared
+    subtree × one binding signature, evaluated once per distinct binding.
+    Two members binding the same template with the same value *signature*
+    land in the same group and share its distinct-binding pool — the
+    cross-statement unification the CSE engine exists for."""
+
+    fp: tuple  # canonical parametric fingerprint (template identity)
+    sig: tuple  # binding signature (param_signature over hole values)
+    node: R.RelNode  # canonical template subtree (holes as params)
+    holes: tuple  # canonical hole parameter names, slot order
+    hole_dicts: dict  # hole -> DictEncoding | None (host metadata)
+    bindings: list  # [{hole: value}] distinct, slot order
+    index: dict  # binding key -> slot
+
+    def spec(self) -> "_PoolGroup":
+        """Structure-only copy for the fused closure: the jitted program
+        reads fp/sig/node/holes/hole_dicts; baking a wave's binding
+        values (and their byte keys) into a long-lived cache entry would
+        pin them for the entry's lifetime."""
+        return dataclasses.replace(self, bindings=[], index={})
 
 
 # ---------------------------------------------------------------------------
@@ -423,6 +627,11 @@ class Session:
             "batch_hits": 0, "batch_misses": 0,
             "shard_hits": 0, "shard_misses": 0,
             "fuse_hits": 0, "fuse_misses": 0,
+            # cross-statement CSE: evaluations avoided by sharing (constant
+            # refs beyond the first + template ticket-refs beyond their
+            # distinct bindings), and total plan nodes covered by a shared
+            # evaluation, both accumulated per fused wave
+            "cse_hits": 0, "cse_shared_nodes": 0,
         }
         # dispatched-but-unsynced AsyncResults, oldest first (backpressure)
         self._inflight: deque = deque()
@@ -735,19 +944,56 @@ class Session:
         return entry, False
 
     # -- multi-statement fusion ----------------------------------------------
+    def _merged_for(self, members: list, env_token: tuple):
+        """The merge pass's :class:`~repro.fuse.merge.FusedPlan` for this
+        member set, cached — the host consults the sharing maps on every
+        wave (warm or cold) to plan template bindings, and the walk must
+        not re-run per drain.
+
+        The key includes the member plans' identities: the sharing maps
+        are ``node_id``-keyed, so a plan rebuilt after a ``_plans``-cache
+        eviction (same env token, fresh node ids) must get a fresh merge,
+        not a stale FusedPlan whose marks match nothing.  A live cache
+        entry pins its plans through ``FusedPlan.members``, so a recycled
+        ``id()`` can never collide with a live key."""
+        key = (tuple(m.key for m in members), env_token,
+               tuple(id(m.plan) for m in members))
+        cache = getattr(self, "_merge_cache", None)
+        if cache is None:
+            cache = self._merge_cache = _BoundedCache(64)
+        merged = cache.get(key)
+        if merged is None:
+            from repro.fuse.merge import merge_plans
+
+            merged = merge_plans([m.plan for m in members])
+            cache[key] = merged
+        return merged
+
     def _fused_executable(self, members: list, policy: ExecutionPolicy,
-                          shard: bool, env_token: tuple
+                          shard: bool, env_token: tuple, merged,
+                          groups: list, member_tmaps: list,
+                          template_token: tuple
                           ) -> tuple[_FusedExecutable, bool]:
         """(fused executable, fuse-cache-hit).  One jitted program carrying
-        every member: the merge pass's shared subtrees execute once, then
-        each member's plan vmaps over its own stacked parameter axis (see
+        every member: the merge pass's shared subtrees execute once, each
+        template pool once per distinct binding, then each member's plan
+        vmaps over its own stacked parameter axis (see
         ``repro.fuse.program``).  Keyed by the member tuple in canonical
-        (sorted) order × policy × env token, so a mixed queue arriving in
-        any order warm-hits, and any DDL/catalog poke invalidates every
-        member at once via the env token."""
+        (sorted) order × policy × env token × **template identity**
+        (``(fingerprint, binding signature, distinct-binding count)`` per
+        pool group), so a mixed queue arriving in any order warm-hits, a
+        changed distinct-binding count honestly re-specializes instead of
+        hiding a retrace behind a "hit", and any DDL/catalog poke
+        invalidates every member at once via the env token."""
         shard_token = policy.shard_token() if shard else ()
-        key = (tuple(m.key for m in members), policy.fingerprint(),
-               env_token, shard, shard_token)
+        # plan identity rides the key alongside the member keys: the slot
+        # protocol and member_tmaps are node_id-keyed, so a plan rebuilt
+        # after a _plans-cache eviction must re-specialize here too (a
+        # stale entry would silently answer no template occurrence).  The
+        # entry pins its plans, so a recycled id can't collide while live.
+        key = (tuple(m.key for m in members),
+               tuple(id(m.plan) for m in members), policy.fingerprint(),
+               env_token, shard, shard_token, template_token)
         entry = self._fuse_execs.get(key)
         if entry is not None:
             self.cache_stats["fuse_hits"] += 1
@@ -755,34 +1001,43 @@ class Session:
         self.cache_stats["fuse_misses"] += 1
         from repro.fuse.program import build_fused_raw
 
-        raw, out_dicts, trace_stats, _ = build_fused_raw(self, members, policy)
+        raw, out_dicts, trace_stats, merged, eval_counts = build_fused_raw(
+            self, members, policy, merged, [g.spec() for g in groups],
+            member_tmaps)
         jitted = jax.jit(raw)
         if shard:
             from repro.dist.sharding import batch_sharding, replicated_sharding
 
             mesh = policy.mesh
             # parameter-free members are unbatched: their (empty) arg
-            # pytree replicates; batched members shard their stacked axis
+            # pytree replicates; batched members shard their stacked axis;
+            # template binding stacks replicate (every member row may
+            # gather any pool slot)
             shardings = tuple(
                 batch_sharding(mesh, m.bucket) if m.sig
                 else replicated_sharding(mesh)
                 for m in members
             )
 
-            def fn(pargs_tuple, catalog_token: tuple | None = None):
+            def fn(pargs_tuple, targs_tuple,
+                   catalog_token: tuple | None = None):
                 cats = self._catalog_args_replicated(
                     mesh, catalog_token if catalog_token is not None
                     else self._catalog_token(), shard_token)
                 placed = tuple(
                     jax.device_put(p, s) for p, s in zip(pargs_tuple, shardings)
                 )
-                return jitted(cats, placed)
+                targs = jax.device_put(targs_tuple,
+                                       replicated_sharding(mesh))
+                return jitted(cats, placed, targs)
         else:
-            def fn(pargs_tuple, catalog_token: tuple | None = None):
-                return jitted(self._catalog_args(catalog_token), pargs_tuple)
+            def fn(pargs_tuple, targs_tuple,
+                   catalog_token: tuple | None = None):
+                return jitted(self._catalog_args(catalog_token), pargs_tuple,
+                              targs_tuple)
 
         entry = _FusedExecutable(fn, [m.plan for m in members], out_dicts,
-                                 trace_stats, members)
+                                 trace_stats, members, merged, eval_counts)
         self._fuse_execs[key] = entry
         return entry, False
 
@@ -879,21 +1134,58 @@ class Session:
                 pick_data_axes(policy.mesh, m.bucket) is not None
                 for m in members if m.sig
             ) and any(m.sig for m in members)
-        entry, hit = self._fused_executable(members, policy, shard, env_token)
+        # cross-statement CSE: plan the template binding pools from the
+        # wave's actual ticket values (the merge maps are cached; only the
+        # binding dedup runs per wave)
+        from repro.fuse.merge import slot_param
+
+        merged = self._merged_for(members, env_token)
+        groups, member_tmaps, slot_maps, template_token = \
+            _plan_template_groups(merged, members,
+                                  [by_key[k]["params"] for k in order])
+        entry, hit = self._fused_executable(
+            members, policy, shard, env_token, merged, groups, member_tmaps,
+            template_token)
         pargs_tuple = []
         t0 = time.perf_counter()
-        for m, k in zip(members, order):
+        for m, k, smap in zip(members, order, slot_maps):
             plist = by_key[k]["params"]
             if m.sig:
                 padded = plist + [plist[-1]] * (m.bucket - len(plist))
-                pargs_tuple.append(_stack_params(padded))
+                pargs = _stack_params(padded)
+                for nid, slots in smap.items():
+                    # each occurrence's pool-slot index rides the stacked
+                    # axis as a reserved parameter (padding repeats the
+                    # last ticket's slot, matching the padded params)
+                    s = slots + [slots[-1]] * (m.bucket - len(slots))
+                    pargs[slot_param(nid)] = (
+                        jnp.asarray(np.asarray(s, np.int32)),
+                        jnp.ones((m.bucket,), bool),
+                    )
+                pargs_tuple.append(pargs)
             else:  # parameter-free member: unbatched, no stacked args
                 pargs_tuple.append({})
-        outs = entry.fn(tuple(pargs_tuple), env_token[0])
+        targs_tuple = tuple(_stack_params(g.bindings) for g in groups)
+        outs = entry.fn(tuple(pargs_tuple), targs_tuple, env_token[0])
         t_dispatch = time.perf_counter() - t0
         jax.block_until_ready([mask for mask, _ in outs])
         elapsed = time.perf_counter() - t0
         n_stmts = len({m.key[0] for m in members})
+        # sharing evidence: evaluations avoided this wave (constant refs
+        # beyond the first evaluation + template ticket-refs beyond their
+        # distinct bindings) and the covered-node total
+        t_refs = sum(len(s) for smap in slot_maps for s in smap.values())
+        t_evals = sum(len(g.bindings) for g in groups)
+        m_stats = merged.stats
+        # subtrahend is the distinct *maximal* fingerprint count — the pool
+        # also holds nested entries, which are not separate evaluations the
+        # per-statement path would have paid
+        self.cache_stats["cse_hits"] += (
+            max(0, m_stats["shared_refs"] - m_stats["shared_maximal_subtrees"])
+            + max(0, t_refs - t_evals)
+        )
+        self.cache_stats["cse_shared_nodes"] += m_stats["cse_shared_nodes"]
+        fused_explain = merged.explain()
         for j, (m, k) in enumerate(zip(members, order)):
             ent = by_key[k]
             mask, cols = outs[j]
@@ -903,6 +1195,12 @@ class Session:
                 "fused_statements": n_stmts, "fused_members": len(members),
                 "batch_size": len(ent["params"]), "batch_bucket": m.bucket,
                 "dispatch_s": t_dispatch, "sync_s": elapsed - t_dispatch,
+                # this wave's template pooling (trace-level cse_* counters
+                # ride in from entry.stats via the merge pass)
+                "cse_template_groups": len(groups),
+                "cse_bindings": t_evals,
+                "cse_template_ticket_refs": t_refs,
+                "fused_explain": fused_explain,
             }
             if shard:
                 stats["sharded"] = True

@@ -23,12 +23,22 @@ list; ``CoalescingScheduler(fuse=True)`` drains mixed-statement queues
 through it; fused executables live in the session's ``fuse_hits`` /
 ``fuse_misses`` cache tier.
 """
-from repro.fuse.analysis import fusion_group_key, is_fusable, partition_calls
+from repro.fuse.analysis import (
+    fusion_group_key,
+    is_fusable,
+    partition_calls,
+    shareable_fingerprints,
+)
 from repro.fuse.merge import (
     FusedPlan,
+    SharedTemplate,
+    hole_name,
     merge_plans,
     plan_is_pure,
+    rewrite_params,
+    slot_param,
     subtree_is_constant,
+    subtree_shape,
 )
 from repro.fuse.program import FUSE_PAD, SharedScanExecutor, build_fused_raw
 
@@ -36,11 +46,17 @@ __all__ = [
     "FusedPlan",
     "FUSE_PAD",
     "SharedScanExecutor",
+    "SharedTemplate",
     "build_fused_raw",
     "fusion_group_key",
+    "hole_name",
     "is_fusable",
     "merge_plans",
     "partition_calls",
     "plan_is_pure",
+    "rewrite_params",
+    "shareable_fingerprints",
+    "slot_param",
     "subtree_is_constant",
+    "subtree_shape",
 ]

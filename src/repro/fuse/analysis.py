@@ -16,13 +16,19 @@ A call ``(stmt, params)`` is **fusable** when:
 Fusable calls group by **compatible policy**: equal identity fingerprints
 (the plans must agree on inlining/optimization/compilation) and equal
 sharding placement (one fused program has one mesh layout).  Groups wider
-than ``policy.max_fused_statements`` distinct statements split; a split
-remainder (or a group) holding a single distinct statement gains nothing
-from fusion and falls back to ``execute_many``.
+than ``policy.max_fused_statements`` distinct statements split — and the
+split considers **template overlap**: statements are chunked greedily so
+that those sharing subtree/template fingerprints (the CSE engine's
+sharing currency, :func:`shareable_fingerprints`) land in the same fused
+program, instead of whatever first-appearance order the queue happened to
+arrive in.  A split remainder (or a group) holding a single distinct
+statement gains nothing from fusion and falls back to ``execute_many``.
 """
 from __future__ import annotations
 
-from repro.fuse.merge import plan_is_pure
+from repro.core import relalg as R
+from repro.core.session import parametric_fingerprint
+from repro.fuse.merge import plan_is_pure, subtree_shape
 
 
 def fusion_group_key(stmt) -> tuple:
@@ -52,6 +58,52 @@ def is_fusable(session, stmt) -> bool:
     if not (p.compile_plan and p.fuse):
         return False
     return _plan_pure_cached(stmt)
+
+
+def shareable_fingerprints(stmt) -> frozenset:
+    """Canonical fingerprints of every shareable subtree of the statement's
+    current plan — constant subtrees, parameter-unified templates and
+    correlated templates alike (the things the merge pass can dedup when
+    another member brings a matching one).  Memoized per plan object, like
+    the purity verdict — the classification deliberately repeats what
+    merge_plans will do (only on the cold path, and only when a group is
+    wide enough to split); sharing a per-node memo with the merge pass is
+    not worth coupling the two layers yet."""
+    plan = stmt._ensure_plan()
+    cached = getattr(stmt, "_fuse_fps", None)
+    if cached is not None and cached[0] is plan:
+        return cached[1]
+    fps = set()
+    for n in R.walk_plan_deep(plan):
+        if subtree_shape(n) is not None:
+            fps.add(parametric_fingerprint(n)[0])
+    out = frozenset(fps)
+    stmt._fuse_fps = (plan, out)
+    return out
+
+
+def _overlap_order(order: list, fp_sets: dict, cap: int) -> list:
+    """Reorder distinct-statement fingerprints so overlap-sharing
+    statements chunk together: greedy — seed each chunk with the earliest
+    unplaced statement, then repeatedly pull the unplaced statement with
+    the largest fingerprint overlap against the chunk's accumulated set
+    (earliest arrival breaks ties, keeping the result deterministic)."""
+    remaining = list(order)
+    out: list = []
+    while remaining:
+        chunk = [remaining.pop(0)]
+        acc = set(fp_sets.get(chunk[0], ()))
+        while len(chunk) < cap and remaining:
+            best_i, best_n = 0, -1
+            for i, fp in enumerate(remaining):
+                n = len(acc & fp_sets.get(fp, frozenset()))
+                if n > best_n:
+                    best_i, best_n = i, n
+            pick = remaining.pop(best_i)
+            chunk.append(pick)
+            acc |= fp_sets.get(pick, frozenset())
+        out.extend(chunk)
+    return out
 
 
 def partition_calls(session, calls):
@@ -98,6 +150,12 @@ def partition_calls(session, calls):
                 order.append(fp)
             by_fp[fp].append((idx, stmt, params))
         cap = max(1, min(s.policy.max_fused_statements for _, s, _ in items))
+        if len(order) > cap:
+            # the group must split: chunk overlap-sharing statements
+            # together so the CSE engine has something to dedup per program
+            fp_sets = {fp: shareable_fingerprints(by_fp[fp][0][1])
+                       for fp in order}
+            order = _overlap_order(order, fp_sets, cap)
         for s in range(0, len(order), cap):
             chunk_fps = order[s:s + cap]
             chunk = [it for fp in chunk_fps for it in by_fp[fp]]

@@ -1,19 +1,29 @@
-"""Fused device programs: N statements, one trace, shared scans.
+"""Fused device programs: N statements, one trace, shared scans + pooled
+parameter-unified templates.
 
 The fusion engine's back half.  Given the member descriptors the session
-assembled (plan, parameter signature, batch bucket per member) this module
-builds the single **raw closure** the session jits into the fused
-executable:
+assembled (plan, parameter signature, batch bucket per member) plus the
+merge pass's sharing maps, this module builds the single **raw closure**
+the session jits into the fused executable:
 
 1. rebuild the catalog from the (broadcast) table arguments — exactly as
    the per-statement closure in ``Session._executable`` does;
-2. execute every shared subtree the merge pass found **once**, on an
-   ordinary executor, into a ``fingerprint -> MaskedTable`` pool;
-3. ``vmap`` each member's plan over its own stacked parameter axis, with a
-   :class:`SharedScanExecutor` that answers marked subtrees straight from
-   the pool (the pool entries are loop-invariant w.r.t. the parameter
-   axis, so they enter each member's trace as broadcast constants);
-4. return one ``(mask, columns)`` pair per member — the tagged fused
+2. execute every shared **constant** subtree once, innermost-first, into a
+   ``fingerprint -> MaskedTable`` pool — the pool builder itself answers
+   already-built entries, so a shared sub-subtree beneath two distinct
+   shared roots evaluates once, not once per root (nested sharing);
+3. execute every **parameter-unified template** once per distinct binding:
+   the session passes, per pool group, a ``(d, ...)``-stacked binding
+   argument for each canonical hole; the canonical template subtree runs
+   ``d`` times (and only ``d`` — the eval counter asserts it) and the
+   results stack into a slot-indexed pool;
+4. ``vmap`` each member's plan over its own stacked parameter axis, with a
+   :class:`SharedScanExecutor` that answers marked constant subtrees from
+   the pool and marked template occurrences by gathering the ticket's
+   pool slot (a reserved ``__cse_slot_<node_id>`` parameter rides the
+   stacked axis); the executor propagates itself into subquery/apply
+   sub-evaluation, so sharing reaches *inside* correlated bodies;
+5. return one ``(mask, columns)`` pair per member — the tagged fused
    result the session slices per-ticket.
 
 Members with an empty parameter signature skip the batch axis entirely
@@ -24,12 +34,13 @@ parameter-free group handling.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import relalg as R
 from repro.core import scalar as S
-from repro.core.executor import Executor
+from repro.core.executor import Executor, MaskedTable
 from repro.core.interpreter import Interpreter
-from repro.fuse.merge import merge_plans
+from repro.fuse.merge import merge_plans, slot_param
 from repro.tables.table import Column, Table
 
 #: reserved stacked-parameter name (filtered out before the executor binds
@@ -40,20 +51,66 @@ FUSE_PAD = "__fuse_pad__"
 
 class SharedScanExecutor(Executor):
     """An :class:`Executor` that serves marked subtrees from the fused
-    program's shared-result pool instead of re-executing them.
+    program's shared pools instead of re-executing them.
 
-    ``shared_ids`` is the merge pass's ``node_id -> fingerprint`` map;
-    ``shared_results`` the pool built in step 2 of the fused closure.  Any
-    node not in the map executes normally — including everything *inside*
-    a shared subtree, which only ever runs under the pool builder.
+    ``shared_ids`` is the merge pass's ``node_id -> fingerprint`` map and
+    ``shared_results`` the constant pool built in step 2 of the fused
+    closure (passed by reference: during the pool build itself it is
+    partially filled, which is what makes nested sharing work).
+    ``template_ids`` maps occurrence ``node_id -> pool-group index`` and
+    ``template_results`` holds the slot-stacked template pools; the
+    occurrence's slot index arrives through the reserved
+    ``__cse_slot_<node_id>`` parameter.  Any unmarked node executes
+    normally — including everything *inside* a shared subtree, which only
+    ever runs under the pool builder.
+
+    ``eval_counts`` (shared with every sub-executor) counts pool
+    evaluations per key — the instrumentation behind the CSE metamorphic
+    tests: a template with ``d`` distinct bindings must log exactly ``d``.
     """
 
-    def __init__(self, catalog, shared_ids, shared_results, **kwargs):
+    def __init__(self, catalog, shared_ids, shared_results,
+                 template_ids=None, template_results=None,
+                 eval_counts=None, **kwargs):
         super().__init__(catalog, **kwargs)
         self._shared_ids = shared_ids
         self._shared_results = shared_results
+        self._template_ids = template_ids or {}
+        self._template_results = template_results if template_results is not None else {}
+        self.eval_counts = eval_counts if eval_counts is not None else {}
+
+    def execute_pooled(self, key, node, params=None) -> MaskedTable:
+        """One pool evaluation (a constant subtree, or a template under one
+        distinct binding), logged in ``eval_counts``."""
+        self.eval_counts[key] = self.eval_counts.get(key, 0) + 1
+        return self.execute(node, params=params)
+
+    def _sub_executor(self):
+        # subquery / correlated-apply sub-evaluation keeps answering from
+        # the pools: sharing reaches inside nested plan bodies
+        return SharedScanExecutor(
+            self.catalog, self._shared_ids, self._shared_results,
+            template_ids=self._template_ids,
+            template_results=self._template_results,
+            eval_counts=self.eval_counts,
+            udf_column_evaluator=self.udf_column_evaluator,
+            use_pallas_agg=self.use_pallas_agg,
+        )
 
     def _exec(self, node, ctx, memo):
+        gi = self._template_ids.get(node.node_id)
+        if gi is not None:
+            hit = self._template_results.get(gi)
+            slot = ctx.params.get(slot_param(node.node_id))
+            if hit is not None and slot is not None:
+                mask_stack, col_stacks, dicts = hit
+                idx = slot.data
+                cols = {
+                    c: Column(jnp.take(data, idx, axis=0),
+                              jnp.take(valid, idx, axis=0), dicts.get(c))
+                    for c, (data, valid) in col_stacks.items()
+                }
+                return MaskedTable(Table(cols), jnp.take(mask_stack, idx, axis=0))
         fp = self._shared_ids.get(node.node_id)
         if fp is not None:
             hit = self._shared_results.get(fp)
@@ -66,22 +123,32 @@ def _plans_have_udf_calls(plans) -> bool:
     return any(
         isinstance(e, S.UdfCall)
         for p in plans
-        for n in R.walk_plan(p)
+        for n in R.walk_plan_deep(p)
         for ex in n.exprs()
         for e in S.walk(ex)
     )
 
 
-def build_fused_raw(session, members, policy):
+def build_fused_raw(session, members, policy, merged=None, groups=(),
+                    member_tmaps=()):
     """Build the fused raw closure for ``members`` (see module docstring).
 
-    Returns ``(raw, out_dicts, trace_stats, merged)``: the untraced
-    closure, the per-member output-dictionary captures, the trace-time
-    stats dict (both filled on first execution, like the per-statement
-    executable's), and the :class:`~repro.fuse.merge.FusedPlan`.
+    ``groups`` are the session's template pool groups (canonical node,
+    hole names/dictionaries, one per (template, binding-signature)) and
+    ``member_tmaps`` maps each member's occurrence ``node_id`` to its
+    group index — both computed host-side in ``Session._run_fused`` from
+    the actual ticket bindings, so the closure only bakes in structure,
+    never values (the stacked binding arrays arrive as jit arguments).
+
+    Returns ``(raw, out_dicts, trace_stats, merged, eval_counts)``: the
+    untraced closure, the per-member output-dictionary captures, the
+    trace-time stats dict (both filled on first execution, like the
+    per-statement executable's), the :class:`~repro.fuse.merge.FusedPlan`,
+    and the pool-evaluation counter dict.
     """
     plans = [m.plan for m in members]
-    merged = merge_plans(plans)
+    if merged is None:
+        merged = merge_plans(plans)
 
     # iterative hook for UDF calls left in the plans (froid OFF / hybrid);
     # 'scan' mode is the only jit-traceable interpreter (see _executable)
@@ -96,8 +163,9 @@ def build_fused_raw(session, members, policy):
     }
     out_dicts: list[dict] = [{} for _ in members]
     trace_stats: dict = {}
+    eval_counts: dict = {}
 
-    def raw(table_args, pargs_tuple):
+    def raw(table_args, pargs_tuple, targs_tuple):
         catalog = {
             tname: Table(
                 {
@@ -107,20 +175,54 @@ def build_fused_raw(session, members, policy):
             )
             for tname, cols in table_args.items()
         }
-        # step 2: the shared pool — each distinct cross-statement subtree
-        # executes once, outside every member's vmap
-        shared_ex = Executor(catalog, udf_column_evaluator=hook,
-                             use_pallas_agg=policy.pallas_agg)
-        shared_results = {
-            fp: shared_ex.execute(sub) for fp, sub in merged.shared
-        }
-        scanned = shared_ex.stats
+        # step 2: the constant pool — each distinct cross-statement subtree
+        # executes once, outside every member's vmap.  The pool dict is
+        # shared by reference with the builder, and entries are built
+        # innermost-first, so outer shared subtrees answer their shared
+        # descendants from the pool instead of re-evaluating them.
+        shared_results: dict = {}
+        pool_ex = SharedScanExecutor(
+            catalog, merged.shared_ids, shared_results,
+            eval_counts=eval_counts,
+            udf_column_evaluator=hook, use_pallas_agg=policy.pallas_agg,
+        )
+        for fp, sub in merged.shared:
+            shared_results[fp] = pool_ex.execute_pooled(fp, sub)
+        # step 3: template pools — the canonical subtree evaluates once per
+        # distinct binding (d is the stacked binding arrays' leading axis)
+        template_results: dict = {}
+        for gi, g in enumerate(groups):
+            targ = targs_tuple[gi]
+            d = next(iter(targ.values()))[0].shape[0]
+            entries = []
+            for j in range(d):
+                pv = {
+                    h: S.Value(data[j], valid[j], g.hole_dicts.get(h))
+                    for h, (data, valid) in targ.items()
+                }
+                entries.append(pool_ex.execute_pooled((g.fp, g.sig), g.node,
+                                                      params=pv))
+            cols0 = entries[0].table.columns
+            template_results[gi] = (
+                jnp.stack([e.mask for e in entries]),
+                {
+                    c: (jnp.stack([e.table.columns[c].data for e in entries]),
+                        jnp.stack([e.table.columns[c].validity()
+                                   for e in entries]))
+                    for c in cols0
+                },
+                {c: col.dictionary for c, col in cols0.items()},
+            )
+        scanned = pool_ex.stats
         outs = []
         for i, (m, pargs) in enumerate(zip(members, pargs_tuple)):
             # hoisted out of the traced per-row closure (executor state is
             # batch-independent)
             ex = SharedScanExecutor(
                 catalog, merged.shared_ids, shared_results,
+                template_ids=member_tmaps[i] if member_tmaps else {},
+                template_results=template_results,
+                eval_counts=eval_counts,
                 udf_column_evaluator=hook, use_pallas_agg=policy.pallas_agg,
             )
 
@@ -149,6 +251,7 @@ def build_fused_raw(session, members, policy):
                 scanned[k] = scanned.get(k, 0) + v
         trace_stats.update(scanned)
         trace_stats.update(merged.stats)
+        trace_stats["cse_pool_evals"] = sum(eval_counts.values())
         return tuple(outs)
 
-    return raw, out_dicts, trace_stats, merged
+    return raw, out_dicts, trace_stats, merged, eval_counts

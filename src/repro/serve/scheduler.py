@@ -135,6 +135,7 @@ class CoalescingScheduler:
             "submitted": 0, "batches": 0, "drained": 0,
             "flush_full": 0, "flush_window": 0, "flush_forced": 0,
             "fused_batches": 0, "fused_statements": 0,
+            "fused_isolated_retries": 0, "fused_isolated_errors": 0,
         }
 
     # -- knob resolution ----------------------------------------------------
@@ -258,11 +259,13 @@ class CoalescingScheduler:
             self._drain(g)
 
     def _drain_fused(self, groups: list[_Group]) -> None:
-        """Mixed-statement drain through ``Session.execute_fused``.  The
-        whole wave succeeds or fails together (an error from any member
-        fans out to every ticket of the wave — acceptable for the serving
-        path, where a drain-time failure is an engine fault, not a
-        per-request verdict)."""
+        """Mixed-statement drain through ``Session.execute_fused``, with
+        **per-group error isolation**: when the fused wave fails (one
+        member referencing a dropped table must not poison every ticket of
+        the wave), each statement's batch retries independently on its own
+        per-statement path — only the genuinely failing group's tickets
+        carry the error, and ``stats['fused_isolated_retries']`` /
+        ``['fused_isolated_errors']`` record the fallout."""
         self.stats["batches"] += 1
         self.stats["drained"] += sum(len(g.params) for g in groups)
         self.stats["fused_batches"] += 1
@@ -277,10 +280,27 @@ class CoalescingScheduler:
             for g in groups:
                 for t in g.tickets:
                     t._result = next(it)
-        except Exception as e:  # fan the failure out to every waiter
-            for g in groups:
-                for t in g.tickets:
-                    t._error = e
+        except Exception:
+            # the wave failed as a unit; re-run each group alone so the
+            # failure lands only on the tickets that earn it
+            try:
+                for g in groups:
+                    self.stats["fused_isolated_retries"] += 1
+                    try:
+                        with self._drain_lock:
+                            rs = g.stmt.execute_many(g.params)
+                        for t, r in zip(g.tickets, rs):
+                            t._result = r
+                    except Exception as e:
+                        self.stats["fused_isolated_errors"] += 1
+                        for t in g.tickets:
+                            t._error = e
+            except BaseException as e:  # interrupt mid-retry: park a
+                for g in groups:        # diagnostic on every unfilled
+                    for t in g.tickets:  # ticket, let the interrupt rise
+                        if t._result is None and t._error is None:
+                            t._error = e
+                raise
         except BaseException as e:  # KeyboardInterrupt/SystemExit: park a
             for g in groups:         # diagnostic on the tickets, but let
                 for t in g.tickets:  # the interrupt reach the caller

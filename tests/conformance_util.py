@@ -48,6 +48,7 @@ from repro.core import (
     var,
 )
 from repro.core import scalar as S
+from repro.core.frontend import scalar_subquery
 
 N_ROWS = 23
 N_KEYS = 7
@@ -234,7 +235,7 @@ def fusion_calls_spec():
 
 
 def check_fusion_oracle(seed: int, n_rows: int, policy, calls_spec=None, *,
-                        ddl: bool = False, expect_fused: bool = True):
+                        queries=None, ddl: bool = False, expect_fused=True):
     """Fused drain of a mixed-statement queue == per-statement serial loop.
 
     Submits the queue to a fusion-mode scheduler, optionally lands DDL
@@ -242,14 +243,22 @@ def check_fusion_oracle(seed: int, n_rows: int, policy, calls_spec=None, *,
     flushes, and compares every ticket element-wise against the serial
     ``execute`` loop run afterwards under the same catalog state.  For
     policies the fusability analysis accepts, also asserts the shared-scan
-    evidence (fused program count < statement count, ≥ 1 shared subtree);
-    for non-fusable policies asserts the fallback ran instead.  Returns
-    the fused results for extra caller assertions."""
+    evidence (fused program count < statement count, ≥ 1 shared subtree or
+    pooled template); for non-fusable policies asserts the fallback ran
+    instead.  Returns the fused results for extra caller assertions.
+
+    ``queries`` substitutes the statement set (default:
+    :func:`fusion_queries`); ``calls_spec`` is ``[(statement index,
+    params)]``.  ``expect_fused="auto"`` derives the expectation from the
+    queue itself — fused evidence is asserted only when the submitted
+    tickets span ≥ 2 distinct statements under a fusable policy (the shape
+    generative callers can't guarantee by construction)."""
     from repro.serve.scheduler import CoalescingScheduler
 
     db = make_session(seed, n_rows)
     db.create_function(build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
-    stmts = [db.prepare(q, policy) for q in fusion_queries()]
+    qs = queries if queries is not None else fusion_queries()
+    stmts = [db.prepare(q, policy) for q in qs]
     spec = calls_spec if calls_spec is not None else fusion_calls_spec()
     sched = CoalescingScheduler(max_batch=256, window_s=10.0,
                                 clock=lambda: 0.0, fuse=True)
@@ -269,14 +278,80 @@ def check_fusion_oracle(seed: int, n_rows: int, policy, calls_spec=None, *,
     for j, (s, f) in enumerate(zip(serial, fused)):
         assert_rows_equal(s, f, f"fused[{j}] vs serial")
     fusable = policy.compile_plan and policy.fuse
+    if expect_fused == "auto":
+        expect_fused = len({id(stmts[i]) for i, _ in spec}) >= 2
     if expect_fused and fusable:
         st = next(r.stats for r in fused if r.stats.get("fused"))
         assert st["fused_programs"] < st["fused_statements"], st
-        assert st["shared_subtrees"] >= 1, st
+        assert st["shared_subtrees"] + st["cse_templates"] >= 1, st
         assert sched.stats["fused_batches"] >= 1
     elif not fusable:
         assert all("fused" not in r.stats for r in fused)
     return fused
+
+
+# --------------------------------------------------------------------------
+# overlap-queue generation (the generative fusion surface: statements built
+# from compact specs so hypothesis and the deterministic fallback driver
+# exercise the same construction)
+# --------------------------------------------------------------------------
+
+#: statement-shape axes: body × filter × parameter name.  Every generated
+#: statement scans ``facts``, so any 2+ members share at least that subtree;
+#: ``qty_ge``/``val_gt`` filters with different parameter names unify into
+#: one template (parameter-unified sharing); ``lit`` filters share as
+#: constants; ``nested`` rides a parameterized aggregate inside a scalar
+#: subquery (nested shared aggregates).
+OVERLAP_BODIES = ("proj", "agg", "nested")
+OVERLAP_FILTERS = ("none", "qty_ge", "val_gt", "lit")
+OVERLAP_PNAMES = ("p", "q")
+
+
+def overlap_query(spec, idx: int):
+    """Build one statement from ``spec = (body, filt, pname)``.  ``idx``
+    salts output column names, so every queue position yields a distinct
+    statement even when specs repeat — repeated specs exercise maximal
+    template overlap between distinct members, not statement dedup."""
+    body, filt, pname = spec
+    q = scan("facts")
+    if filt == "qty_ge":
+        q = q.filter(col("qty") >= param(pname))
+    elif filt == "val_gt":
+        q = q.filter(col("val") > param(pname))
+    elif filt == "lit":
+        q = q.filter(col("qty") >= lit(3))
+    if body == "proj":
+        q = q.compute(**{f"w{idx}": col("val") * 2.0}).project("fk", f"w{idx}")
+    elif body == "agg":
+        q = q.group_by("fk", **{f"s{idx}": sum_(col("val"))})
+    else:  # nested shared aggregate inside a scalar subquery
+        inner = (scan("facts").filter(col("val") > param(pname))
+                 .agg(s=sum_(col("val"))))
+        q = q.compute(
+            **{f"n{idx}": scalar_subquery(inner.node, "s") + col("val")}
+        ).project("fk", f"n{idx}")
+    return q
+
+
+def overlap_param_names(spec) -> tuple:
+    """Parameter names ``overlap_query(spec, …)`` expects at execution."""
+    body, filt, pname = spec
+    need = filt in ("qty_ge", "val_gt") or body == "nested"
+    return (pname,) if need else ()
+
+
+def overlap_queue(specs, ticket_values):
+    """``(queries, calls_spec)`` for :func:`check_fusion_oracle`:
+    ``specs`` is the statement list; ``ticket_values`` is a flat value
+    list — ticket ``t`` goes to statement ``t % len(specs)`` carrying its
+    value for every parameter the statement needs (values repeat across
+    tickets, so template binding pools see d < k distinct bindings)."""
+    queries = [overlap_query(s, i) for i, s in enumerate(specs)]
+    calls = []
+    for t, v in enumerate(ticket_values):
+        i = t % len(specs)
+        calls.append((i, {n: v for n in overlap_param_names(specs[i])}))
+    return queries, calls
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

@@ -1,0 +1,462 @@
+"""Cross-statement CSE engine (ISSUE-5 contract): parameter-unified
+templates, nested sharing, binding-pooled evaluation, template cache
+keying, correlated-template identity, explain surfacing, and per-group
+error isolation in fused drains.
+
+The metamorphic layer: merge-stats monotonicity, exact pool-evaluation
+counts (a subtree shared by k members with d distinct bindings evaluates
+exactly d times), and arrival-order-independent template cache keys.
+Runs everywhere (no hypothesis needed — the generative strategy in
+``test_property_froid.py`` drives the same oracles in CI); the
+deterministic overlap-queue driver at the bottom replays fixed samples of
+the generative spec space.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FROID,
+    HEKATON,
+    Session,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+)
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.frontend import scalar_subquery
+from repro.core.session import parametric_fingerprint, plan_fingerprint
+from repro.fuse import (
+    merge_plans,
+    rewrite_params,
+    subtree_shape,
+)
+from repro.serve.scheduler import CoalescingScheduler
+from conformance_util import (
+    OVERLAP_BODIES,
+    OVERLAP_FILTERS,
+    OVERLAP_PNAMES,
+    check_fusion_oracle,
+    overlap_queue,
+)
+
+
+def _populate(db, n_detail=600, n_t=80, seed=0):
+    rng = np.random.default_rng(seed)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 40, n_detail),
+        d_val=rng.uniform(0, 100, n_detail).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 40, n_t))
+
+
+@pytest.fixture
+def db():
+    s = Session()
+    _populate(s)
+    return s
+
+
+def _assert_same(serial, fused):
+    assert len(serial) == len(fused)
+    for s, f in zip(serial, fused):
+        m = np.asarray(s.masked.mask)
+        np.testing.assert_array_equal(m, np.asarray(f.masked.mask))
+        for n, c in s.masked.table.columns.items():
+            np.testing.assert_allclose(
+                np.asarray(f.masked.table.columns[n].data)[m],
+                np.asarray(c.data)[m], rtol=1e-5,
+            )
+
+
+def _agg_filtered(pname: str, out: str = "s"):
+    """GroupAgg-over-filter subtree parameterized by ``pname`` — the
+    canonical param-unified template of this suite."""
+    return (scan("detail").filter(col("d_val") > param(pname))
+            .agg(**{out: sum_(col("d_val"))}))
+
+
+def _q_template(pname: str, out_col: str):
+    """Statement whose compute rides the shared parameterized aggregate."""
+    return (
+        scan("T")
+        .compute(**{out_col: scalar_subquery(_agg_filtered(pname).node, "s")
+                    + col("a") * 0.0})
+        .project("a", out_col)
+    )
+
+
+# ---------------------------------------------------------------------------
+# parametric fingerprints (unification rules)
+# ---------------------------------------------------------------------------
+
+
+def test_parametric_fingerprint_unifies_modulo_param_names():
+    p1 = R.Filter(R.Scan("detail"), col("d_val") > param("x"))
+    p2 = R.Filter(R.Scan("detail"), col("d_val") > param("y"))
+    assert plan_fingerprint(p1) != plan_fingerprint(p2)
+    fp1, holes1 = parametric_fingerprint(p1)
+    fp2, holes2 = parametric_fingerprint(p2)
+    assert fp1 == fp2
+    assert holes1 == (("param", "x"),) and holes2 == (("param", "y"),)
+
+
+def test_parametric_fingerprint_repetition_pattern():
+    """``Param(a) + Param(a)`` must not unify with ``Param(x) + Param(y)``
+    — hole numbering is per distinct name."""
+    twice = R.Filter(R.Scan("T"), param("a") + param("a") > col("a"))
+    mixed = R.Filter(R.Scan("T"), param("x") + param("y") > col("a"))
+    assert parametric_fingerprint(twice)[0] != parametric_fingerprint(mixed)[0]
+    # and the repetition shape itself is name-insensitive
+    twice2 = R.Filter(R.Scan("T"), param("b") + param("b") > col("a"))
+    assert parametric_fingerprint(twice)[0] == parametric_fingerprint(twice2)[0]
+
+
+def test_parametric_fingerprint_kinds_are_distinct():
+    """A param hole never unifies with an outer hole."""
+    viap = R.Filter(R.Scan("detail"), col("d_key") <= param("k"))
+    viao = R.Filter(R.Scan("detail"), col("d_key") <= S.Outer("k"))
+    assert parametric_fingerprint(viap)[0] != parametric_fingerprint(viao)[0]
+    # hole-free trees fingerprint exactly like plan_fingerprint
+    free = R.Filter(R.Scan("detail"), col("d_key") <= lit(5))
+    assert parametric_fingerprint(free)[0] == plan_fingerprint(free)
+
+
+def test_subtree_shape_classes():
+    assert subtree_shape(R.Scan("T")) == "const"
+    assert subtree_shape(
+        R.Filter(R.Scan("T"), col("a") < param("c"))) == "param"
+    assert subtree_shape(
+        R.Filter(R.Scan("T"), col("a") < S.Outer("o"))) == "corr"
+    assert subtree_shape(
+        R.Compute(R.Scan("T"), {"r": S.Func("rand", [])})) is None
+    assert subtree_shape(
+        R.Filter(R.Scan("T"), col("a") < S.Var("v"))) is None
+
+
+def test_rewrite_params_descends_into_subquery_plans():
+    inner = R.Filter(R.Scan("detail"), col("d_val") > param("x"))
+    const_side = R.Scan("T")
+    plan = R.Compute(const_side, {"v": S.ScalarSubquery(inner, None)})
+    out = rewrite_params(plan, {"x": "__cse_s0"})
+    names = {
+        s.name for n in R.walk_plan_deep(out)
+        for e in n.exprs() for s in S.walk(e) if isinstance(s, S.Param)
+    }
+    assert names == {"__cse_s0"}
+    # untouched subtrees keep identity (their node_id marks stay valid)
+    assert out.child is const_side
+
+
+# ---------------------------------------------------------------------------
+# merge pass: templates, correlated identity, monotonicity
+# ---------------------------------------------------------------------------
+
+
+def test_merge_extracts_parameter_unified_templates(db):
+    p1 = db.prepare(_q_template("x", "v1"), FROID).plan
+    p2 = db.prepare(_q_template("y", "v2"), FROID).plan
+    merged = merge_plans([p1, p2])
+    assert merged.stats["cse_templates"] >= 1
+    assert merged.stats["cse_template_refs"] >= 2
+    # occurrence bindings map the canonical hole back to each actual name
+    actuals = {
+        tuple(b.values()) for b in merged.template_binds.values()
+    }
+    assert ("x",) in actuals and ("y",) in actuals
+    # canonical template subtrees carry the canonical hole spelling
+    tnames = {
+        s.name for t in merged.templates
+        for n in R.walk_plan_deep(t.node)
+        for e in n.exprs() for s in S.walk(e) if isinstance(s, S.Param)
+    }
+    assert tnames and all(n.startswith("__cse_s") for n in tnames)
+
+
+def test_merge_corr_templates_unify_modulo_outer_binding(db):
+    """Correlated subquery bodies differing only in their outer binding
+    route through the same template path (one unified identity)."""
+    body_a = (scan("detail").filter(col("d_key") <= S.Outer("a"))
+              .agg(s=sum_(col("d_val"))))
+    body_b = (scan("detail").filter(col("d_key") <= S.Outer("b"))
+              .agg(s=sum_(col("d_val"))))
+    qa = scan("T").compute(v=scalar_subquery(body_a.node, "s")).project("a", "v")
+    qb = (scan("T").compute(b=col("a") * 1)
+          .compute(w=scalar_subquery(body_b.node, "s")).project("b", "w"))
+    pa = db.prepare(qa, FROID).plan
+    pb = db.prepare(qb, FROID).plan
+    merged = merge_plans([pa, pb])
+    assert merged.stats["cse_corr_templates"] >= 1
+    assert merged.stats["cse_corr_refs"] >= 2
+    assert "correlated templates" in merged.explain()
+
+
+def test_merge_stats_monotonic_in_members(db):
+    """Adding an overlapping member never decreases cse_shared_nodes (and
+    the count is arrival-order independent)."""
+    plans = [
+        db.prepare(_q_template("x", "v1"), FROID).plan,
+        db.prepare(_q_template("y", "v2"), FROID).plan,
+        db.prepare(scan("T").compute(z=col("a") * 2).project("z"), FROID).plan,
+        db.prepare(_q_template("z", "v3"), FROID).plan,
+    ]
+    prev = 0
+    for k in range(1, len(plans) + 1):
+        cur = merge_plans(plans[:k]).stats["cse_shared_nodes"]
+        assert cur >= prev, (k, cur, prev)
+        prev = cur
+    assert prev > 0
+    for perm in ([1, 0, 3, 2], [3, 2, 1, 0]):
+        permuted = merge_plans([plans[i] for i in perm])
+        assert permuted.stats["cse_shared_nodes"] == prev
+
+
+# ---------------------------------------------------------------------------
+# binding-pooled evaluation: exact counts
+# ---------------------------------------------------------------------------
+
+
+def _template_eval_counts(entry):
+    """Template pool keys in an executable's eval counter: ``(fp, sig)``
+    pairs, distinguishable from constant keys (whose first element is the
+    node-kind string)."""
+    return {k: v for k, v in entry.eval_counts.items()
+            if isinstance(k, tuple) and k and isinstance(k[0], tuple)}
+
+
+def test_pool_evaluates_exactly_d_distinct_bindings(db):
+    """A subtree shared by k members with d distinct bindings evaluates
+    exactly d times — the acceptance criterion, asserted through the
+    SharedScanExecutor eval counter and the per-wave stats."""
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    values = [10.0, 30.0, 10.0, 55.0, 30.0, 10.0]  # d = 3 distinct
+    calls = [((s1, {"x": v}) if i % 2 == 0 else (s2, {"y": v}))
+             for i, v in enumerate(values)]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    st = fused[0].stats
+    assert st["fused"] and st["cse_template_groups"] >= 1
+    assert st["cse_bindings"] == 3
+    entry = next(iter(db._fuse_execs.values()))
+    tcounts = _template_eval_counts(entry)
+    assert tcounts and sum(tcounts.values()) == 3
+    # constant pool entries evaluated exactly once each
+    ccounts = {k: v for k, v in entry.eval_counts.items()
+               if k not in tcounts}
+    assert ccounts and all(v == 1 for v in ccounts.values())
+
+
+def test_pool_count_insensitive_to_padding(db):
+    """Bucket padding repeats the last ticket; the pad rows must reuse its
+    pool slot, never mint extra bindings."""
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    # 3 tickets for s1 -> bucket 4 (one pad row); 1 ticket for s2
+    calls = [(s1, {"x": 10.0}), (s1, {"x": 20.0}), (s1, {"x": 10.0}),
+             (s2, {"y": 20.0})]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    assert fused[0].stats["cse_bindings"] == 2  # {10.0, 20.0}, cross-member
+
+
+def test_nested_shared_subtree_dedups_between_roots(db):
+    """A shared sub-subtree beneath two distinct shared roots evaluates
+    once — the roots' pool builds answer it from the pool."""
+    base = lambda: scan("detail").filter(col("d_val") > lit(50.0))  # noqa: E731
+    q1 = base().group_by("d_key", s=sum_(col("d_val")))
+    q2 = base().compute(w=col("d_val") * 2.0).project("d_key", "w")
+    s1 = db.prepare(q1, FROID)
+    s2 = db.prepare(q2, FROID)
+    calls = [(s1, None), (s2, None), (s1, {}), (s2, {})]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    entry = next(iter(db._fuse_execs.values()))
+    # every pool entry (roots AND the nested Filter/Scan beneath them)
+    # evaluated exactly once
+    assert entry.eval_counts and all(
+        v == 1 for v in entry.eval_counts.values())
+    assert len(entry.eval_counts) >= 2
+
+
+def test_correlated_bodies_share_interior_subtrees(db):
+    """Interior constant work of correlated subquery bodies dedups via the
+    sub-executor propagation, and parity holds for surviving (non-equi)
+    correlated subqueries under fusion."""
+    body_a = (scan("detail").filter(col("d_key") <= S.Outer("a"))
+              .agg(s=sum_(col("d_val"))))
+    body_b = (scan("detail").filter(col("d_key") <= S.Outer("b"))
+              .agg(s=sum_(col("d_val"))))
+    qa = scan("T").compute(v=scalar_subquery(body_a.node, "s")).project("a", "v")
+    qb = (scan("T").compute(b=col("a") * 1)
+          .compute(w=scalar_subquery(body_b.node, "s")).project("b", "w"))
+    sa = db.prepare(qa, FROID)
+    sb = db.prepare(qb, FROID)
+    calls = [(sa, None), (sb, None)]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    st = fused[0].stats
+    assert st["fused"] and st["cse_corr_templates"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# template cache keying
+# ---------------------------------------------------------------------------
+
+
+def test_template_cache_key_arrival_order_independent(db):
+    """Same templates, same distinct-binding counts, different arrival
+    order — the fused cache must hit."""
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    wave1 = [(s1, {"x": 10.0}), (s2, {"y": 20.0}), (s1, {"x": 20.0})]
+    r1 = db.execute_fused(wave1)
+    assert db.cache_stats["fuse_misses"] == 1 and not r1[0].cache_hit
+    # reversed arrival, different values, same distinct-binding count (2)
+    wave2 = [(s1, {"x": 70.0}), (s2, {"y": 5.0}), (s1, {"x": 5.0})]
+    r2 = db.execute_fused(list(reversed(wave2)))
+    assert db.cache_stats["fuse_hits"] == 1
+    assert db.cache_stats["fuse_misses"] == 1 and r2[0].cache_hit
+    _assert_same([s.execute(params=p) for s, p in reversed(wave2)], r2)
+
+
+def test_template_cache_respecializes_on_binding_count(db):
+    """A changed distinct-binding count is a different device program — it
+    must surface as a miss, not hide a retrace behind a warm hit."""
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    db.execute_fused([(s1, {"x": 10.0}), (s2, {"y": 10.0})])   # d = 1
+    misses = db.cache_stats["fuse_misses"]
+    rs = db.execute_fused([(s1, {"x": 10.0}), (s2, {"y": 99.0})])  # d = 2
+    assert db.cache_stats["fuse_misses"] == misses + 1
+    assert rs[0].stats["cse_bindings"] == 2
+
+
+# ---------------------------------------------------------------------------
+# explain + session stats surfacing
+# ---------------------------------------------------------------------------
+
+
+def test_fused_explain_surfaces_templates(db):
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    # both members bind the template to the same value: one pool slot
+    # serves two ticket refs, which is a counted cse hit
+    rs = db.execute_fused([(s1, {"x": 10.0}), (s2, {"y": 10.0})])
+    text = rs[0].stats["fused_explain"]
+    assert "parameter-unified templates" in text
+    assert "__cse_s0" in text and "'x'" in text and "'y'" in text
+    assert "shared constant subtrees" in text
+    assert db.cache_stats["cse_shared_nodes"] > 0
+    assert db.cache_stats["cse_hits"] > 0
+
+
+# ---------------------------------------------------------------------------
+# per-group error isolation in fused drains
+# ---------------------------------------------------------------------------
+
+
+def test_fused_drain_isolates_failing_member(db):
+    """One member referencing a dropped table mid-queue fails only its own
+    tickets; every other ticket of the wave still resolves."""
+    db.create_table("doomed", x=np.arange(8))
+    s_ok1 = db.prepare(_q_template("x", "v1"), FROID)
+    s_ok2 = db.prepare(scan("T").compute(z=col("a") * 2).project("z"), FROID)
+    s_bad = db.prepare(scan("doomed").compute(y=col("x") + 1).project("y"),
+                       FROID)
+    sched = CoalescingScheduler(max_batch=64, window_s=10.0,
+                                clock=lambda: 0.0, fuse=True)
+    t1 = sched.submit(s_ok1, {"x": 10.0})
+    tb = sched.submit(s_bad, {})
+    t2 = sched.submit(s_ok2, {})
+    t3 = sched.submit(s_ok1, {"x": 30.0})
+    del db.catalog["doomed"]  # DDL lands between submit and drain
+    sched.flush()
+    with pytest.raises(KeyError):
+        tb.result()
+    r1, r2, r3 = t1.result(), t2.result(), t3.result()
+    _assert_same(
+        [s_ok1.execute(params={"x": 10.0}), s_ok2.execute(),
+         s_ok1.execute(params={"x": 30.0})],
+        [r1, r2, r3],
+    )
+    assert sched.stats["fused_isolated_retries"] >= 2
+    assert sched.stats["fused_isolated_errors"] == 1
+
+
+# ---------------------------------------------------------------------------
+# overlap-aware chunking (fusability considers template overlap)
+# ---------------------------------------------------------------------------
+
+
+def test_partition_chunks_by_template_overlap(db):
+    """When a group must split, statements sharing templates land in the
+    same fused program instead of splitting by arrival order."""
+    from repro.fuse import partition_calls
+
+    policy = FROID.fused(max_fused_statements=2)
+    s_t1 = db.prepare(_q_template("x", "v1"), policy)
+    s_c1 = db.prepare(
+        scan("detail").filter(col("d_val") > lit(50.0))
+        .group_by("d_key", s=sum_(col("d_val"))), policy)
+    s_t2 = db.prepare(_q_template("y", "v2"), policy)
+    s_c2 = db.prepare(
+        scan("detail").filter(col("d_val") > lit(50.0))
+        .compute(w=col("d_val") * 2.0).project("d_key", "w"), policy)
+    # arrival order interleaves the two overlap families
+    calls = [(s_t1, {"x": 1.0}), (s_c1, {}), (s_t2, {"y": 2.0}), (s_c2, {})]
+    groups, fallbacks = partition_calls(db, calls)
+    assert len(groups) == 2 and not fallbacks
+    families = [
+        {id(stmt) for _, stmt, _ in g} for g in groups
+    ]
+    assert {id(s_t1), id(s_t2)} in families
+    assert {id(s_c1), id(s_c2)} in families
+    rs = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], rs)
+
+
+# ---------------------------------------------------------------------------
+# deterministic overlap-queue driver (fixed samples of the generative
+# spec space; the hypothesis strategy in test_property_froid.py draws from
+# the same space in CI)
+# ---------------------------------------------------------------------------
+
+FIXED_OVERLAP_QUEUES = [
+    # param-unified filters, different names, mixed bodies
+    ([("proj", "qty_ge", "p"), ("agg", "qty_ge", "q")],
+     [2, 5, 2, 7, 5]),
+    # nested shared aggregates modulo parameter values
+    ([("nested", "none", "p"), ("nested", "val_gt", "q"), ("proj", "lit", "p")],
+     [1.5, 3.0, 1.5, 8.0]),
+    # constant sharing + parameter-free members
+    ([("agg", "lit", "p"), ("proj", "lit", "q"), ("proj", "none", "p")],
+     [0, 0, 0]),
+    # same spec twice (distinct statements via the output-column salt,
+    # maximal template overlap) plus a parameter-free third
+    ([("proj", "val_gt", "p"), ("proj", "val_gt", "p"), ("agg", "none", "q")],
+     [4.0, 9.0, 4.0, 2.0]),
+]
+
+
+@pytest.mark.parametrize("policy", [FROID, HEKATON], ids=["froid", "hekaton"])
+@pytest.mark.parametrize("case_i", range(len(FIXED_OVERLAP_QUEUES)))
+def test_fixed_overlap_queues(policy, case_i):
+    specs, values = FIXED_OVERLAP_QUEUES[case_i]
+    queries, calls = overlap_queue(specs, values)
+    check_fusion_oracle(20 + case_i, 23, policy, calls, queries=queries,
+                        expect_fused="auto")
+
+
+def test_overlap_spec_space_is_covered():
+    """The fixed queues sample every body/filter axis the generative
+    strategy draws from."""
+    bodies = {b for specs, _ in FIXED_OVERLAP_QUEUES for b, _, _ in specs}
+    filters = {f for specs, _ in FIXED_OVERLAP_QUEUES for _, f, _ in specs}
+    names = {p for specs, _ in FIXED_OVERLAP_QUEUES for _, _, p in specs}
+    assert bodies == set(OVERLAP_BODIES)
+    assert filters == set(OVERLAP_FILTERS)
+    assert names == set(OVERLAP_PNAMES)

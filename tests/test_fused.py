@@ -32,7 +32,7 @@ from repro.fuse import (
     subtree_is_constant,
 )
 from repro.serve.scheduler import CoalescingScheduler
-from tests.conformance_util import check_fusion_oracle
+from conformance_util import check_fusion_oracle
 
 
 def _populate(db, n_detail=2000, n_t=200, seed=0):
@@ -122,9 +122,12 @@ def test_merge_dedups_shared_scans(db):
     assert set(merged.shared_ids.values()) <= shared_fps
 
 
-def test_merge_shares_maximal_subtrees():
-    """When a whole param-free subtree repeats, only its root is marked —
-    descendants execute inside the one shared evaluation."""
+def test_merge_shares_nested_subtrees():
+    """Every shared occurrence is marked and pooled — the repeated Filter
+    *and* its repeated Scan child.  The pool is ordered innermost-first, so
+    the Filter's pool build answers the Scan from the pool (nested
+    sharing), while member traces are intercepted at the topmost mark and
+    count maximal coverage only."""
     from repro.core import relalg as R
 
     scan_t = R.Scan("T")
@@ -133,13 +136,20 @@ def test_merge_shares_maximal_subtrees():
     f2 = R.Filter(R.Scan("T"), col("a") < lit(5))
     merged = merge_plans([R.Project(f1, ["a"]), R.Compute(f2, {"b": col("a")})])
     fps = dict(merged.shared)
-    assert len(fps) == 1  # the Filter only, not also its Scan child
+    assert len(fps) == 2  # the Filter and its shared Scan child
     assert merged.shared_ids[f1.node_id] == merged.shared_ids[f2.node_id]
-    assert scan_t.node_id not in merged.shared_ids
-    # identical whole plans share at the root (maximality goes all the way)
+    assert scan_t.node_id in merged.shared_ids  # nested occurrence pooled
+    # innermost-first pool order: the Scan precedes the Filter that uses it
+    order = [fp for fp, _ in merged.shared]
+    assert order.index(merged.shared_ids[scan_t.node_id]) \
+        < order.index(merged.shared_ids[f1.node_id])
+    # coverage counts maximal marks only: two Filter refs, Scan subsumed
+    assert merged.stats["shared_refs"] == 2
+    assert merged.stats["cse_shared_nodes"] == 4  # 2 refs x 2-node subtree
+    # identical whole plans share at the root (coverage goes all the way)
     whole = merge_plans([R.Project(f1, ["a"]), R.Project(f2, ["a"])])
-    assert len(whole.shared) == 1
-    assert f1.node_id not in whole.shared_ids  # subsumed by the root
+    assert whole.stats["shared_refs"] == 2
+    assert whole.stats["cse_shared_nodes"] == 6  # 2 refs x 3-node plan
 
 
 def test_subtree_constness():

@@ -11,10 +11,17 @@ feeds them to the shared oracles in ``conformance_util``:
 * **Invocation oracle** — ``execute_many`` (sharded over whatever device
   mesh exists, and unsharded) == the serial ``execute`` loop, including
   mixed-signature parameter lists, empty lists, and empty tables.
+* **Fusion oracle** — a generated multi-statement queue with deliberately
+  overlapping subtrees (shared scans, shared filters modulo parameter
+  values, nested shared aggregates), drained fused through the scheduler,
+  == the per-statement serial loop — across FROID/HEKATON, sharded and
+  unsharded, with DDL optionally landing between submit and drain.
 
 ``tests/test_conformance_oracle.py`` runs fixed programs through the same
-checks without hypothesis; this module is the generative layer on top
-(CI installs hypothesis — the module skips where it is absent).
+checks without hypothesis, and ``tests/test_fuse_cse.py`` replays fixed
+samples of the overlap-queue spec space; this module is the generative
+layer on top (CI installs hypothesis — the module skips where it is
+absent).
 """
 import numpy as np
 import pytest
@@ -23,15 +30,22 @@ pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 
+import jax
+
 from conformance_util import (
     AGGS,
     N_KEYS,
     N_ROWS,
+    OVERLAP_BODIES,
+    OVERLAP_FILTERS,
+    OVERLAP_PNAMES,
     build_udf,
+    check_fusion_oracle,
     check_invocation_oracle,
     check_mode_oracle,
+    overlap_queue,
 )
-from repro.core import Database, case, col, lit, param, scan, udf, var
+from repro.core import FROID, HEKATON, Database, case, col, lit, param, scan, udf, var
 from repro.core import scalar as S
 
 ORACLE_SETTINGS = dict(
@@ -223,3 +237,57 @@ def test_execute_many_equals_serial_loop_oracle(ops, seed, n_rows, params_list):
     except AssertionError:
         pytest.skip("builder rejected program")
     check_invocation_oracle(ops, seed, n_rows, params_list)
+
+
+# --------------------------------------------------------------------------
+# generative fusion oracle: multi-statement queues with deliberately
+# overlapping subtrees (ISSUE-5) — fused drain == per-statement serial loop
+# --------------------------------------------------------------------------
+
+#: 2-3 statements per queue, drawn from the overlap spec space: every
+#: statement scans ``facts`` (shared scans); parameterized filters drawn
+#: with colliding and non-colliding names exercise parameter-unified
+#: templates; ``nested`` bodies put shared aggregates inside scalar
+#: subqueries; ``lit``/``none`` shapes mix in constant sharing and
+#: parameter-free members
+_overlap_specs = st.lists(
+    st.tuples(
+        st.sampled_from(OVERLAP_BODIES),
+        st.sampled_from(OVERLAP_FILTERS),
+        st.sampled_from(OVERLAP_PNAMES),
+    ),
+    min_size=2, max_size=3,
+)
+
+#: int vs float ticket values split members by signature (mixed-signature
+#: sub-batching inside the fused program); the narrow range makes repeated
+#: values likely, so binding pools see d < k distinct bindings
+_ticket_values = st.lists(
+    st.one_of(
+        st.integers(0, 6),
+        st.floats(0, 8, allow_nan=False, width=32),
+    ),
+    min_size=2, max_size=8,
+)
+
+
+@settings(max_examples=200, **ORACLE_SETTINGS)
+@given(specs=_overlap_specs, values=_ticket_values, seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]),
+       policy_kind=st.sampled_from(["froid", "hekaton", "froid_sharded"]),
+       ddl=st.booleans())
+def test_fusion_queue_equals_serial_loop_oracle(specs, values, seed, n_rows,
+                                                policy_kind, ddl):
+    """Fusion oracle, generative layer: a fused drain of a random
+    overlapping multi-statement queue is element-wise identical to the
+    per-statement serial loop — FROID/HEKATON, sharded (over whatever
+    device mesh exists) and unsharded, empty tables, and DDL landing
+    between submit and drain."""
+    queries, calls = overlap_queue(specs, values)
+    if policy_kind == "froid_sharded":
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        policy = FROID.sharded(mesh)
+    else:
+        policy = FROID if policy_kind == "froid" else HEKATON
+    check_fusion_oracle(seed, n_rows, policy, calls, queries=queries,
+                        ddl=ddl, expect_fused="auto")
