@@ -43,7 +43,8 @@ def main() -> None:
                     help="reduced cardinalities / query subsets")
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
-                         "table5,prepared,execmany,shardmany,fused")
+                         "table5,prepared,execmany,shardmany,fused,"
+                         "cursorloop")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -55,6 +56,7 @@ def main() -> None:
     from benchmarks import (
         bench_batchmode,
         bench_compile,
+        bench_cursor_loops,
         bench_execute_many,
         bench_factor,
         bench_fused,
@@ -79,6 +81,7 @@ def main() -> None:
         "execmany": bench_execute_many.run,  # batched invocation engine
         "shardmany": bench_sharded_many.run,  # mesh-sharded batches
         "fused": bench_fused.run,          # multi-statement fusion
+        "cursorloop": bench_cursor_loops.run,  # loop-to-scan rewrite
     }
     only = args.only.split(",") if args.only else list(suites)
 

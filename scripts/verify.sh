@@ -30,6 +30,16 @@ if [ "${VERIFY_FUSED:-1}" != "0" ]; then
       --run-id verify-fused --json-dir /tmp
 fi
 
+# cursor-loop rewrite: interpreted-vs-rewritten parity (in-bench assert)
+# plus the loop-to-scan perf smoke — the CI gate requires >= 20x at N=1024.
+# VERIFY_CURSORLOOP=0 skips.
+if [ "${VERIFY_CURSORLOOP:-1}" != "0" ]; then
+  echo "--- cursor-loop parity + perf smoke: benchmarks.run --quick --only cursorloop"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only cursorloop \
+      --run-id verify-cursorloop --json-dir /tmp
+fi
+
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then
   echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

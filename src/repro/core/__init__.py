@@ -54,8 +54,19 @@ from repro.core.frontend import (
     var,
 )
 from repro.core.interpreter import Interpreter
-from repro.core.ir import Assign, Declare, IfElse, Return, UdfDef
+from repro.core.ir import (
+    Assign,
+    Break,
+    CursorLoop,
+    Declare,
+    Fetch,
+    IfElse,
+    Return,
+    UdfDef,
+    While,
+)
 from repro.core.optimizer import explain, optimize
+from repro.core.tsql import UnsupportedConstructError, parse_udf
 
 __all__ = [
     "AlgebrizeError", "algebrize", "Binder", "InlineConstraints", "Database",
@@ -64,6 +75,8 @@ __all__ = [
     "datepart", "exists", "func", "in_list", "isnull", "like", "lit", "max_",
     "min_", "not_exists", "param", "scalar_subquery", "scan", "sum_", "udf",
     "var", "Interpreter", "Assign", "Declare", "IfElse", "Return", "UdfDef",
+    "Break", "While", "Fetch", "CursorLoop",
+    "UnsupportedConstructError", "parse_udf",
     "explain", "optimize",
     # prepare/execute API
     "Session", "PreparedStatement", "QueryResult", "AsyncResult",

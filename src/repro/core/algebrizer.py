@@ -177,6 +177,8 @@ class Algebrizer:
                 computed[rs] = S.Const(True)
                 local[RET] = rc
                 local[RETSET] = rs
+            elif isinstance(st, (IR.While, IR.CursorLoop)):
+                self.emit_loop(st, computed, local, env)
             else:
                 raise AlgebrizeError(f"unsupported statement {type(st).__name__}")
         if not computed:
@@ -184,6 +186,45 @@ class Algebrizer:
         dt = R.Compute(R.ConstantScan(), computed)
         env = {**env, **local}
         return self.combine(plan, dt), env
+
+    def emit_loop(self, st, computed: dict, local: dict, env: dict):
+        """Cursor-loop rewrite (Aggify / repro.loops): classify the loop,
+        compile it to a LoopScan over the cursor's defining query, and bind
+        each live-out variable to a ScalarSubquery over the shared node.
+        Non-rewritable loops raise AlgebrizeError — the binder then leaves
+        the UdfCall in place and execution falls back to the per-row
+        interpreter (explicit verdict, not a parse error)."""
+        from repro.loops import classify, compile_loop
+
+        verdict = classify(st)
+        if not verdict.rewritable:
+            raise AlgebrizeError(
+                f"{self.udf.name}: non-rewritable loop — {verdict.reason}")
+
+        plan = self._resolve_plan(st.plan, env, local)
+        loop = IR.CursorLoop(st.cursor, plan, st.targets, st.body, st.guard)
+
+        def fix_free(e: S.Scalar, carried: set) -> S.Scalar:
+            def fx(x):
+                if isinstance(x, S.Var) and x.name not in carried:
+                    if x.name in local:
+                        return S.Outer(local[x.name])
+                    if x.name in env:
+                        return S.Outer(env[x.name])
+                    if x.name in self._param_names:
+                        return S.Param(x.name)
+                    raise AlgebrizeError(
+                        f"{self.udf.name}: undeclared variable @{x.name} "
+                        "in loop")
+                return None
+
+            return S.transform(e, fx)
+
+        node = compile_loop(loop, verdict, fix_free, typed_null)
+        for w in node.outputs:
+            c = self.fresh(w)
+            computed[c] = S.ScalarSubquery(node, w)
+            local[w] = c
 
     def emit_cond(self, plan, env, reg: IR.CondRegion):
         # 1. evaluate the predicate ONCE into an implicit column (§4.2.1:

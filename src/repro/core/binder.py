@@ -215,6 +215,8 @@ class Binder:
                         node.left, node.right, node.kind,
                         fix_scalar(node.passthrough),
                     )
+                if hasattr(node, "map_exprs"):  # LoopScan & friends
+                    return node.map_exprs(fix_scalar)
                 return None
 
             return R.transform_plan(p, nf)

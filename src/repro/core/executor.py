@@ -61,6 +61,18 @@ def _value_to_column(v: S.Value, n: int) -> Column:
     return Column(b.data, b.valid, b.dictionary)
 
 
+def _scalar_value(v: S.Value) -> S.Value:
+    """Coerce a Value to scalar (shape ``()``) leaves — loop-carry state
+    is rank-0 regardless of how broadcasting shaped the evaluation."""
+    d = jnp.asarray(v.data)
+    if d.ndim > 0:
+        d = d.reshape(-1)[0]
+    val = jnp.asarray(v.validity())
+    if val.ndim > 0:
+        val = val.reshape(-1)[0]
+    return S.Value(d, val, v.dictionary)
+
+
 def _sort_key_for(col: Column, mask: jnp.ndarray) -> jnp.ndarray:
     """Key array with masked/NULL rows pushed to the end (+inf sentinel)."""
     data = col.data
@@ -163,6 +175,9 @@ class Executor:
 
         if isinstance(node, R.GroupAgg):
             return self._exec_groupagg(node, ctx, memo)
+
+        if isinstance(node, R.LoopScan):
+            return self._exec_loopscan(node, ctx, memo)
 
         if isinstance(node, R.Sort):
             child = self._exec(node.child, ctx, memo)
@@ -615,6 +630,120 @@ class Executor:
                     occupied & (c > 0),
                 )
         return MaskedTable(Table(out_cols), occupied)
+
+    # -- loop scan (rewritten cursor loops, repro.loops) --------------------
+    def _exec_loopscan(self, node: R.LoopScan, ctx, memo) -> MaskedTable:
+        child = self._exec(node.child, ctx, memo)
+        n = child.num_rows
+        ictx = S.EvalContext(self, 1, ctx.params, ctx.outer, ctx.vars)
+        init = {
+            name: _scalar_value(S.eval_scalar(e, {}, ictx))
+            for name, e in node.carry.items()
+        }
+        if node.kind == "reduce":
+            return self._loopscan_reduce(node, child, init, ctx)
+        return self._loopscan_scan(node, child, init, ctx)
+
+    def _loopscan_reduce(self, node, child, init, ctx) -> MaskedTable:
+        """Commutative fold: masked sum/prod over the whole relation —
+        no sequential dependence, fully vectorized."""
+        n = child.num_rows
+        env = child.env()
+        cctx = S.EvalContext(self, n, ctx.params, ctx.outer, ctx.vars)
+        cctx.row_mask = child.mask
+        active = child.mask
+        cols: dict[str, Column] = {}
+        for name in node.outputs:
+            mode, op, term, pred = node.reductions[name]
+            iv = init[name]
+            if mode == "last":
+                # final fetch-variable value: the last active row's column
+                # (or the loop-entry value when the cursor is empty)
+                col = child.table.columns[op]
+                if n == 0:
+                    out = iv
+                else:
+                    has = jnp.any(active)
+                    idx = (n - 1) - jnp.argmax(active[::-1])
+                    out = S.Value(
+                        jnp.where(has, jnp.take(col.data, idx, axis=0),
+                                  iv.data.astype(col.data.dtype)),
+                        jnp.where(has, jnp.take(col.validity(), idx),
+                                  iv.validity()),
+                        col.dictionary,
+                    )
+            else:  # fold
+                tv = S.eval_scalar(term, env, cctx).broadcast(max(n, 1))
+                g = active
+                if pred is not None:
+                    pv = S.eval_scalar(pred, env, cctx).broadcast(max(n, 1))
+                    g = g & pv.data.astype(bool) & pv.validity()
+                common = jnp.result_type(iv.data.dtype, tv.data.dtype)
+                td = tv.data.astype(common)
+                if n == 0:
+                    out = iv
+                elif op == "+":
+                    out = S.Value(
+                        iv.data.astype(common)
+                        + jnp.sum(jnp.where(g, td, jnp.zeros((), common))),
+                        # NULL is sticky: any accumulated NULL term poisons
+                        # the fold, matching per-row +/* NULL propagation
+                        iv.validity() & ~jnp.any(g & ~tv.validity()),
+                    )
+                else:  # "*"
+                    out = S.Value(
+                        iv.data.astype(common)
+                        * jnp.prod(jnp.where(g, td, jnp.ones((), common))),
+                        iv.validity() & ~jnp.any(g & ~tv.validity()),
+                    )
+            cols[name] = _value_to_column(_scalar_value(out), 1)
+        return MaskedTable(Table(cols), jnp.ones((1,), bool))
+
+    def _loopscan_scan(self, node, child, init, ctx) -> MaskedTable:
+        """Order-dependent fold: ``lax.scan`` over the relation's rows,
+        evaluating the predicated step list per row.  Masked-out rows are
+        skipped (their steps see ``__live`` false); ``__done`` makes BREAK
+        and failed guards sticky."""
+        from repro.loops.rewrite import DONE, LIVE
+
+        dicts = {c: col.dictionary for c, col in child.table.columns.items()}
+        col_arrays = {
+            c: (col.data, col.validity())
+            for c, col in child.table.columns.items()
+        }
+        init_leaves = {
+            name: (v.data, v.validity()) for name, v in init.items()
+        }
+
+        def step(carry, xs):
+            mask_bit, row_cols = xs
+            done = carry[DONE][0]
+            vars_env = {
+                name: S.Value(d, v) for name, (d, v) in carry.items()
+            }
+            vars_env[LIVE] = S.Value(mask_bit & ~done)
+            env = {
+                c: S.Value(d, v, dicts[c]) for c, (d, v) in row_cols.items()
+            }
+            sctx = S.EvalContext(executor=self, num_rows=1,
+                                 params=ctx.params, outer=ctx.outer,
+                                 vars=vars_env)
+            for name, expr in node.steps:
+                vars_env[name] = S.eval_scalar(expr, env, sctx)
+            out = {}
+            for name, (d0, v0) in carry.items():
+                nv = _scalar_value(vars_env[name])
+                # cast back to the loop-entry dtype: the carry structure
+                # must be invariant across scan iterations
+                out[name] = (nv.data.astype(d0.dtype), nv.validity())
+            return out, None
+
+        final, _ = jax.lax.scan(step, init_leaves, (child.mask, col_arrays))
+        cols = {
+            name: Column(final[name][0][None], final[name][1][None])
+            for name in node.outputs
+        }
+        return MaskedTable(Table(cols), jnp.ones((1,), bool))
 
     # -- scalar-subquery hooks (called from scalar.eval_scalar) -------------
     def eval_scalar_subquery(self, expr: S.ScalarSubquery, env, ctx) -> S.Value:

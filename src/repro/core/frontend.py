@@ -282,6 +282,70 @@ class UdfBuilder:
         self._last_if[-1] = None
         return self
 
+    # -- loops ----------------------------------------------------------------
+    def break_(self) -> "UdfBuilder":
+        self._stack[-1].append(IR.Break())
+        self._last_if[-1] = None
+        return self
+
+    def fetch_(self, cursor: str, targets: list[tuple[str, str]]) -> "UdfBuilder":
+        """FETCH NEXT marker (parser-internal; see :class:`ir.Fetch`)."""
+        self._stack[-1].append(IR.Fetch(cursor, list(targets)))
+        self._last_if[-1] = None
+        return self
+
+    @contextlib.contextmanager
+    def _capture(self):
+        """Collect statements into a fresh list without emitting a node —
+        the parser uses this to parse loop bodies before deciding the loop
+        shape."""
+        self._stack.append([])
+        self._last_if.append(None)
+        holder: list[IR.Statement] = []
+        try:
+            yield holder
+        finally:
+            holder.extend(self._stack.pop())
+            self._last_if.pop()
+            self._last_if[-1] = None
+
+    @contextlib.contextmanager
+    def while_(self, pred):
+        """WHILE pred BEGIN ... END."""
+        self._stack.append([])
+        self._last_if.append(None)
+        try:
+            yield self
+        finally:
+            body = self._stack.pop()
+            self._last_if.pop()
+            self._stack[-1].append(IR.While(S.wrap(pred), body))
+            self._last_if[-1] = None
+
+    @contextlib.contextmanager
+    def cursor_loop(self, fetch: dict[str, str], frm, where=None, guard=None,
+                    cursor: str = "c"):
+        """Cursor loop over ``frm``'s rows in order.
+
+        ``fetch`` maps loop variables to cursor columns (FETCH ... INTO);
+        ``guard`` is an optional extra termination conjunct evaluated after
+        each fetch (loop stops when it is not true)."""
+        plan = frm.node if isinstance(frm, Q) else frm
+        if where is not None:
+            plan = R.Filter(plan, S.wrap(where))
+        self._stack.append([])
+        self._last_if.append(None)
+        try:
+            yield self
+        finally:
+            body = self._stack.pop()
+            self._last_if.pop()
+            targets = [(v, c) for v, c in fetch.items()]
+            g = None if guard is None else S.wrap(guard)
+            self._stack[-1].append(
+                IR.CursorLoop(cursor, plan, targets, body, g))
+            self._last_if[-1] = None
+
     # -- finish ---------------------------------------------------------------
     def build(self) -> IR.UdfDef:
         assert len(self._stack) == 1, "unclosed if_/else_ block"

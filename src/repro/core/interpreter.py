@@ -33,15 +33,29 @@ class InterpreterError(Exception):
     pass
 
 
+class _Break(Exception):
+    """Internal control-flow sentinel for BREAK (python mode)."""
+
+
+class _Flow:
+    """Mutable per-iteration control state for traced loop bodies: lanes
+    with ``broken`` set have hit BREAK and skip the rest of the body."""
+
+    def __init__(self, broken):
+        self.broken = broken
+
+
 class Interpreter:
     def __init__(self, catalog, registry, mode: str = "python",
-                 jit_statements: bool = True, max_recursion: int = 32):
+                 jit_statements: bool = True, max_recursion: int = 32,
+                 max_loop_iters: int = 10_000):
         assert mode in ("python", "scan")
         self.catalog = catalog
         self.registry = registry
         self.mode = mode
         self.jit_statements = jit_statements
         self.max_recursion = max_recursion
+        self.max_loop_iters = max_loop_iters
         self._stmt_cache: dict[int, callable] = {}
         self._scan_cache: dict[str, callable] = {}
         self.stats = {
@@ -135,8 +149,81 @@ class Interpreter:
                     return ret
             elif isinstance(st, IR.Return):
                 return self._eval_stmt_expr(udf, st, st.expr, vars, params, depth)
+            elif isinstance(st, IR.Break):
+                raise _Break()
+            elif isinstance(st, IR.While):
+                ret = self._run_while(udf, st, vars, params, depth)
+                if ret is not None:
+                    return ret
+            elif isinstance(st, IR.CursorLoop):
+                ret = self._run_cursor_loop(udf, st, vars, params, depth)
+                if ret is not None:
+                    return ret
+            elif isinstance(st, IR.Fetch):
+                raise InterpreterError(
+                    "FETCH outside a recognised cursor WHILE loop")
             else:
                 raise InterpreterError(type(st).__name__)
+        return None
+
+    def _truthy(self, v: S.Value) -> bool:
+        return bool(np.asarray(v.data)) and bool(np.asarray(v.validity()))
+
+    def _run_while(self, udf, st: IR.While, vars, params, depth):
+        """Reference WHILE semantics: host-interpreted, per statement."""
+        iters = 0
+        try:
+            while True:
+                p = self._eval_stmt_expr(udf, st, st.pred, vars, params, depth)
+                if not self._truthy(p):
+                    return None
+                iters += 1
+                if iters > self.max_loop_iters:
+                    raise InterpreterError(
+                        f"{udf.name}: WHILE exceeded {self.max_loop_iters} "
+                        "iterations")
+                ret = self._run_block(udf, st.body, vars, params, depth)
+                if ret is not None:
+                    return ret
+        except _Break:
+            return None
+
+    def _run_cursor_loop(self, udf, st: IR.CursorLoop, vars, params, depth):
+        """Reference cursor-loop semantics (the correctness oracle): run
+        the defining query once, then iterate its qualifying rows in order
+        — bind fetch variables, check the guard, run the body."""
+        executor = Executor(
+            self.catalog,
+            udf_column_evaluator=functools.partial(self._nested_udf, depth),
+        )
+        res = executor.execute(st.plan, params=params, vars=vars)
+        ex_stats = executor.stats
+        self.stats["bytes_scanned"] += ex_stats["bytes_scanned"]
+        self.stats["rows_scanned"] += ex_stats["rows_scanned"]
+        mask = np.asarray(res.mask)
+        cols = {
+            c: (np.asarray(col.data), np.asarray(col.validity()),
+                col.dictionary)
+            for c, col in res.table.columns.items()
+        }
+        try:
+            for i in range(mask.shape[0]):
+                if not mask[i]:
+                    continue  # masked-out row: not a cursor row
+                for v, c in st.targets:
+                    d, valid, dic = cols[c]
+                    vars[v] = S.Value(
+                        jnp.asarray(d[i]), jnp.asarray(valid[i]), dic)
+                if st.guard is not None:
+                    g = self._eval_stmt_expr(
+                        udf, st, st.guard, vars, params, depth)
+                    if not self._truthy(g):
+                        return None
+                ret = self._run_block(udf, st.body, vars, params, depth)
+                if ret is not None:
+                    return ret
+        except _Break:
+            pass
         return None
 
     def _eval_stmt_expr(self, udf, st, expr, vars, params, depth) -> S.Value:
@@ -265,35 +352,65 @@ class Interpreter:
                                 vars=vars)
             return S.eval_scalar(expr, {}, ctx)
 
-        def run(stmts, vars, ret, retset):
+        def guard_of(live, flow):
+            """The combined write-guard at this point: the enclosing branch
+            predicate ANDed with not-yet-BROKEN.  None means unguarded (the
+            straight-line top-level path, preserved bit-for-bit)."""
+            g = live
+            if flow is not None:
+                nb = ~flow.broken
+                g = nb if g is None else g & nb
+            return g
+
+        def run(stmts, vars, ret, retset, live=None, flow=None):
             for st in stmts:
+                g = guard_of(live, flow)
                 if isinstance(st, IR.Declare):
-                    vars[st.name] = (
+                    v = (
                         S.null_value(A._NULL_DTYPES.get(st.dtype))
                         if st.init is None
                         else ev(st.init, vars)
                     )
+                    if g is None:
+                        vars[st.name] = v
+                    else:
+                        old = vars.get(st.name) or S.null_value(v.data.dtype)
+                        vars[st.name] = _merge(g, v, old)
                 elif isinstance(st, IR.Assign):
-                    vars[st.name] = ev(st.expr, vars)
+                    v = ev(st.expr, vars)
+                    if g is None:
+                        vars[st.name] = v
+                    else:
+                        old = vars.get(st.name) or S.null_value(v.data.dtype)
+                        vars[st.name] = _merge(g, v, old)
                 elif isinstance(st, IR.Return):
                     v = ev(st.expr, vars)
                     if ret is None:
-                        ret, retset = v, jnp.asarray(True)
+                        if g is None:
+                            ret, retset = v, jnp.asarray(True)
+                        else:
+                            ret, retset = v, jnp.asarray(g).reshape(())
                     else:
-                        keep = retset
+                        take = (~retset if g is None
+                                else jnp.asarray(g).reshape(()) & ~retset)
                         ret = S.Value(
-                            jnp.where(keep, ret.data, v.data.astype(ret.data.dtype)),
-                            jnp.where(keep, ret.validity(), v.validity()),
+                            jnp.where(take, v.data.astype(ret.data.dtype),
+                                      ret.data),
+                            jnp.where(take, v.validity(), ret.validity()),
                             ret.dictionary or v.dictionary,
                         )
-                        retset = jnp.asarray(True)
+                        retset = retset | take
                 elif isinstance(st, IR.IfElse):
                     p = ev(st.pred, vars)
                     taken = p.data.astype(bool) & p.validity()
+                    tlive = None if g is None else g & taken
+                    elive = None if g is None else g & ~taken
                     tvars = dict(vars)
-                    tret, tretset = run(st.then_body, tvars, ret, retset)
+                    tret, tretset = run(st.then_body, tvars, ret, retset,
+                                        tlive, flow)
                     evars = dict(vars)
-                    eret, eretset = run(st.else_body, evars, ret, retset)
+                    eret, eretset = run(st.else_body, evars, ret, retset,
+                                        elive, flow)
                     for k in set(tvars) | set(evars):
                         tv = tvars.get(k, vars.get(k))
                         evv = evars.get(k, vars.get(k))
@@ -303,7 +420,162 @@ class Interpreter:
                             evv = S.null_value()
                         vars[k] = _merge(taken, tv, evv)
                     ret, retset = _merge_ret(taken, tret, tretset, eret, eretset)
+                elif isinstance(st, IR.Break):
+                    if flow is None:
+                        raise InterpreterError("BREAK outside a loop")
+                    b = jnp.asarray(True) if g is None else g
+                    flow.broken = flow.broken | jnp.asarray(b).reshape(())
+                elif isinstance(st, IR.While):
+                    ret, retset = traced_while(st, vars, ret, retset, g)
+                elif isinstance(st, IR.CursorLoop):
+                    ret, retset = traced_cursor(st, vars, ret, retset, g)
+                elif isinstance(st, IR.Fetch):
+                    raise InterpreterError(
+                        "FETCH outside a recognised cursor WHILE loop")
             return ret, retset
+
+        def seed_frame(st, vars, ret, retset, extra_nulls=()):
+            """Close the loop's carry structure: every name the body may
+            write must exist in the frame before tracing starts."""
+            for name, dtype in _loop_declares(st.body):
+                if name not in vars:
+                    vars[name] = S.null_value(A._NULL_DTYPES.get(dtype))
+            for name in _loop_assigned([st]):
+                if name not in vars:
+                    vars[name] = (params[name] if name in params
+                                  else S.null_value())
+            for name, dtype in extra_nulls:
+                if name not in vars:
+                    vars[name] = S.null_value(dtype)
+            has_ret = _has_return(st.body)
+            if has_ret and ret is None:
+                ret = S.null_value()
+                retset = jnp.asarray(False)
+            return ret, retset, has_ret
+
+        def traced_while(st: IR.While, vars, ret, retset, live):
+            ret, retset, has_ret = seed_frame(st, vars, ret, retset)
+            names = sorted(vars)
+            dtypes = {k: jnp.asarray(vars[k].data).dtype for k in names}
+            dicts = {k: vars[k].dictionary for k in names}
+            rdict = ret.dictionary if ret is not None else None
+            base_live = (jnp.asarray(True) if live is None
+                         else _sc(jnp.asarray(live)))
+
+            def unpack(leaves):
+                return {k: S.Value(d, v, dicts[k])
+                        for k, (d, v) in zip(names, leaves)}
+
+            def cond_fn(c):
+                it, leaves, rleaf, rs, brk = c
+                p = ev(st.pred, unpack(leaves))
+                ok = (_sc(p.data).astype(bool) & _sc(p.validity())
+                      & (it < self.max_loop_iters) & base_live & ~brk)
+                if has_ret:
+                    ok = ok & ~rs
+                return ok
+
+            def body_fn(c):
+                it, leaves, rleaf, rs, brk = c
+                vv = unpack(leaves)
+                r = (S.Value(rleaf[0], rleaf[1], rdict)
+                     if ret is not None else None)
+                flow = _Flow(jnp.asarray(False))
+                r2, rs2 = run(st.body, vv, r, rs, live=None, flow=flow)
+                leaves2 = tuple(
+                    (_sc(vv[k].data).astype(dtypes[k]), _sc(vv[k].validity()))
+                    for k in names
+                )
+                rleaf2 = (
+                    (_sc(r2.data).astype(rleaf[0].dtype), _sc(r2.validity()))
+                    if r2 is not None else rleaf
+                )
+                return (it + 1, leaves2, rleaf2,
+                        _sc(jnp.asarray(rs2)), _sc(flow.broken))
+
+            init = (
+                jnp.asarray(0, jnp.int32),
+                tuple((_sc(jnp.asarray(vars[k].data)),
+                       _sc(jnp.asarray(vars[k].validity()))) for k in names),
+                ((_sc(jnp.asarray(ret.data)), _sc(jnp.asarray(ret.validity())))
+                 if ret is not None
+                 else (jnp.zeros((), jnp.float32), jnp.asarray(False))),
+                _sc(jnp.asarray(retset)),
+                jnp.asarray(False),
+            )
+            _, leaves, rleaf, rs, _ = jax.lax.while_loop(
+                cond_fn, body_fn, init)
+            for k, v in unpack(leaves).items():
+                vars[k] = v
+            if ret is not None:
+                ret = S.Value(rleaf[0], rleaf[1], rdict)
+            return ret, rs
+
+        def traced_cursor(st: IR.CursorLoop, vars, ret, retset, live):
+            res = executor.execute(st.plan, params=params, vars=vars)
+            cols = res.table.columns
+            extra = [(v, cols[c].data.dtype) for v, c in st.targets]
+            ret, retset, has_ret = seed_frame(st, vars, ret, retset, extra)
+            names = sorted(vars)
+            dtypes = {k: jnp.asarray(vars[k].data).dtype for k in names}
+            dicts = {k: vars[k].dictionary for k in names}
+            cdicts = {c: col.dictionary for c, col in cols.items()}
+            rdict = ret.dictionary if ret is not None else None
+            base_live = (jnp.asarray(True) if live is None
+                         else _sc(jnp.asarray(live)))
+
+            def unpack(leaves):
+                return {k: S.Value(d, v, dicts[k])
+                        for k, (d, v) in zip(names, leaves)}
+
+            def step(carry, x):
+                leaves, done, rleaf, rs = carry
+                mask_bit, row = x
+                vv = unpack(leaves)
+                live_row = mask_bit & ~done & base_live
+                if has_ret:
+                    live_row = live_row & ~rs
+                for v, c in st.targets:
+                    new = S.Value(row[c][0], row[c][1], cdicts[c])
+                    vv[v] = _merge(live_row, new, vv[v])
+                done2 = done
+                if st.guard is not None:
+                    gv = ev(st.guard, vv)
+                    gok = _sc(gv.data).astype(bool) & _sc(gv.validity())
+                    done2 = done2 | (live_row & ~gok)
+                    live_row = live_row & gok
+                flow = _Flow(jnp.asarray(False))
+                r = (S.Value(rleaf[0], rleaf[1], rdict)
+                     if ret is not None else None)
+                r2, rs2 = run(st.body, vv, r, rs, live=live_row, flow=flow)
+                done2 = done2 | flow.broken
+                leaves2 = tuple(
+                    (_sc(vv[k].data).astype(dtypes[k]), _sc(vv[k].validity()))
+                    for k in names
+                )
+                rleaf2 = (
+                    (_sc(r2.data).astype(rleaf[0].dtype), _sc(r2.validity()))
+                    if r2 is not None else rleaf
+                )
+                return (leaves2, _sc(done2), rleaf2, _sc(jnp.asarray(rs2))), None
+
+            init = (
+                tuple((_sc(jnp.asarray(vars[k].data)),
+                       _sc(jnp.asarray(vars[k].validity()))) for k in names),
+                jnp.asarray(False),
+                ((_sc(jnp.asarray(ret.data)), _sc(jnp.asarray(ret.validity())))
+                 if ret is not None
+                 else (jnp.zeros((), jnp.float32), jnp.asarray(False))),
+                _sc(jnp.asarray(retset)),
+            )
+            xs = (res.mask,
+                  {c: (col.data, col.validity()) for c, col in cols.items()})
+            (leaves, _, rleaf, rs), _ = jax.lax.scan(step, init, xs)
+            for k, v in unpack(leaves).items():
+                vars[k] = v
+            if ret is not None:
+                ret = S.Value(rleaf[0], rleaf[1], rdict)
+            return ret, rs
 
         vars: dict[str, S.Value] = {}
         ret, retset = run(udf.body, vars, None, jnp.asarray(False))
@@ -319,6 +591,54 @@ class Interpreter:
         args = [S.eval_scalar(a, env, ctx) for a in expr.args]
         params = {pname: a for (pname, _), a in zip(udf.params, args)}
         return self.traced_call(udf, params, depth + 1)
+
+
+def _sc(x):
+    """Scalarize a traced value to rank-0 (loop carries must be scalars)."""
+    return jnp.reshape(jnp.asarray(x), ())
+
+
+def _loop_declares(stmts):
+    """(name, dtype) of every Declare reachable in ``stmts``."""
+    for st in stmts:
+        if isinstance(st, IR.Declare):
+            yield st.name, st.dtype
+        elif isinstance(st, IR.IfElse):
+            yield from _loop_declares(st.then_body)
+            yield from _loop_declares(st.else_body)
+        elif isinstance(st, (IR.While, IR.CursorLoop)):
+            yield from _loop_declares(st.body)
+
+
+def _loop_assigned(stmts):
+    """Every variable name written (Assign or FETCH target) in ``stmts``."""
+    for st in stmts:
+        if isinstance(st, IR.Assign):
+            yield st.name
+        elif isinstance(st, IR.IfElse):
+            yield from _loop_assigned(st.then_body)
+            yield from _loop_assigned(st.else_body)
+        elif isinstance(st, (IR.While, IR.CursorLoop)):
+            if isinstance(st, IR.CursorLoop):
+                for v, _ in st.targets:
+                    yield v
+            yield from _loop_assigned(st.body)
+        elif isinstance(st, IR.Fetch):
+            for v, _ in st.targets:
+                yield v
+
+
+def _has_return(stmts) -> bool:
+    for st in stmts:
+        if isinstance(st, IR.Return):
+            return True
+        if isinstance(st, IR.IfElse):
+            if _has_return(st.then_body) or _has_return(st.else_body):
+                return True
+        elif isinstance(st, (IR.While, IR.CursorLoop)):
+            if _has_return(st.body):
+                return True
+    return False
 
 
 def _merge(pred, tv: S.Value, ev: S.Value) -> S.Value:

@@ -2,8 +2,10 @@
 
 Mirrors the paper's supported constructs (§3.4, Table 1):
 DECLARE / SET / SELECT-assign / IF-ELSE (arbitrary nesting) / RETURN
-(single or multiple) / nested UDF calls / EXISTS / ISNULL.  Loops are
-deliberately unsupported (the paper disabled them too, §4.2.1).
+(single or multiple) / nested UDF calls / EXISTS / ISNULL — plus the loop
+forms the paper disabled (§4.2.1): WHILE and cursor loops.  Cursor loops
+go through the Aggify-style rewrite in :mod:`repro.loops`; loops the
+rewrite rejects fall back to the per-row interpreter.
 
 Region construction (§4.1): a statement list splits into a hierarchy of
 *sequential* regions (maximal runs of straight-line statements) and
@@ -54,6 +56,50 @@ class IfElse(Statement):
 @dataclasses.dataclass
 class Return(Statement):
     expr: S.Scalar
+
+
+@dataclasses.dataclass
+class Break(Statement):
+    """BREAK — exits the innermost enclosing loop."""
+
+
+@dataclasses.dataclass
+class While(Statement):
+    """WHILE pred BEGIN body END — a general (non-cursor) loop.
+
+    Never algebrizable (no driving relation): FROID falls back to the
+    interpreter; the scan-mode interpreter lowers it to ``lax.while_loop``."""
+
+    pred: S.Scalar
+    body: list[Statement]
+
+
+@dataclasses.dataclass
+class Fetch(Statement):
+    """FETCH NEXT FROM cursor INTO @a, @b — a frontend marker.
+
+    The parser folds the priming FETCH plus the trailing in-loop FETCH into
+    the enclosing :class:`CursorLoop`; a Fetch that survives into a UDF body
+    (fetch outside a recognised loop shape) is rejected downstream."""
+
+    cursor: str
+    targets: list[tuple[str, str]]  # (variable, cursor column)
+
+
+@dataclasses.dataclass
+class CursorLoop(Statement):
+    """A cursor-driven loop: iterate ``plan``'s rows in order, binding each
+    row's columns to ``targets`` variables, then running ``body``.
+
+    ``guard`` is an optional extra termination conjunct (beyond the implicit
+    ``@@fetch_status = 0``): per row the semantics are *bind fetch vars,
+    evaluate guard, stop the loop if not true, else run body*."""
+
+    cursor: str
+    plan: "object"  # R.RelNode — typed loosely to keep ir free of relalg
+    targets: list[tuple[str, str]]  # (variable, cursor column)
+    body: list[Statement]
+    guard: S.Scalar | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -134,20 +180,7 @@ class UdfDef:
 
     # -- analyses ------------------------------------------------------------
     def all_exprs(self):
-        def rec(stmts):
-            for st in stmts:
-                if isinstance(st, Declare) and st.init is not None:
-                    yield st.init
-                elif isinstance(st, Assign):
-                    yield st.expr
-                elif isinstance(st, Return):
-                    yield st.expr
-                elif isinstance(st, IfElse):
-                    yield st.pred
-                    yield from rec(st.then_body)
-                    yield from rec(st.else_body)
-
-        yield from rec(self.body)
+        yield from walk_stmt_exprs(self.body)
 
     def is_deterministic(self) -> bool:
         return all(S.is_deterministic(e) for e in self.all_exprs())
@@ -167,6 +200,36 @@ class UdfDef:
                 n += 1
                 if isinstance(st, IfElse):
                     n += count(st.then_body) + count(st.else_body)
+                elif isinstance(st, (While, CursorLoop)):
+                    n += count(st.body)
             return n
 
         return count(self.body)
+
+
+def walk_stmt_exprs(stmts: Sequence[Statement]):
+    """Every scalar expression reachable from ``stmts``, including those
+    embedded in cursor-defining plans (so determinism / called-UDF analyses
+    see through loops)."""
+    from repro.core import relalg as R
+
+    for st in stmts:
+        if isinstance(st, Declare) and st.init is not None:
+            yield st.init
+        elif isinstance(st, Assign):
+            yield st.expr
+        elif isinstance(st, Return):
+            yield st.expr
+        elif isinstance(st, IfElse):
+            yield st.pred
+            yield from walk_stmt_exprs(st.then_body)
+            yield from walk_stmt_exprs(st.else_body)
+        elif isinstance(st, While):
+            yield st.pred
+            yield from walk_stmt_exprs(st.body)
+        elif isinstance(st, CursorLoop):
+            if st.guard is not None:
+                yield st.guard
+            for n in R.walk_plan_deep(st.plan):
+                yield from n.exprs()
+            yield from walk_stmt_exprs(st.body)

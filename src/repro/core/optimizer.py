@@ -65,6 +65,8 @@ def _rewrite_exprs(node: R.RelNode, fn) -> R.RelNode:
                                   node.dense_range)
     if isinstance(node, R.Apply) and node.passthrough is not None:
         return R.Apply(node.left, node.right, node.kind, fn(node.passthrough))
+    if hasattr(node, "map_exprs"):  # LoopScan & friends
+        return node.map_exprs(fn)
     return node
 
 
@@ -967,6 +969,10 @@ def explain(plan: R.RelNode, indent: int = 0) -> str:
         out.append(explain(n.child, indent + 1))
     elif isinstance(n, R.Sort):
         out.append(f"{pad}Sort {n.keys} limit={n.limit}")
+        out.append(explain(n.child, indent + 1))
+    elif isinstance(n, R.LoopScan):
+        out.append(f"{pad}LoopScan[{n.kind}] outputs={n.outputs} "
+                   f"carry={list(n.carry)} steps={len(n.steps)}")
         out.append(explain(n.child, indent + 1))
     else:
         out.append(f"{pad}{type(n).__name__}")

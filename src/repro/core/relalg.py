@@ -252,6 +252,85 @@ class Sort(RelNode):
         return f"Sort({self.child!r}, {self.keys}, limit={self.limit})"
 
 
+class LoopScan(RelNode):
+    """A rewritten cursor loop (Aggify): fold the child relation's rows, in
+    order, into a single-row output — the relational operator the loop
+    rewrite pass (:mod:`repro.loops.rewrite`) produces.
+
+    ``carry`` maps state names to their loop-entry init expressions
+    (evaluated once per execution, referencing only Outer/Param/Const).
+    Two lowerings, chosen by ``kind``:
+
+    * ``"scan"``: ``steps`` is an ordered list of ``(name, expr)`` updates
+      evaluated per row under ``lax.scan``; exprs reference carried state
+      via ``Var(name)`` and the current cursor row via ``ColRef(col)``.
+      The reserved carried flag ``__done`` (sticky loop exit: BREAK or a
+      failed guard) and the per-row ``__live`` pseudo-variable implement
+      predicated early exit.
+    * ``"reduce"``: the fold is commutative — ``reductions`` maps each
+      output to ``(mode, op_or_col, term, pred)``: ``("fold", "+"|"*",
+      term, pred|None)`` lowers to a masked ``sum``/``prod`` over the
+      relation, ``("last", col, None, None)`` to a last-active-row gather
+      (the final fetch-variable value).
+
+    Output: one row, columns ``outputs`` (the loop's live-out variables).
+    Attribute order keeps the child first — fingerprinting (``_norm``) and
+    rewrites rely on children-before-exprs ordering."""
+
+    def __init__(
+        self,
+        child: RelNode,
+        carry: dict[str, S.Scalar],
+        steps: Sequence[tuple[str, S.Scalar]],
+        kind: str = "scan",
+        reductions: dict[str, tuple] | None = None,
+        outputs: Sequence[str] = (),
+    ):
+        super().__init__()
+        assert kind in ("scan", "reduce"), kind
+        self.child = child
+        self.carry = {k: S.wrap(v) for k, v in carry.items()}
+        self.steps = [(n, S.wrap(e)) for n, e in steps]
+        self.kind = kind
+        self.reductions = dict(reductions or {})
+        self.outputs = list(outputs)
+
+    def children(self):
+        return [self.child]
+
+    def with_children(self, kids):
+        return LoopScan(kids[0], self.carry, self.steps, self.kind,
+                        self.reductions, self.outputs)
+
+    def exprs(self):
+        out = list(self.carry.values()) + [e for _, e in self.steps]
+        for mode, _, term, pred in self.reductions.values():
+            if term is not None:
+                out.append(term)
+            if pred is not None:
+                out.append(pred)
+        return out
+
+    def map_exprs(self, fn) -> "LoopScan":
+        """Rebuild with every scalar expression passed through ``fn`` — the
+        generic hook plan-rewriters (binder substitution, optimizer
+        expression passes) use instead of per-node cases."""
+        carry = {k: fn(v) for k, v in self.carry.items()}
+        steps = [(n, fn(e)) for n, e in self.steps]
+        reds = {
+            k: (mode, op,
+                None if term is None else fn(term),
+                None if pred is None else fn(pred))
+            for k, (mode, op, term, pred) in self.reductions.items()
+        }
+        return LoopScan(self.child, carry, steps, self.kind, reds,
+                        self.outputs)
+
+    def __repr__(self):
+        return (f"LoopScan[{self.kind}]({self.child!r}, "
+                f"outputs={self.outputs})")
+
+
 # ---------------------------------------------------------------------------
 # Traversal / rewrite helpers
 # ---------------------------------------------------------------------------
@@ -351,4 +430,6 @@ def output_columns(node: RelNode, catalog) -> list[str]:
         return list(node.keys) + list(node.aggs.keys())
     if isinstance(node, Sort):
         return output_columns(node.child, catalog)
+    if isinstance(node, LoopScan):
+        return list(node.outputs)
     raise TypeError(type(node))

@@ -283,6 +283,11 @@ class Cast(Scalar):
     def with_children(self, kids):
         return Cast(kids[0], self.dtype)
 
+    def __repr__(self):
+        name = getattr(self.dtype, "__name__", None) or getattr(
+            self.dtype, "name", str(self.dtype))
+        return f"Cast({self.expr!r} as {name})"
+
 
 class Func(Scalar):
     """Intrinsic function call (deterministic unless listed otherwise)."""

@@ -98,7 +98,35 @@ def plan_fingerprint(node: R.RelNode) -> tuple:
     return _norm(node)
 
 
-def parametric_fingerprint(node: R.RelNode) -> tuple[tuple, tuple]:
+def liftable_const(v) -> bool:
+    """True when a :class:`~repro.core.scalar.Const` may be *lifted* into a
+    template hole: re-injecting its value as a parameter binding reproduces
+    the constant's evaluation exactly.  int consts always evaluate int32
+    (matching ``_param_value``); float consts match only at the default
+    float32 dtype.  bool/str/NULL consts are structural (predication flags,
+    typed nulls, dictionary literals) and never lift."""
+    if not isinstance(v, S.Const):
+        return False
+    if isinstance(v.value, bool) or v.value is None:
+        return False
+    if isinstance(v.value, (int, np.integer)):
+        return True
+    if isinstance(v.value, (float, np.floating)):
+        return v.dtype is None or v.dtype == jnp.float32
+    return False
+
+
+def const_hole_key(value) -> tuple:
+    """Dtype-aware hole-numbering key of a liftable const's value (``5``
+    and ``5.0`` hash equal as plain dict keys but evaluate int32 vs
+    float32, so they must stay distinct holes)."""
+    if isinstance(value, (int, np.integer)):
+        return ("int", int(value))
+    return ("float", float(value))
+
+
+def parametric_fingerprint(node: R.RelNode,
+                           lift_consts: bool = False) -> tuple[tuple, tuple]:
     """``(fingerprint, holes)`` with parameter slots canonicalized.
 
     The fingerprint is :func:`plan_fingerprint` with every ``Param``/``Outer``
@@ -110,26 +138,40 @@ def parametric_fingerprint(node: R.RelNode) -> tuple[tuple, tuple]:
     Param(y)`` (``hole0 + hole1``); param and outer references are distinct
     hole kinds and never unify with each other.
 
-    ``holes`` is the tuple of ``(kind, actual_name)`` in canonical order —
-    the subtree's slot signature, which callers combine with the canonical
-    hole spelling (``merge.hole_name``) to build per-occurrence binding
-    maps.  A hole-free subtree fingerprints identically to its plain
-    :func:`plan_fingerprint`."""
-    holes: list[tuple[str, str]] = []
-    index: dict[tuple[str, str], int] = {}
+    With ``lift_consts=True``, :func:`liftable_const` constants additionally
+    become holes, and param/const holes share one hole tag — ``a < 5``
+    fingerprints equal to ``a < Param(x)``, the const-vs-param unification
+    key (numbering stays per-key: ``5 + 5`` is ``hole0 + hole0`` like
+    ``Param(a) + Param(a)``).  The lifted fingerprint lives in its own
+    namespace (tags differ from the plain form), so callers never mix the
+    two key spaces.
+
+    ``holes`` is the tuple of ``(kind, actual_name_or_value)`` in canonical
+    order — the subtree's slot signature, which callers combine with the
+    canonical hole spelling (``merge.hole_name``) to build per-occurrence
+    binding maps.  A hole-free subtree fingerprints identically to its
+    plain :func:`plan_fingerprint`."""
+    holes: list[tuple[str, Any]] = []
+    index: dict[tuple[str, Any], int] = {}
 
     def special(v):
         if isinstance(v, S.Param):
             kind, name = "param", v.name
         elif isinstance(v, S.Outer):
             kind, name = "outer", v.name
+        elif lift_consts and liftable_const(v):
+            # dtype-aware key: int 5 and float 5.0 compare equal as dict
+            # keys, but evaluate at different dtypes — they must number as
+            # distinct holes within one subtree
+            kind, name = "const", const_hole_key(v.value)
         else:
             return None
         k = (kind, name)
         if k not in index:
             index[k] = len(holes)
             holes.append(k)
-        return ("hole", kind, index[k])
+        tag = "lifted" if (lift_consts and kind != "outer") else kind
+        return ("hole", tag, index[k])
 
     return _norm(node, special), tuple(holes)
 
@@ -468,6 +510,17 @@ def _plan_template_groups(merged, members, params_by_member):
     ``template_token`` — ``((fp, sig, d), ...)`` in group order — is the
     template identity the fused cache key incorporates (members arrive
     canonically sorted, so the token is arrival-order independent)."""
+    from repro.fuse.merge import CONST_BIND
+
+    def hole_value(bind_h, pdict):
+        """``(supplied, value)`` of one hole: const-bind markers carry the
+        literal value; param binds look up the ticket's params."""
+        if isinstance(bind_h, tuple) and bind_h[0] == CONST_BIND:
+            return True, bind_h[1]
+        if bind_h not in pdict:
+            return False, None
+        return True, pdict[bind_h]
+
     by_fp = {t.fp: t for t in merged.templates}
     groups: list[_PoolGroup] = []
     gindex: dict[tuple, int] = {}
@@ -476,7 +529,11 @@ def _plan_template_groups(merged, members, params_by_member):
     for m, plist in zip(members, params_by_member):
         tmap: dict[int, int] = {}
         smap: dict[int, list] = {}
-        if m.sig and plist:
+        # parameter-free members still pool occurrences whose holes are all
+        # const-bound (lifted templates) — their slot rides as an unbatched
+        # reserved parameter
+        if plist:
+            pdict0 = plist[0] or {}
             for n in _maximal_cse_occurrences(merged, m.plan):
                 fp = merged.template_ids[n.node_id]
                 bind = merged.template_binds[n.node_id]
@@ -484,24 +541,31 @@ def _plan_template_groups(merged, members, params_by_member):
                 # an occurrence whose actual parameters are not all
                 # supplied cannot be pooled; the member trace will raise
                 # (or not reach it) exactly as the per-statement path would
-                if any(bind[h] not in plist[0] for h in tmpl.holes):
+                vals0 = {}
+                for h in tmpl.holes:
+                    ok, v = hole_value(bind[h], pdict0)
+                    if not ok:
+                        vals0 = None
+                        break
+                    vals0[h] = v
+                if vals0 is None:
                     continue
-                sig = param_signature({h: plist[0][bind[h]]
-                                       for h in tmpl.holes})
+                sig = param_signature(vals0)
                 gk = (fp, sig)
                 gi = gindex.get(gk)
                 if gi is None:
                     gi = gindex[gk] = len(groups)
                     groups.append(_PoolGroup(
                         fp, sig, tmpl.node, tmpl.holes,
-                        {h: _param_value(plist[0][bind[h]]).dictionary
+                        {h: _param_value(vals0[h]).dictionary
                          for h in tmpl.holes},
                         [], {},
                     ))
                 g = groups[gi]
                 slots = []
                 for p in plist:
-                    b = {h: p[bind[h]] for h in tmpl.holes}
+                    pd = p or {}
+                    b = {h: hole_value(bind[h], pd)[1] for h in tmpl.holes}
                     key = tuple(_binding_key(b[h]) for h in tmpl.holes)
                     slot = g.index.get(key)
                     if slot is None:
@@ -1163,8 +1227,15 @@ class Session:
                         jnp.ones((m.bucket,), bool),
                     )
                 pargs_tuple.append(pargs)
-            else:  # parameter-free member: unbatched, no stacked args
-                pargs_tuple.append({})
+            else:
+                # parameter-free member: unbatched, no stacked args — but
+                # const-bound template occurrences (lifted templates) still
+                # gather their pool slot through the reserved parameter
+                pargs = {}
+                for nid, slots in smap.items():
+                    pargs[slot_param(nid)] = (
+                        jnp.asarray(slots[0], jnp.int32), jnp.asarray(True))
+                pargs_tuple.append(pargs)
         targs_tuple = tuple(_stack_params(g.bindings) for g in groups)
         outs = entry.fn(tuple(pargs_tuple), targs_tuple, env_token[0])
         t_dispatch = time.perf_counter() - t0

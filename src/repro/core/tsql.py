@@ -17,20 +17,56 @@ Expressions: numbers, 'strings', @vars, identifiers (columns), + - * /,
 comparisons (= <> < <= > >=), AND/OR/NOT, parentheses, CASE WHEN ... THEN
 ... ELSE ... END, and function calls (intrinsics).  Types: INT, FLOAT,
 BIT, DATE, VARCHAR/CHAR(n).
+
+Loops (the Aggify surface — see :mod:`repro.loops`)::
+
+    WHILE (pred) BEGIN ... END                       [BREAK inside]
+    DECLARE c CURSOR FOR SELECT col, ... FROM t [WHERE pred];
+    OPEN c;
+    FETCH NEXT FROM c INTO @a, @b;
+    WHILE @@fetch_status = 0 [AND guard] BEGIN
+        ...body...
+        FETCH NEXT FROM c INTO @a, @b;
+    END
+    CLOSE c; DEALLOCATE c;
+
+The priming FETCH / trailing FETCH pair is folded into one
+:class:`repro.core.ir.CursorLoop`; anything off that shape raises
+:class:`UnsupportedConstructError` with the offending line/column.
 """
 from __future__ import annotations
 
 import re
 
 from repro.core import frontend as F
+from repro.core import ir as IR
 from repro.core import relalg as R
 from repro.core import scalar as S
 from repro.core.ir import UdfDef
 
+#: the parsed name of the T-SQL ``@@fetch_status`` builtin (``@`` stripped
+#: like every other variable token)
+FETCH_STATUS = "@fetch_status"
+
 _TOKEN = re.compile(
-    r"\s*(?:(?P<num>\d+\.\d+|\d+)|(?P<str>'[^']*')|(?P<var>@\w+)"
+    r"\s*(?:(?P<num>\d+\.\d+|\d+)|(?P<str>'[^']*')|(?P<var>@@?\w+)"
     r"|(?P<id>[A-Za-z_][\w.]*)|(?P<op><=|>=|<>|!=|[=<>+\-*/(),;]))"
 )
+
+
+class UnsupportedConstructError(SyntaxError):
+    """A construct outside the supported T-SQL subset, with location.
+
+    Carries ``construct`` (short name of the offending construct),
+    ``line`` and ``col`` (1-based) so frontends can point at the source."""
+
+    def __init__(self, construct: str, detail: str, line: int = 0, col: int = 0):
+        self.construct = construct
+        self.line = line
+        self.col = col
+        super().__init__(
+            f"unsupported construct {construct!r} at line {line}, col {col}: "
+            f"{detail}")
 
 _TYPES = {
     "int": "int32", "bigint": "int32", "bit": "bool", "float": "float32",
@@ -43,29 +79,45 @@ _AGGS = {"sum": F.sum_, "count": F.count_, "min": F.min_, "max": F.max_,
          "avg": F.avg_}
 
 
+def _line_col(src: str, offset: int) -> tuple[int, int]:
+    line = src.count("\n", 0, offset) + 1
+    col = offset - src.rfind("\n", 0, offset)
+    return line, col
+
+
 def _tokenize(src: str):
-    out, pos = [], 0
-    src = re.sub(r"--[^\n]*", "", src)
+    """Returns (tokens, positions): parallel lists, positions[i] = (line,
+    col) of tokens[i].  Comments are blanked (not stripped) so offsets stay
+    true to the original source."""
+    out, positions, pos = [], [], 0
+    src = re.sub(r"--[^\n]*", lambda m: " " * len(m.group(0)), src)
     while pos < len(src):
         m = _TOKEN.match(src, pos)
         if not m:
             if src[pos:].strip() == "":
                 break
-            raise SyntaxError(f"bad token at: {src[pos:pos+40]!r}")
+            line, col = _line_col(src, pos + len(src[pos:]) - len(src[pos:].lstrip()))
+            raise UnsupportedConstructError(
+                "token", f"cannot tokenize {src[pos:pos+40].strip()!r}",
+                line, col)
         pos = m.end()
         for kind in ("num", "str", "var", "id", "op"):
             v = m.group(kind)
             if v is not None:
                 out.append((kind, v.lower() if kind == "id" else v))
+                positions.append(_line_col(src, m.start(kind)))
                 break
     out.append(("eof", ""))
-    return out
+    positions.append(_line_col(src, len(src)))
+    return out, positions
 
 
 class _Parser:
-    def __init__(self, tokens):
+    def __init__(self, tokens, positions=None):
         self.toks = tokens
+        self.positions = positions or [(0, 0)] * len(tokens)
         self.i = 0
+        self._cursors: dict[str, tuple[R.RelNode, list[str]]] = {}
 
     def peek(self, k=0):
         return self.toks[self.i + k]
@@ -75,12 +127,20 @@ class _Parser:
         self.i += 1
         return t
 
+    def err(self, construct: str, detail: str, at: int | None = None):
+        """Raise an UnsupportedConstructError at token ``at`` (default: the
+        last consumed token)."""
+        idx = self.i - 1 if at is None else at
+        idx = max(0, min(idx, len(self.positions) - 1))
+        line, col = self.positions[idx]
+        raise UnsupportedConstructError(construct, detail, line, col)
+
     def expect(self, value=None, kind=None):
         k, v = self.next()
         if value is not None and v.lower() != value.lower():
-            raise SyntaxError(f"expected {value!r}, got {v!r}")
+            self.err("syntax", f"expected {value!r}, got {v!r}")
         if kind is not None and k != kind:
-            raise SyntaxError(f"expected {kind}, got {k}:{v}")
+            self.err("syntax", f"expected a {kind} token, got {k}:{v!r}")
         return v
 
     def accept(self, value):
@@ -96,7 +156,7 @@ class _Parser:
             while not self.accept(")"):
                 self.next()
         if name not in _TYPES:
-            raise SyntaxError(f"unsupported type {name!r}")
+            self.err("type", f"type {name!r} is outside the supported subset")
         return _TYPES[name]
 
     # ----------------------------------------------------------- expressions
@@ -162,7 +222,7 @@ class _Parser:
             return float(v) if "." in v else int(v)
         if k == "str":
             return v.strip("'")
-        raise SyntaxError(f"expected literal, got {v!r}")
+        self.err("literal", f"expected a literal, got {v!r}")
 
     def _add(self):
         left = self._mul()
@@ -220,7 +280,7 @@ class _Parser:
                     return S.UdfCall(base, args)
                 return S.Func(base, args)
             return S.ColRef(name)
-        raise SyntaxError(f"unexpected {v!r}")
+        self.err("expression", f"unexpected token {v!r}")
 
     def _case(self) -> S.Scalar:
         whens = []
@@ -245,6 +305,9 @@ class _Parser:
         word = v.lower()
         if word == "declare":
             self.next()
+            if self.peek()[0] == "id":  # DECLARE c CURSOR FOR ...
+                self._parse_cursor_decl()
+                return
             name = self.expect(kind="var")[1:]
             dtype = self.parse_type()
             init = None
@@ -290,6 +353,28 @@ class _Parser:
                         self.parse_block(u)
                     else:
                         self.parse_statement(u)
+        elif word == "while":
+            self.next()
+            at = self.i
+            pred = self.parse_expr()
+            if self._uses_fetch_status(pred):
+                self._parse_cursor_while(u, pred, at)
+            else:
+                with u.while_(pred):
+                    self._parse_body(u)
+        elif word == "break":
+            self.next()
+            self.accept(";")
+            u.break_()
+        elif word == "fetch":
+            self._parse_fetch(u)
+        elif word in ("open", "close", "deallocate"):
+            # cursor lifecycle is implicit in the rewrite — consume as no-ops
+            self.next()
+            cname = self.expect(kind="id")
+            if cname not in self._cursors:
+                self.err("cursor", f"unknown cursor {cname!r}")
+            self.accept(";")
         elif word == "return":
             self.next()
             u.return_(self.parse_expr())
@@ -297,7 +382,143 @@ class _Parser:
         elif v == ";":
             self.next()
         else:
-            raise SyntaxError(f"unsupported statement at {v!r}")
+            self.err("statement",
+                     f"statement starting at {v!r} is outside the supported "
+                     "subset", at=self.i)
+
+    def _parse_body(self, u: F.UdfBuilder):
+        if self.peek()[1].lower() == "begin":
+            self.parse_block(u)
+        else:
+            self.parse_statement(u)
+
+    # ------------------------------------------------------------- cursors
+    def _parse_cursor_decl(self):
+        name = self.expect(kind="id")
+        self.expect("cursor")
+        self.expect("for")
+        self.expect("select")
+        cols = []
+        while True:
+            if self.peek()[0] != "id":
+                self.err("cursor-select",
+                         "cursor SELECT list must be plain column names",
+                         at=self.i)
+            cols.append(self.next()[1])
+            if not self.accept(","):
+                break
+        if self.peek()[1].lower() != "from":
+            self.err("cursor-select",
+                     "cursor SELECT list must be plain column names",
+                     at=self.i)
+        self.expect("from")
+        table = self.expect(kind="id").split(".")[-1]
+        plan: R.RelNode = R.Scan(table)
+        if self.accept("where"):
+            plan = R.Filter(plan, self.parse_expr())
+        self.accept(";")
+        self._cursors[name] = (plan, cols)
+
+    def _parse_fetch(self, u: F.UdfBuilder):
+        self.next()  # fetch
+        self.expect("next")
+        self.expect("from")
+        cname = self.expect(kind="id")
+        if cname not in self._cursors:
+            self.err("fetch", f"unknown cursor {cname!r}")
+        self.expect("into")
+        tvars = [self.expect(kind="var")[1:]]
+        while self.accept(","):
+            tvars.append(self.expect(kind="var")[1:])
+        self.accept(";")
+        _, cols = self._cursors[cname]
+        if len(tvars) != len(cols):
+            self.err("fetch", f"FETCH INTO binds {len(tvars)} variables but "
+                              f"cursor {cname!r} selects {len(cols)} columns")
+        u.fetch_(cname, list(zip(tvars, cols)))
+
+    @staticmethod
+    def _uses_fetch_status(expr: S.Scalar) -> bool:
+        return any(isinstance(n, S.Var) and n.name == FETCH_STATUS
+                   for n in S.walk(expr))
+
+    def _parse_cursor_while(self, u: F.UdfBuilder, pred: S.Scalar, at: int):
+        """WHILE @@fetch_status = 0 [AND guard] over a primed cursor: fold
+        the priming FETCH + trailing FETCH + body into one CursorLoop."""
+
+        def conjuncts(e):
+            if isinstance(e, S.BoolOp) and e.op == "and":
+                out = []
+                for a in e.args:
+                    out.extend(conjuncts(a))
+                return out
+            return [e]
+
+        def is_status_check(c):
+            if not (isinstance(c, S.Cmp) and c.op == "=="):
+                return False
+            sides = (c.l, c.r)
+            return any(isinstance(s, S.Var) and s.name == FETCH_STATUS
+                       for s in sides) and any(
+                isinstance(s, S.Const) and s.value == 0 for s in sides)
+
+        rest, found = [], False
+        for c in conjuncts(pred):
+            if is_status_check(c):
+                found = True
+            elif self._uses_fetch_status(c):
+                self.err("fetch-status",
+                         "@@fetch_status may only appear as the conjunct "
+                         "@@fetch_status = 0", at=at)
+            else:
+                rest.append(c)
+        if not found:
+            self.err("fetch-status",
+                     "@@fetch_status must appear as the conjunct "
+                     "@@fetch_status = 0", at=at)
+        guard = None
+        for c in rest:
+            guard = c if guard is None else S.BoolOp("and", [guard, c])
+
+        stmts = u._stack[-1]
+        if not stmts or not isinstance(stmts[-1], IR.Fetch):
+            self.err("cursor-while",
+                     "WHILE @@fetch_status = 0 requires an immediately "
+                     "preceding FETCH NEXT (the priming fetch)", at=at)
+        prime = stmts.pop()
+
+        with u._capture() as body:
+            self._parse_body(u)
+        if not body or not isinstance(body[-1], IR.Fetch):
+            self.err("cursor-while",
+                     "cursor WHILE body must end with FETCH NEXT", at=at)
+        trailing = body.pop()
+        if trailing.cursor != prime.cursor or trailing.targets != prime.targets:
+            self.err("cursor-while",
+                     "trailing FETCH NEXT must match the priming fetch "
+                     "(same cursor, same INTO variables)", at=at)
+
+        def has_fetch(stmts):
+            for st in stmts:
+                if isinstance(st, IR.Fetch):
+                    return True
+                if isinstance(st, IR.IfElse):
+                    if has_fetch(st.then_body) or has_fetch(st.else_body):
+                        return True
+                if isinstance(st, (IR.While, IR.CursorLoop)):
+                    if has_fetch(st.body):
+                        return True
+            return False
+
+        if has_fetch(body):
+            self.err("fetch",
+                     "FETCH NEXT is only supported as the final statement "
+                     "of a cursor WHILE body", at=at)
+
+        plan, _ = self._cursors[prime.cursor]
+        u._stack[-1].append(
+            IR.CursorLoop(prime.cursor, plan, prime.targets, body, guard))
+        u._last_if[-1] = None
 
     def _as_agg(self, expr: S.Scalar):
         if isinstance(expr, S.Func) and expr.name in _AGGS:
@@ -313,7 +534,7 @@ def parse_udf(src: str) -> UdfDef:
 
     In the UDF body, bare identifiers inside FROM/WHERE are table columns;
     @names are variables/parameters — matching T-SQL scoping."""
-    p = _Parser(_tokenize(src))
+    p = _Parser(*_tokenize(src))
     p.expect("create")
     p.expect("function")
     name = p.expect(kind="id").split(".")[-1]

@@ -30,11 +30,13 @@ from repro.fuse.analysis import (
     shareable_fingerprints,
 )
 from repro.fuse.merge import (
+    CONST_BIND,
     FusedPlan,
     SharedTemplate,
     hole_name,
     merge_plans,
     plan_is_pure,
+    rewrite_lifted,
     rewrite_params,
     slot_param,
     subtree_is_constant,
@@ -43,8 +45,10 @@ from repro.fuse.merge import (
 from repro.fuse.program import FUSE_PAD, SharedScanExecutor, build_fused_raw
 
 __all__ = [
+    "CONST_BIND",
     "FusedPlan",
     "FUSE_PAD",
+    "rewrite_lifted",
     "SharedScanExecutor",
     "SharedTemplate",
     "build_fused_raw",

@@ -19,7 +19,12 @@ Three sharing tiers, all keyed by canonical structural fingerprints:
   template once per **distinct binding** of its holes across all tickets of
   all members (a binding → pool-slot map, built host-side in
   ``Session._run_fused``), and each member's trace answers its occurrence
-  by gathering its ticket's slot.
+  by gathering its ticket's slot.  Const-vs-param unification rides the
+  same tier: when a *lifted* fingerprint group (liftable literal constants
+  also canonicalized to holes) mixes a param-shaped and a const-shaped
+  occurrence, the whole group promotes to one lifted template and ``a < 5``
+  joins the ``a < Param(x)`` pool as one more distinct binding — when a
+  ticket binds ``x = 5`` they dedup to a single evaluation.
 * **Correlated templates** — subtrees whose only extra references are
   ``Outer`` slots (correlated-subquery bodies differing in their outer
   binding) unify through the same template path: one canonical identity in
@@ -31,8 +36,7 @@ Three sharing tiers, all keyed by canonical structural fingerprints:
 
 The output is a :class:`FusedPlan`; ``explain()`` renders which subtrees
 were shared and under which template.  Still out of scope (ROADMAP):
-const-vs-param unification (``a < 5`` never unifies with ``a < Param(x)``)
-and binding-pooled evaluation of templates nested inside other templates.
+binding-pooled evaluation of templates nested inside other templates.
 """
 from __future__ import annotations
 
@@ -42,14 +46,25 @@ from repro.core import optimizer as O
 from repro.core import relalg as R
 from repro.core import scalar as S
 from repro.core.optimizer import _rewrite_exprs
-from repro.core.session import parametric_fingerprint, plan_fingerprint
+from repro.core.session import (
+    const_hole_key,
+    liftable_const,
+    parametric_fingerprint,
+    plan_fingerprint,
+)
 
 #: every relalg node the executor can run is side-effect free; anything
-#: else (a future effectful node, a foreign plan object) blocks fusion
+#: else (a future effectful node, a foreign plan object) blocks fusion.
+#: LoopScan qualifies: its child scan, carry inits, and step/reduction
+#: expressions are all pure (the loop rewrite pass rejects everything else)
 PURE_NODES = (
     R.Scan, R.ConstantScan, R.Compute, R.Project, R.Filter,
-    R.Join, R.Apply, R.GroupAgg, R.Sort,
+    R.Join, R.Apply, R.GroupAgg, R.Sort, R.LoopScan,
 )
+
+#: template_binds marker for a hole bound by a lifted literal constant
+#: rather than an actual parameter name: ``(CONST_BIND, value)``
+CONST_BIND = "__const__"
 
 #: canonical spelling of template hole ``i`` — the parameter name the
 #: canonical template subtree is evaluated under in the binding pool
@@ -139,6 +154,52 @@ def rewrite_params(plan: R.RelNode, mapping: dict[str, str]) -> R.RelNode:
     return R.transform_plan(plan, fix_node)
 
 
+def rewrite_lifted(plan: R.RelNode, holes: tuple) -> R.RelNode:
+    """Rewrite one occurrence into the canonical *lifted*-template subtree:
+    ``Param`` references **and** liftable literal constants both become
+    canonical hole ``Param``s, per the occurrence's lifted hole signature
+    (``(kind, name_or_key)`` tuples from ``parametric_fingerprint(...,
+    lift_consts=True)``)."""
+    pmap: dict[str, str] = {}
+    cmap: dict[tuple, str] = {}
+    for i, (kind, key) in enumerate(holes):
+        if kind == "param":
+            pmap[key] = hole_name(i)
+        else:
+            cmap[key] = hole_name(i)
+
+    def fix_scalar(x):
+        if isinstance(x, S.Param) and x.name in pmap:
+            return S.Param(pmap[x.name])
+        if liftable_const(x):
+            h = cmap.get(const_hole_key(x.value))
+            if h is not None:
+                return S.Param(h)
+        if isinstance(x, S.ScalarSubquery):
+            p2 = rewrite_lifted(x.plan, holes)
+            if p2 is not x.plan:
+                return S.ScalarSubquery(p2, x.column, x.agg_default)
+        if isinstance(x, S.Exists):
+            p2 = rewrite_lifted(x.plan, holes)
+            if p2 is not x.plan:
+                return S.Exists(p2, x.negated)
+        return None
+
+    def fix_node(n):
+        changed = False
+
+        def fe(e):
+            nonlocal changed
+            e2 = S.transform(e, fix_scalar)
+            changed = changed or (e2 is not e)
+            return e2
+
+        n2 = _rewrite_exprs(n, fe)
+        return n2 if changed else None
+
+    return R.transform_plan(plan, fix_node)
+
+
 @dataclasses.dataclass
 class SharedTemplate:
     """One parameter-unified shared subtree (pool-eligible: param holes
@@ -189,10 +250,13 @@ class FusedPlan:
         out.append(f"parameter-unified templates ({len(self.templates)}, "
                    "evaluate once per distinct binding):")
         for i, t in enumerate(self.templates):
+            # key=repr: const-bind markers are tuples, param binds are
+            # strings — not mutually comparable
             binds = sorted(
-                tuple(sorted(b.items()))
-                for nid, b in self.template_binds.items()
-                if self.template_ids[nid] == t.fp
+                (tuple(sorted(b.items()))
+                 for nid, b in self.template_binds.items()
+                 if self.template_ids[nid] == t.fp),
+                key=repr,
             )
             out.append(f"  [T{i}] holes={list(t.holes)} x{t.refs} refs; "
                        f"bindings {binds}")
@@ -231,8 +295,11 @@ def merge_plans(plans: list) -> FusedPlan:
     inside its one shared evaluation, so only maximal marks count toward
     ``cse_shared_nodes``)."""
     info: dict[int, tuple | None] = {}  # node_id -> (shape, fp, holes)|None
+    linfo: dict[int, tuple] = {}  # node_id -> (lifted fp, lifted holes)
     occurrences: dict[tuple, int] = {}
-    canonical: dict[tuple, R.RelNode] = {}
+    loccur: dict[tuple, int] = {}  # lifted fp -> occurrence count
+    lshapes: dict[tuple, set] = {}  # lifted fp -> shapes seen in the group
+    canonical: dict[tuple, R.RelNode] = {}  # plain AND lifted fps (disjoint)
     appearance: dict[tuple, int] = {}  # fp -> first-appearance index
 
     for plan in plans:
@@ -245,14 +312,34 @@ def merge_plans(plans: list) -> FusedPlan:
                 else:
                     fp, holes = parametric_fingerprint(n)
                     ent = (shape, fp, holes)
+                    if shape in ("param", "const"):
+                        lfp, lholes = parametric_fingerprint(
+                            n, lift_consts=True)
+                        if lholes:
+                            linfo[n.node_id] = (lfp, lholes)
                 info[n.node_id] = ent
             if ent is not None:
                 fp = ent[1]
                 occurrences[fp] = occurrences.get(fp, 0) + 1
                 canonical.setdefault(fp, n)
                 appearance.setdefault(fp, len(appearance))
+                lent = linfo.get(n.node_id)
+                if lent is not None:
+                    lfp = lent[0]
+                    loccur[lfp] = loccur.get(lfp, 0) + 1
+                    lshapes.setdefault(lfp, set()).add(ent[0])
+                    canonical.setdefault(lfp, n)
+                    appearance.setdefault(lfp, len(appearance))
 
     shared_fps = {fp for fp, c in occurrences.items() if c >= 2}
+    # const-vs-param promotion: a lifted group earns a template only when
+    # it actually unifies across the const/param divide — all-param groups
+    # are already plain-unified, and all-const groups are better served by
+    # the constant pool (per-value, no binding machinery)
+    promoted = {
+        lfp for lfp, c in loccur.items()
+        if c >= 2 and "param" in lshapes[lfp] and "const" in lshapes[lfp]
+    }
 
     # occurrence maps (every shared occurrence — the pool builder answers
     # nested ones; member traces are intercepted at the topmost mark)
@@ -261,9 +348,21 @@ def merge_plans(plans: list) -> FusedPlan:
     template_binds: dict[int, dict] = {}
     corr_ids: dict[int, tuple] = {}
     for nid, ent in info.items():
-        if ent is None or ent[1] not in shared_fps:
+        if ent is None:
             continue
         shape, fp, holes = ent
+        lent = linfo.get(nid)
+        if lent is not None and lent[0] in promoted:
+            lfp, lholes = lent
+            template_ids[nid] = lfp
+            template_binds[nid] = {
+                hole_name(i): (name if kind == "param"
+                               else (CONST_BIND, name[1]))
+                for i, (kind, name) in enumerate(lholes)
+            }
+            continue
+        if fp not in shared_fps:
+            continue
         if shape == "const":
             shared_ids[nid] = fp
         elif shape == "param":
@@ -288,12 +387,19 @@ def merge_plans(plans: list) -> FusedPlan:
     for fp in sorted({fp for fp in template_ids.values()},
                      key=lambda fp: appearance[fp]):
         occ = canonical[fp]
-        _, _, holes = info[occ.node_id]
-        mapping = {name: hole_name(i) for i, (_, name) in enumerate(holes)}
+        if fp in promoted:  # lifted template: consts become holes too
+            _, lholes = linfo[occ.node_id]
+            node = rewrite_lifted(occ, lholes)
+            nholes = len(lholes)
+        else:
+            _, _, holes = info[occ.node_id]
+            mapping = {name: hole_name(i) for i, (_, name) in enumerate(holes)}
+            node = rewrite_params(occ, mapping)
+            nholes = len(holes)
         templates.append(SharedTemplate(
             fp,
-            rewrite_params(occ, mapping),
-            tuple(hole_name(i) for i in range(len(holes))),
+            node,
+            tuple(hole_name(i) for i in range(nholes)),
             sum(1 for f in template_ids.values() if f == fp),
         ))
 
@@ -304,13 +410,14 @@ def merge_plans(plans: list) -> FusedPlan:
     maximal_const_fps: set = set()
 
     def mark(n: R.RelNode) -> None:
-        ent = info.get(n.node_id)
-        if ent is not None and ent[1] in shared_fps and ent[0] != "corr":
-            if ent[0] == "const":
-                counters["const_refs"] += 1
-                maximal_const_fps.add(ent[1])
-            else:
-                counters["template_refs"] += 1
+        nid = n.node_id
+        if nid in shared_ids:
+            counters["const_refs"] += 1
+            maximal_const_fps.add(shared_ids[nid])
+            counters["covered"] += _deep_size(n, size_memo)
+            return
+        if nid in template_ids:
+            counters["template_refs"] += 1
             counters["covered"] += _deep_size(n, size_memo)
             return
         for p in R.embedded_plans(n):
@@ -341,6 +448,9 @@ def merge_plans(plans: list) -> FusedPlan:
         "shared_maximal_subtrees": len(maximal_const_fps),
         "cse_templates": len(templates),
         "cse_template_refs": counters["template_refs"],
+        # lifted (const-vs-param unified) templates among cse_templates
+        "cse_lifted_templates": sum(1 for t in templates
+                                    if t.fp in promoted),
         "cse_corr_templates": len({fp for fp in corr_ids.values()}),
         "cse_corr_refs": len(corr_ids),
         # plan nodes (deep) covered by a shared evaluation — the engine's
@@ -354,6 +464,7 @@ def merge_plans(plans: list) -> FusedPlan:
 
 
 __all__ = [
+    "CONST_BIND",
     "CSE_HOLE",
     "FusedPlan",
     "PURE_NODES",
@@ -363,6 +474,7 @@ __all__ = [
     "merge_plans",
     "plan_fingerprint",
     "plan_is_pure",
+    "rewrite_lifted",
     "rewrite_params",
     "slot_param",
     "subtree_is_constant",

@@ -245,8 +245,10 @@ def build_fused_raw(session, members, policy, merged=None, groups=(),
                 outs.append(jax.vmap(one)(pargs))
             else:
                 # parameter-free member: one unbatched execution serves
-                # every ticket (no per-ticket slicing at delivery)
-                outs.append(one({}))
+                # every ticket (no per-ticket slicing at delivery); pargs
+                # carries only reserved slot params for const-bound
+                # template occurrences, if any
+                outs.append(one(pargs))
             for k, v in ex.stats.items():
                 scanned[k] = scanned.get(k, 0) + v
         trace_stats.update(scanned)

@@ -32,8 +32,10 @@ from repro.core import (
     FROID,
     HEKATON,
     INTERPRETED,
+    CursorLoop,
     Session,
     UdfBuilder,
+    While,
     avg_,
     case,
     col,
@@ -49,6 +51,7 @@ from repro.core import (
 )
 from repro.core import scalar as S
 from repro.core.frontend import scalar_subquery
+from repro.loops import classify
 
 N_ROWS = 23
 N_KEYS = 7
@@ -352,6 +355,114 @@ def overlap_queue(specs, ticket_values):
         i = t % len(specs)
         calls.append((i, {n: v for n in overlap_param_names(specs[i])}))
     return queries, calls
+
+
+# --------------------------------------------------------------------------
+# loop-UDF generation (ISSUE-6: cursor/WHILE loops through the same oracles —
+# rewritten LoopScan plans must equal the per-row interpreted loops)
+# --------------------------------------------------------------------------
+
+#: loop body shapes: commutative fold (reduce kind), guarded fold (reduce
+#: with predicate), order-dependent fold (scan kind), and a plain WHILE
+#: with no driving relation (non-rewritable — interpreter fallback)
+LOOP_BODIES = ("sum", "sum_if", "running", "plain_while")
+
+
+def build_loop_udf(body: str, guard_cap=None, break_cap=None) -> UdfBuilder:
+    """One loop UDF from the compact spec ``(body, guard_cap, break_cap)``.
+
+    The cursor ranges over ``facts`` rows with ``fk <= @x`` (the call
+    argument), so every invocation folds a different prefix of the table —
+    including the empty cursor for ``@x < 0``.  ``guard_cap`` adds an extra
+    WHILE conjunct ``@t < cap`` (re-checked after each fetch);
+    ``break_cap`` adds ``IF @t > cap BREAK`` after the accumulate.  Either
+    forces scan-kind lowering even for commutative bodies."""
+    u = UdfBuilder("floop", [("x", "float32")], "float32")
+    u.declare("t", "float32", lit(0.0))
+    if body == "plain_while":
+        # no cursor: WHILE has no driving relation, so the analysis issues
+        # a non-rewritable verdict and FROID falls back to the interpreter
+        u.declare("i", "float32", lit(0.0))
+        with u.while_(var("i") < param("x")):
+            u.set("i", var("i") + 1.0)
+            u.set("t", var("t") + var("i"))
+        u.return_(var("t"))
+        return u
+    u.declare("v", "float32", None)
+    u.declare("q", "float32", None)
+    guard = None if guard_cap is None else var("t") < lit(float(guard_cap))
+    with u.cursor_loop({"v": "val", "q": "qty"}, scan("facts"),
+                       where=col("fk") <= param("x"), guard=guard):
+        if body == "sum":
+            u.set("t", var("t") + var("v"))
+        elif body == "sum_if":
+            with u.if_(var("q") > lit(2.0)):
+                u.set("t", var("t") + var("v"))
+        else:  # running: order-dependent, never a commutative fold
+            u.set("t", var("t") * 0.5 + var("v"))
+        if break_cap is not None:
+            with u.if_(var("t") > lit(float(break_cap))):
+                u.break_()
+    u.return_(var("t"))
+    return u
+
+
+def loop_param_query():
+    """Calling query for the loop oracles: parameters feed the filter and
+    the UDF argument, so every surviving row drives a distinct cursor."""
+    return (
+        scan("keys")
+        .filter(col("k") < param("cut"))
+        .compute(out=udf("floop", col("k") * 1.0 + param("shift")))
+        .project("k", "out")
+    )
+
+
+def expected_loop_kind(body: str, guard_cap, break_cap) -> str | None:
+    """The verdict the analysis pass must issue for a spec (None = the
+    non-rewritable fallback)."""
+    if body == "plain_while":
+        return None
+    if body in ("sum", "sum_if") and guard_cap is None and break_cap is None:
+        return "reduce"
+    return "scan"
+
+
+def check_loop_oracle(body: str, guard_cap, break_cap, seed: int,
+                      n_rows: int, params_list=None) -> None:
+    """Loop conformance: the Aggify-rewritten LoopScan plan (FROID), the
+    per-row host interpreter (INTERPRETED), and the traced scan
+    interpreter (HEKATON) agree element-wise — and ``execute_many``
+    (sharded and unsharded) equals the serial loop — on any loop spec,
+    including empty cursors, early-exit guards/breaks, and the
+    non-rewritable fallback."""
+    f = build_loop_udf(body, guard_cap, break_cap).build()
+    loop = next(s for s in f.body if isinstance(s, (While, CursorLoop)))
+    verdict = classify(loop)
+    kind = expected_loop_kind(body, guard_cap, break_cap)
+    if kind is None:
+        assert not verdict.rewritable, verdict
+    else:
+        assert verdict.rewritable and verdict.kind == kind, verdict
+
+    db = make_session(seed, n_rows)
+    db.create_function(f)
+    q = loop_param_query()
+    if params_list is None:
+        params_list = [{"cut": 5, "shift": 0.5}]
+    stmt = db.prepare(q, FROID)
+    serial = [stmt.execute(params=p) for p in params_list]
+    for policy in (INTERPRETED, HEKATON):
+        other = db.prepare(q, policy)
+        for i, p in enumerate(params_list):
+            assert_rows_equal(serial[i], other.execute(params=p),
+                              f"loop[{body}] FROID vs {policy.name}[{i}]")
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    for policy, label in ((FROID, "many"), (FROID.sharded(mesh), "sharded")):
+        batched = db.prepare(q, policy).execute_many(params_list)
+        assert len(batched) == len(serial)
+        for i, (s, b) in enumerate(zip(serial, batched)):
+            assert_rows_equal(s, b, f"loop[{body}] {label}[{i}] vs serial")
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

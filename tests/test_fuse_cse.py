@@ -303,6 +303,114 @@ def test_correlated_bodies_share_interior_subtrees(db):
 
 
 # ---------------------------------------------------------------------------
+# const-vs-param unification (ISSUE-6 satellite): ``a < 5`` joins the
+# ``a < Param(x)`` template pool as one more distinct binding
+# ---------------------------------------------------------------------------
+
+
+def _q_const_template(value, out_col: str):
+    """The ``_q_template`` shape with a literal where the param goes."""
+    inner = (scan("detail").filter(col("d_val") > lit(value))
+             .agg(s=sum_(col("d_val"))))
+    return (
+        scan("T")
+        .compute(**{out_col: scalar_subquery(inner.node, "s")
+                    + col("a") * 0.0})
+        .project("a", out_col)
+    )
+
+
+def test_lifted_fingerprint_unifies_const_and_param():
+    p = R.Filter(R.Scan("detail"), col("d_val") > param("x"))
+    c = R.Filter(R.Scan("detail"), col("d_val") > lit(5.0))
+    # plain fingerprints differ; lifted fingerprints unify
+    assert parametric_fingerprint(p)[0] != parametric_fingerprint(c)[0]
+    fp_p, holes_p = parametric_fingerprint(p, lift_consts=True)
+    fp_c, holes_c = parametric_fingerprint(c, lift_consts=True)
+    assert fp_p == fp_c
+    assert holes_p == (("param", "x"),)
+    assert holes_c == (("const", ("float", 5.0)),)
+    # lifted fps live in their own namespace: never equal to plain fps
+    assert fp_p != parametric_fingerprint(p)[0]
+
+
+def test_lifted_fingerprint_is_dtype_aware():
+    """int 5 and float 5.0 hash equal as dict keys but evaluate int32 vs
+    float32 — they must number as distinct holes, so ``5 + 5.0`` never
+    aliases into ``hole0 + hole0``."""
+    mixed = R.Filter(R.Scan("T"), lit(5) + lit(5.0) > col("a"))
+    same = R.Filter(R.Scan("T"), lit(5) + lit(5) > col("a"))
+    _, holes_mixed = parametric_fingerprint(mixed, lift_consts=True)
+    assert holes_mixed == (("const", ("int", 5)), ("const", ("float", 5.0)))
+    assert (parametric_fingerprint(mixed, lift_consts=True)[0]
+            != parametric_fingerprint(same, lift_consts=True)[0])
+
+
+def test_merge_promotes_mixed_const_param_group(db):
+    from repro.fuse import CONST_BIND
+
+    pa = db.prepare(_q_template("p", "v1"), FROID).plan
+    pb = db.prepare(_q_const_template(30.0, "v2"), FROID).plan
+    merged = merge_plans([pa, pb])
+    assert merged.stats["cse_lifted_templates"] >= 1
+    const_binds = [
+        b for b in merged.template_binds.values()
+        if any(isinstance(v, tuple) and v[0] == CONST_BIND
+               for v in b.values())
+    ]
+    assert const_binds
+    assert any(v == (CONST_BIND, 30.0)
+               for b in const_binds for v in b.values())
+    assert "__const__" in merged.explain()
+
+
+def test_merge_does_not_promote_all_param_or_all_const_groups(db):
+    """Promotion needs the mixed group: all-param groups already unify
+    plainly, all-const groups are better served by the constant pool."""
+    pa = db.prepare(_q_template("x", "v1"), FROID).plan
+    pb = db.prepare(_q_template("y", "v2"), FROID).plan
+    m1 = merge_plans([pa, pb])
+    assert m1.stats["cse_templates"] >= 1
+    assert m1.stats["cse_lifted_templates"] == 0
+    pc = db.prepare(_q_const_template(30.0, "v3"), FROID).plan
+    pd = db.prepare(_q_const_template(30.0, "v4"), FROID).plan
+    m2 = merge_plans([pc, pd])
+    assert m2.stats["cse_lifted_templates"] == 0
+    assert m2.stats["shared_subtrees"] >= 1  # const pool takes it
+
+
+def test_lifted_pool_coinciding_binding_evaluates_once(db):
+    """The acceptance criterion: when a ticket binds the param to the
+    literal's value, the const-shaped member joins the same pool slot —
+    exactly one template evaluation for the whole wave."""
+    s1 = db.prepare(_q_template("p", "v1"), FROID)
+    s2 = db.prepare(_q_const_template(30.0, "v2"), FROID)
+    calls = [(s1, {"p": 30.0}), (s2, None), (s1, {"p": 30.0})]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    st = fused[0].stats
+    assert st["fused"] and st["cse_lifted_templates"] >= 1
+    assert st["cse_bindings"] == 1
+    entry = next(iter(db._fuse_execs.values()))
+    tcounts = _template_eval_counts(entry)
+    assert tcounts and sum(tcounts.values()) == 1
+
+
+def test_lifted_pool_distinct_bindings_evaluate_d_times(db):
+    """Param value differing from the literal: two distinct bindings, two
+    evaluations — no more."""
+    s1 = db.prepare(_q_template("p", "v1"), FROID)
+    s2 = db.prepare(_q_const_template(30.0, "v2"), FROID)
+    calls = [(s1, {"p": 55.0}), (s2, None), (s1, {"p": 55.0}), (s2, {})]
+    fused = db.execute_fused(calls)
+    _assert_same([s.execute(params=p) for s, p in calls], fused)
+    assert fused[0].stats["cse_bindings"] == 2
+    entry = next(iter(db._fuse_execs.values()))
+    tcounts = _template_eval_counts(entry)
+    assert tcounts and sum(tcounts.values()) == 2
+
+
+# ---------------------------------------------------------------------------
 # template cache keying
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,425 @@
+"""Cursor/WHILE loop frontend and Aggify-style rewriting (ISSUE-6).
+
+Four layers, deterministic (the generative layer rides in
+``test_property_froid.py`` through the same ``conformance_util`` oracles):
+
+* **Parser** — T-SQL ``DECLARE CURSOR FOR`` / ``OPEN`` / ``FETCH NEXT``
+  / ``WHILE @@fetch_status = 0`` fold into one :class:`CursorLoop` IR
+  node; everything off that shape raises
+  :class:`UnsupportedConstructError` with the construct name and 1-based
+  line/column of the offending token.
+* **Analysis** — ``repro.loops.classify`` verdicts: commutative folds are
+  ``reduce``, order-dependent/guarded/breaking bodies are ``scan``, and
+  plain WHILE / nested loops / RETURN-in-body are explicitly
+  non-rewritable (fallback, not an error).
+* **Execution** — parsed cursor UDFs agree element-wise across
+  FROID (LoopScan rewrite) / INTERPRETED (host loop) / HEKATON (traced
+  ``lax.scan``), including empty cursors, extra guards, BREAK, and the
+  interpreter fallback for non-rewritable loops.
+* **Integration** — LoopScan plans ride ``explain()``, plan fingerprints,
+  and the fusion engine like any other relational subtree.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    FROID,
+    HEKATON,
+    INTERPRETED,
+    CursorLoop,
+    Session,
+    UnsupportedConstructError,
+    While,
+    col,
+    lit,
+    param,
+    parse_udf,
+    scan,
+    udf,
+    var,
+)
+from repro.core import algebrizer as A
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.core.optimizer import explain
+from repro.core.session import plan_fingerprint
+from repro.loops import LoopVerdict, classify
+from conformance_util import (
+    assert_rows_equal,
+    build_loop_udf,
+    check_loop_oracle,
+    loop_param_query,
+    make_session,
+)
+
+CURSOR_SUM = """
+create function dbo.cursor_total(@x float) returns float as
+begin
+  declare @t float = 0.0;
+  declare @v float;
+  declare @q float;
+  declare c cursor for select val, qty from facts where fk <= @x;
+  open c;
+  fetch next from c into @v, @q;
+  while @@fetch_status = 0
+  begin
+    set @t = @t + @v;
+    fetch next from c into @v, @q;
+  end
+  close c;
+  deallocate c;
+  return @t;
+end
+"""
+
+CURSOR_GUARD_BREAK = """
+create function dbo.cursor_capped(@x float) returns float as
+begin
+  declare @t float = 0.0;
+  declare @v float;
+  declare c cursor for select val from facts where fk <= @x;
+  open c;
+  fetch next from c into @v;
+  while @@fetch_status = 0 and @t < 40.0
+  begin
+    set @t = @t + @v;
+    if @t > 25.0
+      break;
+    fetch next from c into @v;
+  end
+  close c;
+  return @t;
+end
+"""
+
+PLAIN_WHILE = """
+create function dbo.wsum(@x float) returns float as
+begin
+  declare @i float = 0.0;
+  declare @t float = 0.0;
+  while @i < @x
+  begin
+    set @i = @i + 1.0;
+    set @t = @t + @i;
+  end
+  return @t;
+end
+"""
+
+
+# ---------------------------------------------------------------------------
+# parser: the supported shape
+# ---------------------------------------------------------------------------
+
+
+def test_parse_cursor_loop_shape():
+    f = parse_udf(CURSOR_SUM)
+    assert f.name == "cursor_total"
+    loops = [s for s in f.body if isinstance(s, CursorLoop)]
+    assert len(loops) == 1
+    lp = loops[0]
+    assert lp.targets == [("v", "val"), ("q", "qty")]
+    assert lp.guard is None
+    # the cursor's defining query parses to Filter-over-Scan
+    assert isinstance(lp.plan, R.Filter)
+    assert isinstance(lp.plan.child, R.Scan) and lp.plan.child.table == "facts"
+    # priming + trailing FETCH folded away: the body is just the accumulate
+    assert len(lp.body) == 1
+    # OPEN/CLOSE/DEALLOCATE are lifecycle no-ops, not IR statements
+    assert not any(isinstance(s, While) for s in f.body)
+
+
+def test_parse_cursor_guard_conjunct():
+    f = parse_udf(CURSOR_GUARD_BREAK)
+    lp = next(s for s in f.body if isinstance(s, CursorLoop))
+    # the non-status conjunct survives as the loop's extra guard
+    assert lp.guard is not None
+    assert isinstance(lp.guard, S.Cmp) and lp.guard.op == "<"
+
+
+def test_parse_plain_while():
+    f = parse_udf(PLAIN_WHILE)
+    w = next(s for s in f.body if isinstance(s, While))
+    assert len(w.body) == 2
+
+
+# ---------------------------------------------------------------------------
+# parser diagnostics: construct + line/col (ISSUE-6 satellite)
+# ---------------------------------------------------------------------------
+
+
+def _perr(src: str) -> UnsupportedConstructError:
+    with pytest.raises(UnsupportedConstructError) as ei:
+        parse_udf(src)
+    return ei.value
+
+
+def test_unknown_cursor_has_location():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  open c;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "cursor"
+    assert (e.line, e.col) == (3, 8)
+    assert "unknown cursor 'c'" in str(e)
+    assert "line 3, col 8" in str(e)
+
+
+def test_fetch_status_only_as_zero_check():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  while @@fetch_status < 1\n"
+        "    set @x = 1;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "fetch-status"
+    assert e.line == 3
+
+
+def test_cursor_while_requires_priming_fetch():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  declare c cursor for select val from facts;\n"
+        "  open c;\n"
+        "  while @@fetch_status = 0\n"
+        "    set @x = 1;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "cursor-while"
+    assert "priming fetch" in str(e)
+    assert e.line == 5
+
+
+def test_cursor_body_must_end_with_fetch():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  declare @v float;\n"
+        "  declare c cursor for select val from facts;\n"
+        "  fetch next from c into @v;\n"
+        "  while @@fetch_status = 0\n"
+        "  begin\n"
+        "    set @v = @v + 1.0;\n"
+        "  end\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "cursor-while"
+    assert "must end with FETCH NEXT" in str(e)
+
+
+def test_fetch_arity_mismatch():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  declare @v float;\n"
+        "  declare c cursor for select val, qty from facts;\n"
+        "  fetch next from c into @v;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "fetch"
+    assert "binds 1 variables" in str(e) and "selects 2 columns" in str(e)
+
+
+def test_cursor_select_list_must_be_columns():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  declare c cursor for select val + 1 from facts;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "cursor-select"
+
+
+def test_unsupported_statement_names_construct():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  print @x;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "statement"
+    assert e.line == 3
+
+
+def test_tokenizer_error_has_location():
+    e = _perr(
+        "create function dbo.f(@x int) returns float as\n"
+        "begin\n"
+        "  set @x = #;\n"
+        "  return 1.0;\n"
+        "end\n"
+    )
+    assert e.construct == "token"
+    assert e.line == 3
+
+
+def test_unsupported_type_names_construct():
+    e = _perr(
+        "create function dbo.f(@x text) returns float as\n"
+        "begin return 1.0; end\n"
+    )
+    assert e.construct == "type"
+
+
+# ---------------------------------------------------------------------------
+# analysis verdicts
+# ---------------------------------------------------------------------------
+
+
+def _loop_of(builder):
+    f = builder.build()
+    return next(s for s in f.body if isinstance(s, (While, CursorLoop)))
+
+
+def test_verdict_reduce_for_commutative_fold():
+    v = classify(_loop_of(build_loop_udf("sum")))
+    assert v.rewritable and v.kind == "reduce"
+    assert "t" in v.written
+    assert "rewritable (reduce)" in str(v)
+
+
+def test_verdict_scan_for_order_dependence_guard_break():
+    for spec in (("running", None, None), ("sum", 40.0, None),
+                 ("sum", None, 15.0)):
+        v = classify(_loop_of(build_loop_udf(*spec)))
+        assert v.rewritable and v.kind == "scan", (spec, v)
+
+
+def test_verdict_plain_while_not_rewritable():
+    v = classify(_loop_of(build_loop_udf("plain_while")))
+    assert not v.rewritable
+    assert "no driving relation" in v.reason
+    assert "non-rewritable" in str(v)
+
+
+def test_verdict_nested_loop_not_rewritable():
+    lp = _loop_of(build_loop_udf("sum"))
+    outer = CursorLoop("c2", scan("facts").node, [("w", "val")], [lp], None)
+    v = classify(outer)
+    assert not v.rewritable and "nested loop" in v.reason
+
+
+def test_verdict_is_explicit_not_a_parse_error():
+    """The fallback path is a verdict, not an exception: algebrization of
+    the containing UDF raises AlgebrizeError naming the reason, and the
+    binder leaves the call for the interpreter."""
+    f = build_loop_udf("plain_while").build()
+    with pytest.raises(A.AlgebrizeError, match="non-rewritable loop"):
+        A.algebrize(f)
+
+
+# ---------------------------------------------------------------------------
+# execution: fixed T-SQL programs across policies
+# ---------------------------------------------------------------------------
+
+
+def _check_tsql_policies(src: str, fname: str, n_rows: int = 23):
+    db = make_session(0, n_rows)
+    db.create_function(parse_udf(src))
+    q = (scan("keys").filter(col("k") < param("cut"))
+         .compute(out=udf(fname, col("k") * 1.0 + param("shift")))
+         .project("k", "out"))
+    params = [{"cut": 5, "shift": 0.5}, {"cut": 7, "shift": -1.0}]
+    base = db.prepare(q, FROID)
+    serial = [base.execute(params=p) for p in params]
+    for policy in (INTERPRETED, HEKATON):
+        other = db.prepare(q, policy)
+        for i, p in enumerate(params):
+            assert_rows_equal(serial[i], other.execute(params=p),
+                              f"{fname} FROID vs {policy.name}[{i}]")
+    return db, base
+
+
+def test_tsql_cursor_sum_policies_agree():
+    _check_tsql_policies(CURSOR_SUM, "cursor_total")
+
+
+def test_tsql_cursor_guard_break_policies_agree():
+    _check_tsql_policies(CURSOR_GUARD_BREAK, "cursor_capped")
+
+
+def test_tsql_cursor_empty_table():
+    _check_tsql_policies(CURSOR_SUM, "cursor_total", n_rows=0)
+
+
+def test_tsql_plain_while_falls_back_and_agrees():
+    db, stmt = _check_tsql_policies(PLAIN_WHILE, "wsum")
+    # fallback evidence: the FROID plan still carries the UdfCall
+    calls = [e for n in R.walk_plan_deep(stmt.plan) for ex in n.exprs()
+             for e in S.walk(ex) if isinstance(e, S.UdfCall)]
+    assert calls, "non-rewritable loop should not inline"
+
+
+def test_loop_oracle_fixed_replay():
+    """Deterministic floor under the generative loop strategy: fixed
+    samples of the spec space through the full loop oracle."""
+    check_loop_oracle("sum_if", None, None, 0, 23,
+                      params_list=[{"cut": 5, "shift": 0.5}])
+    check_loop_oracle("running", 10.0, 75.0, 1, 23,
+                      params_list=[{"cut": 6, "shift": -1.0},
+                                   {"cut": 3, "shift": 2.0}])
+
+
+# ---------------------------------------------------------------------------
+# integration: LoopScan is a first-class relational subtree
+# ---------------------------------------------------------------------------
+
+
+def test_inlined_loop_plan_explains_loopscan():
+    db = make_session(0, 23)
+    db.create_function(parse_udf(CURSOR_SUM))
+    stmt = db.prepare(
+        scan("keys").compute(out=udf("cursor_total", col("k") * 1.0))
+        .project("k", "out"), FROID)
+    text = explain(stmt.plan)
+    assert "LoopScan[" in text
+    assert not any(isinstance(e, S.UdfCall)
+                   for n in R.walk_plan_deep(stmt.plan)
+                   for ex in n.exprs() for e in S.walk(ex))
+
+
+def test_loop_plan_fingerprints_stable():
+    """Two independently-parsed copies of the same UDF produce
+    fingerprint-equal inlined plans (cache identity)."""
+    q = (scan("keys").compute(out=udf("cursor_total", col("k") * 1.0))
+         .project("k", "out"))
+    fps = []
+    for _ in range(2):
+        db = make_session(0, 23)
+        db.create_function(parse_udf(CURSOR_SUM))
+        fps.append(plan_fingerprint(db.prepare(q, FROID).plan))
+    assert fps[0] == fps[1]
+
+
+def test_fused_members_share_loop_subtrees():
+    """Two statements inlining the same cursor-loop UDF fuse (LoopScan is
+    in PURE_NODES) and agree with the serial loop; the identical
+    loop-bearing subtrees unify in the merge pass."""
+    db = make_session(0, 23)
+    db.create_function(parse_udf(CURSOR_SUM))
+    q1 = (scan("keys").filter(col("k") < param("cut"))
+          .compute(out=udf("cursor_total", col("k") * 1.0))
+          .project("k", "out"))
+    q2 = (scan("keys")
+          .compute(w=udf("cursor_total", col("k") * 1.0) * 2.0)
+          .project("k", "w"))
+    s1 = db.prepare(q1, FROID)
+    s2 = db.prepare(q2, FROID)
+    calls = [(s1, {"cut": 5}), (s2, None), (s1, {"cut": 3})]
+    serial = [s.execute(params=p) for s, p in calls]
+    fused = db.execute_fused(calls)
+    for i, (s, f) in enumerate(zip(serial, fused)):
+        assert_rows_equal(s, f, f"loop-fused[{i}] vs serial")
+    st = fused[0].stats
+    assert st["fused"] and st["fused_statements"] == 2

@@ -34,6 +34,7 @@ import jax
 
 from conformance_util import (
     AGGS,
+    LOOP_BODIES,
     N_KEYS,
     N_ROWS,
     OVERLAP_BODIES,
@@ -42,6 +43,7 @@ from conformance_util import (
     build_udf,
     check_fusion_oracle,
     check_invocation_oracle,
+    check_loop_oracle,
     check_mode_oracle,
     overlap_queue,
 )
@@ -237,6 +239,47 @@ def test_execute_many_equals_serial_loop_oracle(ops, seed, n_rows, params_list):
     except AssertionError:
         pytest.skip("builder rejected program")
     check_invocation_oracle(ops, seed, n_rows, params_list)
+
+
+# --------------------------------------------------------------------------
+# generative loop oracle (ISSUE-6): Aggify-rewritten cursor loops ==
+# per-row interpreted loops, across policies and invocation surfaces
+# --------------------------------------------------------------------------
+
+#: loop spec space: body shape × extra termination guard × early-exit
+#: BREAK threshold.  Guard/break force scan-kind lowering on commutative
+#: bodies; ``plain_while`` exercises the explicit non-rewritable fallback.
+_loop_specs = st.tuples(
+    st.sampled_from(LOOP_BODIES),
+    st.one_of(st.none(), st.sampled_from([5.0, 40.0])),
+    st.one_of(st.none(), st.sampled_from([15.0, 75.0])),
+)
+
+#: shifts below -1 drive the cursor's ``fk <= @x`` filter empty for small
+#: ``k`` — the empty-cursor rows ride inside non-empty invocations
+_loop_param_sets = st.lists(
+    st.fixed_dictionaries({
+        "cut": st.integers(0, N_KEYS + 1),
+        "shift": st.one_of(
+            st.integers(-2, 2),
+            st.floats(-2, 2, allow_nan=False, width=32),
+        ),
+    }),
+    min_size=1, max_size=4,
+)
+
+
+@settings(max_examples=25, **ORACLE_SETTINGS)
+@given(spec=_loop_specs, seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]), params_list=_loop_param_sets)
+def test_loop_udf_policies_and_invocation_agree(spec, seed, n_rows,
+                                                params_list):
+    """Loop oracle: for any generated loop spec, FROID's LoopScan rewrite,
+    the host interpreter, and the traced scan interpreter agree
+    element-wise, and execute_many (sharded + unsharded) equals the serial
+    loop — empty cursor relations and early-exit loops included."""
+    body, guard_cap, break_cap = spec
+    check_loop_oracle(body, guard_cap, break_cap, seed, n_rows, params_list)
 
 
 # --------------------------------------------------------------------------
