@@ -1,0 +1,167 @@
+"""Resilience overhead + observability: the degradation ladder on the
+fault-free hot path vs the bare (pre-PR-7) drain, and a faulted drain
+demonstrating the demotion machinery under load.
+
+    PYTHONPATH=src python -m benchmarks.bench_resilience [--quick]
+
+Rows:
+    resilience/bare_fused/<n>    — scheduler with resilience=False
+    resilience/ladder_fused/<n>  — scheduler with the ladder on (default)
+    resilience/faulted_fused/<n> — ladder under a periodic dispatch fault
+
+The ladder row's `derived` carries ``overhead=<ratio>`` — ladder time over
+bare time on an identical fault-free queue.  CI gates on overhead <= 1.05
+(the fault-free hot path pays only breaker-gate lookups and per-item
+bookkeeping; all device work is byte-identical).  The faulted row's
+`derived` carries the demotion/tier counters, proving every ticket was
+answered (parity asserted) while a recurring injected dispatch fault
+forced fused→many demotions mid-drain.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import FROID, Session, UdfBuilder, col, lit, param, scan, sum_, udf, var
+from repro.resilience import FaultInjector, FaultSpec
+from repro.serve.scheduler import CoalescingScheduler
+
+M_ROWS, N_T, PER_STMT = 20_000, 2_000, 64
+M_ROWS_QUICK, N_T_QUICK, PER_STMT_QUICK = 5_000, 500, 24
+
+
+def _setup(quick: bool) -> Session:
+    m = M_ROWS_QUICK if quick else M_ROWS
+    n = N_T_QUICK if quick else N_T
+    db = Session()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, m),
+        d_val=rng.uniform(0, 100, m).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 400, n))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    return db
+
+
+def _queue(db, per_stmt: int):
+    stmts = [
+        db.prepare(scan("T").filter(col("a") < param("cutoff"))
+                            .compute(v=udf("key_total", col("a")))
+                            .project("v"), FROID),
+        db.prepare(scan("T").filter(col("a") >= param("lo"))
+                            .compute(w=col("a") * param("scale"))
+                            .project("a", "w"), FROID),
+        db.prepare(scan("T").filter((col("a") > param("lo"))
+                                    & (col("a") < param("hi")))
+                            .compute(z=col("a") + param("off"))
+                            .project("z"), FROID),
+    ]
+    rng = np.random.default_rng(7)
+    waves = []
+    for _ in range(per_stmt):
+        waves.append((stmts[0], {"cutoff": int(rng.integers(1, 400))}))
+        waves.append((stmts[1], {"lo": int(rng.integers(0, 200)),
+                                 "scale": float(round(rng.uniform(0.5, 2), 2))}))
+        waves.append((stmts[2], {"lo": int(rng.integers(0, 100)),
+                                 "hi": int(rng.integers(200, 400)),
+                                 "off": int(rng.integers(0, 10))}))
+    return waves
+
+
+def _drain_time(queue, *, resilience, iters: int = 5):
+    """Median wall seconds to drain the queue; returns (t, stats, results)."""
+    ts, stats, results = [], {}, None
+    for _ in range(iters):
+        sched = CoalescingScheduler(max_batch=1024, window_s=10.0, fuse=True,
+                                    resilience=resilience)
+        t0 = time.perf_counter()
+        tickets = [sched.submit(s, p) for s, p in queue]
+        sched.flush()
+        results = [t.result().masked for t in tickets]
+        ts.append(time.perf_counter() - t0)
+        stats = sched.stats
+    return float(np.median(ts)), stats, results
+
+
+def _check_identical(expected, got):
+    for s, b in zip(expected, got):
+        m = np.asarray(s.mask)
+        np.testing.assert_array_equal(m, np.asarray(b.mask))
+        for n, c in s.table.columns.items():
+            np.testing.assert_allclose(
+                np.asarray(b.table.columns[n].data)[m],
+                np.asarray(c.data)[m], rtol=1e-5,
+            )
+
+
+def run(quick: bool = False):
+    db = _setup(quick)
+    per_stmt = PER_STMT_QUICK if quick else PER_STMT
+    queue = _queue(db, per_stmt)
+    n = len(queue)
+
+    # warm both arms' jit caches (device programs are shared either way)
+    _drain_time(queue, resilience=False, iters=1)
+
+    t_bare, _, ref = _drain_time(queue, resilience=False)
+    emit(f"resilience/bare_fused/{n}", t_bare / n * 1e6,
+         "pre-ladder drain (resilience=False)")
+
+    t_lad, st, got = _drain_time(queue, resilience=True)
+    _check_identical(ref, got)
+    emit(
+        f"resilience/ladder_fused/{n}", t_lad / n * 1e6,
+        f"overhead={t_lad / t_bare:.4f} tier_fused_ok={st.get('tier_fused_ok')} "
+        f"demotions={st.get('demote_fused_to_many', 0)}",
+    )
+
+    # faulted arm: one dispatch fault per drain kills the fused wave; the
+    # ladder demotes every group to execute_many and every ticket still
+    # gets its rows (parity asserted against the bare-arm reference)
+    ts, faults = [], 0
+    fst, fgot = {}, None
+    try:
+        for _ in range(3):
+            fi = FaultInjector([FaultSpec(site="dispatch", times=1)])
+            fi.install(db)
+            sched = CoalescingScheduler(max_batch=1024, window_s=10.0,
+                                        fuse=True, resilience=True)
+            t0 = time.perf_counter()
+            tickets = [sched.submit(s, p) for s, p in queue]
+            sched.flush()
+            fgot = [t.result().masked for t in tickets]
+            ts.append(time.perf_counter() - t0)
+            faults += len(fi.injected)
+            fst = sched.stats
+    finally:
+        db.fault_injector = None
+    _check_identical(ref, fgot)
+    t_fault = float(np.median(ts))
+    emit(
+        f"resilience/faulted_fused/{n}", t_fault / n * 1e6,
+        f"faults={faults} "
+        f"demote_fused_to_many={fst.get('demote_fused_to_many')} "
+        f"tier_many_ok={fst.get('tier_many_ok')} "
+        f"fused_isolated_retries={fst.get('fused_isolated_retries')} "
+        f"parity=ok",
+    )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

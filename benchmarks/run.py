@@ -44,7 +44,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
                          "table5,prepared,execmany,shardmany,fused,"
-                         "cursorloop")
+                         "cursorloop,resilience")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -63,6 +63,7 @@ def main() -> None:
         bench_invocations,
         bench_native,
         bench_prepared,
+        bench_resilience,
         bench_resources,
         bench_sharded_many,
         bench_tpch,
@@ -82,6 +83,7 @@ def main() -> None:
         "shardmany": bench_sharded_many.run,  # mesh-sharded batches
         "fused": bench_fused.run,          # multi-statement fusion
         "cursorloop": bench_cursor_loops.run,  # loop-to-scan rewrite
+        "resilience": bench_resilience.run,  # ladder overhead + demotions
     }
     only = args.only.split(",") if args.only else list(suites)
 

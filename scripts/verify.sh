@@ -40,6 +40,20 @@ if [ "${VERIFY_CURSORLOOP:-1}" != "0" ]; then
       --run-id verify-cursorloop --json-dir /tmp
 fi
 
+# resilience: chaos smoke on a forced 8-device mesh (ladder, breakers,
+# deadlines, chaos conformance oracle) + the ladder-overhead perf smoke —
+# the CI gate requires fault-free overhead <= 1.05 with in-bench parity.
+# VERIFY_RESILIENCE=0 skips.
+if [ "${VERIFY_RESILIENCE:-1}" != "0" ]; then
+  echo "--- chaos smoke: pytest tests/test_resilience.py on a forced 8-device host mesh"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_resilience.py
+  echo "--- resilience overhead + demotion smoke: benchmarks.run --quick --only resilience"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only resilience \
+      --run-id verify-resilience --json-dir /tmp
+fi
+
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then
   echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

@@ -700,6 +700,18 @@ class Session:
         # dispatched-but-unsynced AsyncResults, oldest first (backpressure)
         self._inflight: deque = deque()
         self.async_stats = {"inflight_waits": 0, "inflight_peak": 0}
+        # resilience seam: a repro.resilience.faults.FaultInjector (or any
+        # object with .check(site, statements)) installed by chaos tests;
+        # None in production — the seams below are no-ops then
+        self.fault_injector = None
+
+    def _fault(self, site: str, statements: tuple = ()) -> None:
+        """Fault-injection seam: named executor sites call this with the
+        statement fingerprints they serve; an installed injector may raise
+        :class:`~repro.resilience.faults.InjectedFault` here."""
+        fi = self.fault_injector
+        if fi is not None:
+            fi.check(site, statements)
 
     # -- DDL ---------------------------------------------------------------
     # name/table are positional-only so columns may be called "name"/"table"
@@ -840,6 +852,7 @@ class Session:
             self.cache_stats["exec_hits"] += 1
             return entry, True, True
         self.cache_stats["exec_misses"] += 1
+        self._fault("compile", (query_fp,))
         plan, plan_hit = self._cached_plan(node, query_fp, policy)
 
         # iterative hook for UDF calls left in the plan (froid OFF, or
@@ -925,6 +938,7 @@ class Session:
             self.cache_stats["batch_hits"] += 1
             return entry, True
         self.cache_stats["batch_misses"] += 1
+        self._fault("compile", (query_fp,))
         # share the unbatched executable's raw closure and trace-time
         # capture dicts so warm execute() and execute_many() agree on
         # output dictionaries/stats regardless of which traced first
@@ -984,6 +998,7 @@ class Session:
             self.cache_stats["shard_hits"] += 1
             return entry, True
         self.cache_stats["shard_misses"] += 1
+        self._fault("compile", (query_fp,))
         base, _, _ = self._executable(node, query_fp, policy, params0, env_token)
         mesh = policy.mesh
         parg_sharding = batch_sharding(mesh, bucket)
@@ -1063,6 +1078,7 @@ class Session:
             self.cache_stats["fuse_hits"] += 1
             return entry, True
         self.cache_stats["fuse_misses"] += 1
+        self._fault("compile", tuple(m.key[0] for m in members))
         from repro.fuse.program import build_fused_raw
 
         raw, out_dicts, trace_stats, merged, eval_counts = build_fused_raw(
@@ -1237,8 +1253,11 @@ class Session:
                         jnp.asarray(slots[0], jnp.int32), jnp.asarray(True))
                 pargs_tuple.append(pargs)
         targs_tuple = tuple(_stack_params(g.bindings) for g in groups)
+        wave_fps = tuple(m.key[0] for m in members)
+        self._fault("dispatch", wave_fps)
         outs = entry.fn(tuple(pargs_tuple), targs_tuple, env_token[0])
         t_dispatch = time.perf_counter() - t0
+        self._fault("sync", wave_fps)
         jax.block_until_ready([mask for mask, _ in outs])
         elapsed = time.perf_counter() - t0
         n_stmts = len({m.key[0] for m in members})
@@ -1524,6 +1543,7 @@ class PreparedStatement:
         padded = plist + [plist[-1]] * (bucket - k)
         t0 = time.perf_counter()
         pargs = _stack_params(padded)
+        self.session._fault("dispatch", (self._query_fp,))
         mask, cols = entry.fn(pargs, env_token[0])
         t_dispatch = time.perf_counter() - t0
         pending.append({
@@ -1540,6 +1560,7 @@ class PreparedStatement:
         arrival — under pipelining that wait overlaps the later chunks'
         host-side stacking, which is the point."""
         entry, mask, cols = rec["entry"], rec["mask"], rec["cols"]
+        self.session._fault("sync", (self._query_fp,))
         jax.block_until_ready(mask)
         rec["synced"] = True
         elapsed = time.perf_counter() - rec["t0"]
@@ -1590,6 +1611,7 @@ class PreparedStatement:
             self.node, self._query_fp, self.policy, params, env_token
         )
         t0 = time.perf_counter()
+        self.session._fault("dispatch", (self._query_fp,))
         mask, cols = entry.fn(params, env_token[0])
         dispatch_s = time.perf_counter() - t0
         stats = {**entry.stats, "compiled": True, "async": True,
@@ -1626,7 +1648,9 @@ class PreparedStatement:
             self.node, self._query_fp, self.policy, params, env_token
         )
         t0 = time.perf_counter()
+        self.session._fault("dispatch", (self._query_fp,))
         mask, cols = entry.fn(params, env_token[0])
+        self.session._fault("sync", (self._query_fp,))
         jax.block_until_ready(mask)
         elapsed = time.perf_counter() - t0
         table = Table(
@@ -1654,6 +1678,7 @@ class PreparedStatement:
         pvals = {n: _param_value(v) for n, v in (params or {}).items()}
         before = dict(interp.stats)
         t0 = time.perf_counter()
+        self.session._fault("interp", (self._query_fp,))
         masked = executor.execute(plan, params=pvals)
         jax.block_until_ready(masked.mask)
         elapsed = time.perf_counter() - t0

@@ -140,7 +140,8 @@ class AdmissionPolicy:
     def __init__(self, froid: bool = True,
                  policy: ExecutionPolicy | str | None = None,
                  scheduler: CoalescingScheduler | None = None,
-                 mesh=None, fuse: bool = False, adaptive: bool = False):
+                 mesh=None, fuse: bool = False, adaptive: bool = False,
+                 timeout_s: float | None = None):
         self.session = Session()
         default_rules(self.session)
         if policy is None:
@@ -161,9 +162,13 @@ class AdmissionPolicy:
         self._request_stmt = None
         # fuse: mixed-statement waves (e.g. custom rule statements sharing
         # the request session) drain as one fused device program; adaptive:
-        # the flush window tracks the observed arrival rate
+        # the flush window tracks the observed arrival rate; timeout_s:
+        # default per-ticket deadline (expired tickets shed with a typed
+        # DeadlineExceeded instead of executing — the engine maps that to
+        # a "shed" completion)
+        self.timeout_s = timeout_s
         self.scheduler = scheduler or CoalescingScheduler(
-            fuse=fuse, adaptive=adaptive,
+            fuse=fuse, adaptive=adaptive, default_timeout_s=timeout_s,
         )
 
     def evaluate(self, requests: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
@@ -198,14 +203,17 @@ class AdmissionPolicy:
         return self._request_stmt
 
     def submit(self, *, tier: int, prompt_len: int, max_new_tokens: int,
-               temperature: float, depth: int = 0) -> Ticket:
+               temperature: float, depth: int = 0,
+               timeout_s: float | None = None) -> Ticket:
         """Queue one request's admission evaluation; concurrent submits for
-        the same statement coalesce into `execute_many` microbatches."""
+        the same statement coalesce into `execute_many` microbatches.
+        ``timeout_s`` overrides the policy-wide ticket deadline."""
         return self.scheduler.submit(
             self.request_statement(),
             {"tier": int(tier), "plen": int(prompt_len),
              "req": int(max_new_tokens), "temp": float(temperature),
              "depth": int(depth)},
+            timeout_s=timeout_s,
         )
 
     @staticmethod

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.resilience.faults import ResilienceError
 from repro.serve.admission import AdmissionPolicy
 from repro.serve.scheduler import CoalescingScheduler
 
@@ -51,7 +52,8 @@ class ServeEngine:
                  admission_policy=None, seed: int = 0,
                  admission_scheduler: CoalescingScheduler | None = None,
                  admission_mesh=None, admission_fuse: bool = False,
-                 admission_adaptive: bool = False):
+                 admission_adaptive: bool = False,
+                 admission_timeout_s: float | None = None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -63,12 +65,16 @@ class ServeEngine:
         # microbatches over a device mesh so intake traffic fills devices.
         # admission_fuse drains mixed-statement admission waves as one
         # fused device program; admission_adaptive tracks the arrival rate
-        # with the coalescing window.
+        # with the coalescing window; admission_timeout_s deadlines each
+        # admission ticket — an expired or resilience-failed ticket
+        # completes as "shed" instead of hanging or crashing the drain.
         self.admission = AdmissionPolicy(
             froid=froid_admission, policy=admission_policy,
             scheduler=admission_scheduler, mesh=admission_mesh,
             fuse=admission_fuse, adaptive=admission_adaptive,
+            timeout_s=admission_timeout_s,
         )
+        self.shed: list[Completed] = []  # resilience-shed completions
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(model.decode_step)
         # online intake: requests awaiting the next drain()
@@ -128,7 +134,15 @@ class ServeEngine:
         queue = []
         done: list[Completed] = []
         for r, ticket in zip(submitted, tickets):
-            v = AdmissionPolicy.verdict(ticket.result())
+            try:
+                v = AdmissionPolicy.verdict(ticket.result())
+            except ResilienceError:
+                # deadline shed / exhausted ladder: the request completes
+                # explicitly instead of crashing the whole drain
+                c = Completed(r.rid, [], "shed")
+                self.shed.append(c)
+                done.append(c)
+                continue
             if not v["admit"]:
                 done.append(Completed(r.rid, [], "rejected"))
             else:

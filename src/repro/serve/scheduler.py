@@ -14,12 +14,25 @@ accumulate in a pending microbatch, and the batch drains through
   ticket — a consumer that needs its answer never deadlocks waiting for
   traffic that might not arrive).
 
+Drains run through the **degradation ladder**
+(:class:`repro.resilience.ladder.DegradationLadder`) by default: a failed
+fused wave retries per-statement, a failed batch retries per ticket, a
+failed compiled execute retries interpreted, so a ticket only surfaces an
+error when the interpreter itself fails.  Per-``(statement, tier)``
+circuit breakers stop persistently-failing configurations from burning
+retries, and per-ticket **deadlines** (``submit(..., timeout_s=…)`` or the
+scheduler-wide ``default_timeout_s``) shed expired tickets with a typed
+:class:`~repro.resilience.faults.DeadlineExceeded` before each tier
+attempt.  ``resilience=False`` restores the bare single-tier drains.
+
 The scheduler is synchronous and thread-safe: it never starts threads of
 its own, so drains happen on the caller that trips a flush condition.
 Drains are serialized on a dedicated lock (the underlying Session caches
 are not thread-safe), while submits to other statements stay concurrent;
 a Session driven through a scheduler must not also be driven concurrently
-outside it.  ``clock`` is injectable for deterministic window tests.
+outside it.  ``clock`` is injectable for deterministic window tests (and
+drives deadlines and breaker cooldowns too); ``sleep`` is injectable for
+instant retry-backoff tests.
 """
 from __future__ import annotations
 
@@ -28,44 +41,60 @@ import time
 from typing import Any, Callable
 
 from repro.core.session import PreparedStatement, QueryResult
+from repro.resilience.faults import WaveResultMismatch
+from repro.resilience.ladder import (
+    UNSET as _UNSET,
+    DegradationLadder,
+    ResilienceConfig,
+    WaveGroup,
+    WorkItem,
+)
 
 
 class Ticket:
-    """Handle for one submitted request; filled when its batch drains."""
+    """Handle for one submitted request; filled when its batch drains.
+    ``_result`` uses a dedicated unset sentinel: a legitimate result may
+    be any object, so ``None`` must not mean "pending"."""
 
-    __slots__ = ("_sched", "_group", "_result", "_error")
+    __slots__ = ("_sched", "_group", "_result", "_error", "_deadline")
 
-    def __init__(self, sched: "CoalescingScheduler", group: "_Group"):
+    def __init__(self, sched: "CoalescingScheduler", group: "_Group",
+                 deadline: float | None = None):
         self._sched = sched
         self._group = group
-        self._result: QueryResult | None = None
+        self._result: Any = _UNSET
         self._error: BaseException | None = None
+        self._deadline = deadline
 
     def done(self) -> bool:
-        return self._result is not None or self._error is not None
+        return self._result is not _UNSET or self._error is not None
 
     def result(self) -> QueryResult:
         """The request's :class:`QueryResult`; forces a drain of the
         ticket's batch if it is still pending.  If another thread is
         mid-drain (the batch was popped but not yet filled), waits for
-        that drain to finish instead of racing it."""
+        that drain to finish instead of racing it.  Raises the ticket's
+        error (a typed resilience error, or the raw failure once the
+        ladder is exhausted) instead of returning wrong data."""
         if not self.done():
             self._sched._flush_group(self._group)
             self._group.done_evt.wait()
         if self._error is not None:
             raise self._error
-        assert self._result is not None
+        assert self._result is not _UNSET
         return self._result
 
 
 class _Group:
     """Pending same-statement microbatch."""
 
-    __slots__ = ("stmt", "params", "tickets", "opened_at", "done_evt")
+    __slots__ = ("stmt", "params", "deadlines", "tickets", "opened_at",
+                 "done_evt")
 
     def __init__(self, stmt: PreparedStatement, opened_at: float):
         self.stmt = stmt
         self.params: list[dict] = []
+        self.deadlines: list[float | None] = []
         self.tickets: list[Ticket] = []
         self.opened_at = opened_at
         # set once every ticket is filled: drains happen outside the
@@ -105,8 +134,19 @@ class CoalescingScheduler:
     must not shrink every group's window below its own refill rate.  The
     injectable ``clock`` keeps the EMA deterministic in tests.
 
+    **Resilience** (``resilience=True``, the default): drains run through
+    the degradation ladder (fused → many → serial → interp) with circuit
+    breakers and deadlines; pass a
+    :class:`~repro.resilience.ladder.ResilienceConfig` to tune retries /
+    breaker thresholds, or ``False`` for the bare single-tier drains.
+    ``default_timeout_s`` gives every ticket a deadline unless its
+    ``submit`` overrides one.
+
     Stats (``self.stats``): submitted, batches, drained, flush reasons,
-    fused_batches / fused_statements.
+    fused_batches / fused_statements, plus — under resilience — the ladder
+    counters (``demote_*``, ``tier_*_ok``, ``deadline_shed``,
+    ``breaker_open_skips``, ``retry_backoffs``, ``ladder_exhausted``).
+    ``resilience_stats`` bundles those with per-breaker state snapshots.
     """
 
     def __init__(self, max_batch: int | None = None,
@@ -115,7 +155,10 @@ class CoalescingScheduler:
                  fuse: bool = False,
                  adaptive: bool = False,
                  adaptive_alpha: float = 0.2,
-                 adaptive_hold: float = 4.0):
+                 adaptive_hold: float = 4.0,
+                 resilience: "ResilienceConfig | bool" = True,
+                 default_timeout_s: float | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
         self.max_batch = max_batch
         self.window_s = window_s
         self.clock = clock
@@ -123,6 +166,7 @@ class CoalescingScheduler:
         self.adaptive = adaptive
         self.adaptive_alpha = adaptive_alpha
         self.adaptive_hold = adaptive_hold
+        self.default_timeout_s = default_timeout_s
         # id(stmt) -> (last arrival, EMA gap | None); bounded by the
         # statement population (sessions cap prepared handles)
         self._arrivals: dict[int, tuple[float, float | None]] = {}
@@ -137,6 +181,22 @@ class CoalescingScheduler:
             "fused_batches": 0, "fused_statements": 0,
             "fused_isolated_retries": 0, "fused_isolated_errors": 0,
         }
+        self.ladder: DegradationLadder | None = None
+        if resilience:
+            cfg = resilience if isinstance(resilience, ResilienceConfig) \
+                else None
+            # ladder counters land in self.stats so demotions/sheds read
+            # next to the drain counters clients already watch
+            self.ladder = DegradationLadder(cfg, clock=clock, sleep=sleep,
+                                            counters=self.stats)
+            self.stats.update({
+                "deadline_shed": 0, "breaker_open_skips": 0,
+                "retry_backoffs": 0, "ladder_exhausted": 0,
+                "demote_fused_to_many": 0, "demote_many_to_serial": 0,
+                "demote_serial_to_interp": 0,
+                "tier_fused_ok": 0, "tier_many_ok": 0,
+                "tier_serial_ok": 0, "tier_interp_ok": 0,
+            })
 
     # -- knob resolution ----------------------------------------------------
     def _max_batch(self, stmt: PreparedStatement) -> int:
@@ -175,21 +235,37 @@ class CoalescingScheduler:
             ema = gap if ema is None else a * gap + (1.0 - a) * ema
         self._arrivals[id(stmt)] = (now, ema)
 
+    @property
+    def resilience_stats(self) -> dict | None:
+        """Ladder counters + per-``(statement, tier)`` breaker snapshot
+        (state and opened/reopened/restored/probes/rejected counts); None
+        when resilience is off."""
+        return None if self.ladder is None else self.ladder.snapshot()
+
     # -- public API ----------------------------------------------------------
-    def submit(self, stmt: PreparedStatement, params: dict | None = None) -> Ticket:
+    def submit(self, stmt: PreparedStatement, params: dict | None = None,
+               timeout_s: float | None = None) -> Ticket:
         """Queue one execution of ``stmt``; returns its :class:`Ticket`.
-        May drain (this or another) batch if a flush condition trips."""
+        May drain (this or another) batch if a flush condition trips.
+        ``timeout_s`` (default: the scheduler's ``default_timeout_s``)
+        gives the ticket an absolute deadline; a ticket still undrained
+        when it expires is shed with
+        :class:`~repro.resilience.faults.DeadlineExceeded` instead of
+        executed (shed-before-drain)."""
         to_drain: list[_Group] = []
         with self._lock:
             self.stats["submitted"] += 1
             now = self.clock()
             self._observe_arrival_locked(stmt, now)
+            t_s = timeout_s if timeout_s is not None else self.default_timeout_s
+            deadline = (now + t_s) if t_s is not None else None
             g = self._groups.get(id(stmt))
             if g is None:
                 g = _Group(stmt, now)
                 self._groups[id(stmt)] = g
-            t = Ticket(self, g)
+            t = Ticket(self, g, deadline)
             g.params.append(dict(params) if params else {})
+            g.deadlines.append(deadline)
             g.tickets.append(t)
             if len(g.params) >= self._max_batch(stmt):
                 self.stats["flush_full"] += 1
@@ -246,18 +322,59 @@ class CoalescingScheduler:
                 return  # already drained by another path
             self._groups.pop(id(group.stmt), None)
             self.stats["flush_forced"] += 1
-        self._drain(group)
+        self._drain_all([group])
 
     def _drain_all(self, groups: list[_Group]) -> None:
-        """Drain a set of batches that tripped together: one fused wave
-        when fusion drain mode is on and the wave is mixed-statement,
-        else one per-statement drain each."""
+        """Drain a set of batches that tripped together: through the
+        degradation ladder under resilience (one fused wave when fusion
+        drain mode is on and the wave is mixed-statement, demoting on
+        failure), else the bare single-tier drains."""
+        if not groups:
+            return
+        if self.ladder is not None:
+            self._drain_ladder(groups)
+            return
         if self.fuse and len(groups) >= 2:
             self._drain_fused(groups)
             return
         for g in groups:
             self._drain(g)
 
+    def _drain_ladder(self, groups: list[_Group]) -> None:
+        """Ladder-backed drain: hand the wave to the resilience layer,
+        then map every WorkItem outcome onto its ticket.  The ladder
+        resolves every item with a result or a typed/raw error; an
+        interrupt (BaseException) mid-ladder parks a diagnostic on the
+        still-unresolved tickets and re-raises."""
+        wave = [
+            WaveGroup(g.stmt, [WorkItem(p, deadline=d)
+                               for p, d in zip(g.params, g.deadlines)])
+            for g in groups
+        ]
+        try:
+            self.ladder.drain(wave, fuse=self.fuse, lock=self._drain_lock)
+        except BaseException as e:
+            for g, wg in zip(groups, wave):
+                for t, it in zip(g.tickets, wg.items):
+                    if it.error is not None:
+                        t._error = it.error
+                    elif it.result is not _UNSET:
+                        t._result = it.result
+                    else:
+                        t._error = e
+            raise
+        else:
+            for g, wg in zip(groups, wave):
+                for t, it in zip(g.tickets, wg.items):
+                    if it.error is not None:
+                        t._error = it.error
+                    else:
+                        t._result = it.result
+        finally:
+            for g in groups:
+                g.done_evt.set()
+
+    # -- bare drains (resilience=False) --------------------------------------
     def _drain_fused(self, groups: list[_Group]) -> None:
         """Mixed-statement drain through ``Session.execute_fused``, with
         **per-group error isolation**: when the fused wave fails (one
@@ -276,6 +393,11 @@ class CoalescingScheduler:
                 # execute_fused routes foreign-session / non-fusable
                 # statements back to their own per-statement path
                 results = groups[0].stmt.session.execute_fused(calls)
+            if len(results) != len(calls):
+                # a protocol violation must fail the wave with a typed
+                # error, not leak StopIteration from the zip below
+                raise WaveResultMismatch(len(calls), len(results),
+                                         "execute_fused")
             it = iter(results)
             for g in groups:
                 for t in g.tickets:
@@ -289,6 +411,9 @@ class CoalescingScheduler:
                     try:
                         with self._drain_lock:
                             rs = g.stmt.execute_many(g.params)
+                        if len(rs) != len(g.tickets):
+                            raise WaveResultMismatch(len(g.tickets), len(rs),
+                                                     "execute_many")
                         for t, r in zip(g.tickets, rs):
                             t._result = r
                     except Exception as e:
@@ -298,7 +423,7 @@ class CoalescingScheduler:
             except BaseException as e:  # interrupt mid-retry: park a
                 for g in groups:        # diagnostic on every unfilled
                     for t in g.tickets:  # ticket, let the interrupt rise
-                        if t._result is None and t._error is None:
+                        if t._result is _UNSET and t._error is None:
                             t._error = e
                 raise
         except BaseException as e:  # KeyboardInterrupt/SystemExit: park a
@@ -316,6 +441,9 @@ class CoalescingScheduler:
         try:
             with self._drain_lock:
                 results = group.stmt.execute_many(group.params)
+            if len(results) != len(group.tickets):
+                raise WaveResultMismatch(len(group.tickets), len(results),
+                                         "execute_many")
             for t, r in zip(group.tickets, results):
                 t._result = r
         except Exception as e:  # fan the failure out to every waiter

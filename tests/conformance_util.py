@@ -465,6 +465,107 @@ def check_loop_oracle(body: str, guard_cap, break_cap, seed: int,
             assert_rows_equal(s, b, f"loop[{body}] {label}[{i}] vs serial")
 
 
+# --------------------------------------------------------------------------
+# chaos oracle (ISSUE-7: resilience layer) — under ANY injected fault
+# schedule, every ticket gets either the fault-free oracle's answer or an
+# explicit typed error; never wrong data, never a hung ticket
+# --------------------------------------------------------------------------
+
+
+def check_chaos_oracle(seed: int, n_rows: int, fault_specs=(), *,
+                       chaos_seed: int | None = None, rate: float = 0.3,
+                       sites=("compile", "dispatch", "sync"),
+                       max_faults: int | None = None,
+                       policy=None, calls_spec=None, queries=None,
+                       timeout_s: float | None = None, clock=None,
+                       resilience=None) -> dict:
+    """The resilience layer's conformance contract, differentially.
+
+    Two same-seed sessions: the **oracle** session executes every call of
+    the mixed-statement queue serially, fault-free; the **chaos** session
+    gets a :class:`~repro.resilience.faults.FaultInjector` installed
+    (explicit ``fault_specs``, or the seeded deterministic schedule when
+    ``chaos_seed`` is given) and drains the same queue through a
+    fusion-mode resilient scheduler.  Then, for every ticket:
+
+    * it is ``done()`` after the flush — no hung ticket, ever;
+    * ``result()`` either equals the oracle's answer element-wise
+      (``assert_rows_equal``) or raises a typed
+      :class:`~repro.resilience.faults.ResilienceError` — never silently
+      wrong data, never an untyped internal error.
+
+    When the injected sites exclude ``interp`` and no deadline is set,
+    every ticket must carry the oracle answer (the INTERPRETED floor of
+    the ladder is fault-free, and the mode oracle guarantees it agrees).
+    Returns ``{"outcomes", "stats", "resilience", "injector"}`` for extra
+    caller assertions (demotion counters, breaker transitions, fired
+    faults)."""
+    from repro.core import FROID
+    from repro.resilience import FaultInjector, ResilienceError
+    from repro.serve.scheduler import CoalescingScheduler
+
+    policy = policy if policy is not None else FROID
+    qs = queries if queries is not None else fusion_queries()
+    spec = calls_spec if calls_spec is not None else fusion_calls_spec()
+
+    # fault-free oracle: the serial execute loop on its own session
+    oracle = make_session(seed, n_rows)
+    oracle.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    o_stmts = [oracle.prepare(q, policy) for q in qs]
+    expected = [o_stmts[i].execute(params=p) for i, p in spec]
+
+    # chaos run: same data, injector installed, resilient fused drain
+    db = make_session(seed, n_rows)
+    db.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    stmts = [db.prepare(q, policy) for q in qs]
+    if chaos_seed is not None:
+        fi = FaultInjector.seeded(chaos_seed, rate, sites=sites,
+                                  max_faults=max_faults)
+        fi.specs = list(fault_specs)
+    else:
+        fi = FaultInjector(fault_specs)
+    fi.install(db)
+    kwargs = {} if resilience is None else {"resilience": resilience}
+    if clock is not None:
+        kwargs["clock"] = clock
+    sched = CoalescingScheduler(max_batch=256, window_s=10.0, fuse=True,
+                                default_timeout_s=timeout_s,
+                                sleep=lambda s: None, **kwargs)
+    tickets = [sched.submit(stmts[i], p) for i, p in spec]
+    sched.flush()
+
+    outcomes = []
+    interp_faultable = "interp" in sites or any(
+        getattr(s, "site", None) in ("interp", "*") for s in fault_specs)
+    for j, t in enumerate(tickets):
+        assert t.done(), f"chaos: ticket[{j}] not done after flush (hang)"
+        try:
+            r = t.result()
+        except ResilienceError as e:
+            outcomes.append(("error", e))
+            continue
+        except BaseException as e:  # untyped escape = contract violation
+            raise AssertionError(
+                f"chaos: ticket[{j}] raised untyped {type(e).__name__}: {e}"
+            ) from e
+        assert_rows_equal(expected[j], r, f"chaos[{j}] vs fault-free oracle")
+        outcomes.append(("ok", r))
+    if not interp_faultable and timeout_s is None:
+        bad = [j for j, (kind, _) in enumerate(outcomes) if kind != "ok"]
+        assert not bad, (
+            f"chaos: tickets {bad} errored though the interp floor was "
+            f"fault-free and no deadline was set"
+        )
+    return {
+        "outcomes": outcomes,
+        "stats": dict(sched.stats),
+        "resilience": sched.resilience_stats,
+        "injector": fi,
+    }
+
+
 def check_invocation_oracle(ops, seed: int, n_rows: int,
                             params_list: list[dict]) -> None:
     """execute_many (unsharded, sharded, hekaton) == serial execute loop."""

@@ -41,6 +41,7 @@ from conformance_util import (
     OVERLAP_FILTERS,
     OVERLAP_PNAMES,
     build_udf,
+    check_chaos_oracle,
     check_fusion_oracle,
     check_invocation_oracle,
     check_loop_oracle,
@@ -334,3 +335,41 @@ def test_fusion_queue_equals_serial_loop_oracle(specs, values, seed, n_rows,
         policy = FROID if policy_kind == "froid" else HEKATON
     check_fusion_oracle(seed, n_rows, policy, calls, queries=queries,
                         ddl=ddl, expect_fused="auto")
+
+
+# --------------------------------------------------------------------------
+# chaos oracle, generative layer (ISSUE-7): random seeded fault schedules
+# through the same check the fixed suite (tests/test_resilience.py) drives
+# --------------------------------------------------------------------------
+
+#: which executor seams a schedule may fault; every combination keeps the
+#: oracle's contract, but only schedules excluding "interp" must end with
+#: every ticket carrying the fault-free answer (the ladder's floor)
+_chaos_sites = st.sampled_from([
+    ("compile",),
+    ("dispatch",),
+    ("sync",),
+    ("compile", "dispatch"),
+    ("dispatch", "sync"),
+    ("compile", "dispatch", "sync"),
+    ("compile", "dispatch", "sync", "interp"),
+])
+
+
+@settings(max_examples=40, **ORACLE_SETTINGS)
+@given(chaos_seed=st.integers(0, 10**6),
+       rate=st.floats(0.05, 0.8),
+       sites=_chaos_sites,
+       seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]),
+       max_faults=st.one_of(st.none(), st.integers(1, 6)))
+def test_chaos_oracle_random_fault_schedules(chaos_seed, rate, sites, seed,
+                                             n_rows, max_faults):
+    """Chaos oracle, generative layer: under ANY seeded deterministic
+    fault schedule — any seam subset, any rate, bounded or unbounded —
+    every ticket of a fused mixed-statement drain gets either the
+    fault-free oracle's answer or an explicit typed error; never wrong
+    data, never a hung ticket.  Schedules that spare the interp floor
+    must recover every ticket (asserted inside the check)."""
+    check_chaos_oracle(seed, n_rows, chaos_seed=chaos_seed, rate=rate,
+                       sites=sites, max_faults=max_faults)
