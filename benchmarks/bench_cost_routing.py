@@ -1,0 +1,315 @@
+"""Cost-based routing: routed drains vs the static configurations they
+choose between, routing bookkeeping overhead on a cache-resident path,
+and the CSE d-bucketing bugfix's compile-churn / padded-pool trade.
+
+    PYTHONPATH=src python -m benchmarks.bench_cost_routing [--quick]
+
+Rows:
+    routing/static_fused/<n>    — FROID statements, scheduler fuse=True
+    routing/static_unfused/<n>  — FROID statements, scheduler fuse=False
+    routing/routed/<n>          — ROUTED statements, router picks per wave
+    routing/overhead/<k>        — ROUTED vs FROID execute_many, cache-resident
+    routing/cse_exact_d/<n>     — drifting-d fused waves, exact pools
+    routing/cse_bucketed_d/<n>  — same waves, power-of-two d-bucketing
+    routing/cse_padded_wave/<n> — steady-state padded-pool wave overhead
+
+The routed row's `derived` carries ``routed_vs_best`` / ``routed_vs_worst``
+(routed time over the best / worst static arm) and ``host_cpus`` — the CI
+gate is host-aware: routed must stay within 5% of the best static arm
+everywhere, and must beat the worst static arm only on >= 8-CPU hosts
+(on 1-2 cores the fused/unfused gap drowns in noise).  The overhead row's
+``overhead`` ratio gates <= 1.05: per-wave routing is dictionary
+bookkeeping, not device work.  The cse rows carry ``recompiles`` (the
+d-churn the bucketing removes) and ``padded_overhead`` (what the padded
+pool slots cost at a fixed d).  Parity is asserted in-bench on every arm.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (
+    FROID,
+    ROUTED,
+    Session,
+    UdfBuilder,
+    col,
+    lit,
+    param,
+    scan,
+    sum_,
+    udf,
+    var,
+)
+from repro.core.frontend import scalar_subquery
+from repro.serve.scheduler import CoalescingScheduler
+
+M_ROWS, N_T, PER_STMT, MANY_K = 20_000, 2_000, 48, 128
+M_ROWS_QUICK, N_T_QUICK, PER_STMT_QUICK, MANY_K_QUICK = 5_000, 500, 16, 64
+
+
+def _setup(quick: bool) -> Session:
+    m = M_ROWS_QUICK if quick else M_ROWS
+    n = N_T_QUICK if quick else N_T
+    db = Session()
+    rng = np.random.default_rng(0)
+    db.create_table(
+        "detail",
+        d_key=rng.integers(0, 400, m),
+        d_val=rng.uniform(0, 100, m).astype(np.float32),
+    )
+    db.create_table("T", a=rng.integers(0, 400, n))
+    u = UdfBuilder("key_total", [("k", "int32")], "float32")
+    u.declare("s", "float32")
+    u.select({"s": sum_(col("d_val"))}, frm=scan("detail"),
+             where=col("d_key") == param("k"))
+    with u.if_(var("s").is_null()):
+        u.return_(lit(0.0))
+    u.return_(var("s"))
+    db.create_function(u.build())
+    return db
+
+
+def _queries():
+    return [
+        scan("T").filter(col("a") < param("cutoff"))
+                 .compute(v=udf("key_total", col("a")))
+                 .project("v"),
+        scan("T").filter(col("a") >= param("lo"))
+                 .compute(w=col("a") * param("scale"))
+                 .project("a", "w"),
+        scan("T").filter((col("a") > param("lo")) & (col("a") < param("hi")))
+                 .compute(z=col("a") + param("off"))
+                 .project("z"),
+    ]
+
+
+def _queue(stmts, per_stmt: int):
+    rng = np.random.default_rng(7)
+    waves = []
+    for _ in range(per_stmt):
+        waves.append((stmts[0], {"cutoff": int(rng.integers(1, 400))}))
+        waves.append((stmts[1], {"lo": int(rng.integers(0, 200)),
+                                 "scale": float(round(rng.uniform(0.5, 2), 2))}))
+        waves.append((stmts[2], {"lo": int(rng.integers(0, 100)),
+                                 "hi": int(rng.integers(200, 400)),
+                                 "off": int(rng.integers(0, 10))}))
+    return waves
+
+
+def _drain(sched, queue):
+    tickets = [sched.submit(s, p) for s, p in queue]
+    sched.flush()
+    return [t.result().masked for t in tickets]
+
+
+def _check_identical(expected, got):
+    for s, b in zip(expected, got):
+        m = np.asarray(s.mask)
+        np.testing.assert_array_equal(m, np.asarray(b.mask))
+        for n, c in s.table.columns.items():
+            np.testing.assert_allclose(
+                np.asarray(b.table.columns[n].data)[m],
+                np.asarray(c.data)[m], rtol=1e-5,
+            )
+
+
+def _static_time(db, queue, *, fuse: bool, iters: int = 5):
+    # best-of-N: the ratio gates compare identical repeated work, and min
+    # is the noise-robust estimator for that (median still moves ~10% on
+    # a busy 1-CPU host)
+    ts, got = [], None
+    for _ in range(iters):
+        sched = CoalescingScheduler(max_batch=1024, window_s=10.0, fuse=fuse)
+        t0 = time.perf_counter()
+        got = _drain(sched, queue)
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts)), got
+
+
+def _tmpl_q(pname: str, out: str):
+    inner = (scan("detail").filter(col("d_val") > param(pname))
+             .agg(s=sum_(col("d_val"))))
+    return (scan("T")
+            .compute(**{out: scalar_subquery(inner.node, "s")
+                        + col("a") * 0.0})
+            .project("a", out))
+
+
+def _cse_wave(s1, s2, d: int, tickets_per: int = 6):
+    """One fused wave with exactly ``d`` distinct template bindings and a
+    fixed per-member ticket count (constant batch buckets, so the fused
+    cache key varies only through the pool size)."""
+    vals = [float(v) for v in range(d)]
+    calls = []
+    for t in range(tickets_per):
+        calls.append((s1, {"x": vals[t % d] if t < d else vals[0]}))
+    for t in range(tickets_per):
+        j = tickets_per + t
+        calls.append((s2, {"y": vals[j % d] if j < d else vals[0]}))
+    return calls
+
+
+def _cse_arm(quick: bool, exact_threshold: int | None, d_list):
+    """Drain one fused wave per ``d`` in ``d_list`` on a fresh session,
+    cold — compile churn included, which is the point: exact pools pay a
+    fused recompile for every new distinct-binding count, bucketed pools
+    pay one per power-of-two bucket.  Returns (seconds, recompiles, db,
+    s1, s2)."""
+    from repro.core import session as sess_mod
+
+    db = _setup(quick)
+    saved = sess_mod.CSE_EXACT_D
+    if exact_threshold is not None:
+        sess_mod.CSE_EXACT_D = exact_threshold
+    try:
+        s1 = db.prepare(_tmpl_q("x", "v1"), FROID)
+        s2 = db.prepare(_tmpl_q("y", "v2"), FROID)
+        misses0 = db.cache_stats["fuse_misses"]
+        t0 = time.perf_counter()
+        for d in d_list:
+            db.execute_fused(_cse_wave(s1, s2, d, tickets_per=8))
+        t = time.perf_counter() - t0
+        recompiles = db.cache_stats["fuse_misses"] - misses0
+        return t, recompiles, db, s1, s2
+    finally:
+        sess_mod.CSE_EXACT_D = saved
+
+
+def run(quick: bool = False):
+    db = _setup(quick)
+    per_stmt = PER_STMT_QUICK if quick else PER_STMT
+    qs = _queries()
+    froid_stmts = [db.prepare(q, FROID) for q in qs]
+    queue = _queue(froid_stmts, per_stmt)
+    n = len(queue)
+
+    # warm both static arms' device programs
+    _, ref = _static_time(db, queue, fuse=True, iters=1)
+    _static_time(db, queue, fuse=False, iters=1)
+
+    # routed arm: one scheduler + session-attached router across drains so
+    # measurements accrue; the first drains explore both arms, then the
+    # measured winner sticks (hysteresis) — time the steady state.  The
+    # three arms are timed in interleaved rounds (static-fused,
+    # static-unfused, routed per round, best-of over rounds) so host load
+    # drift hits all of them equally instead of whichever ran last.
+    routed_stmts = [db.prepare(q, ROUTED) for q in qs]
+    routed_queue = [(routed_stmts[froid_stmts.index(s)], p)
+                    for s, p in queue]
+    sched = CoalescingScheduler(max_batch=1024, window_s=10.0, fuse=True)
+    for _ in range(3):  # exploration: fused arm, unfused arm, first verdict
+        got_r = _drain(sched, routed_queue)
+        _check_identical(ref, got_r)
+    ts_f, ts_u, ts_r = [], [], []
+    for _ in range(5):
+        t, got_f = _static_time(db, queue, fuse=True, iters=1)
+        ts_f.append(t)
+        t, got_u = _static_time(db, queue, fuse=False, iters=1)
+        ts_u.append(t)
+        t0 = time.perf_counter()
+        got_r = _drain(sched, routed_queue)
+        ts_r.append(time.perf_counter() - t0)
+    _check_identical(ref, got_f)
+    _check_identical(ref, got_u)
+    _check_identical(ref, got_r)
+    t_fused, t_unfused = float(np.min(ts_f)), float(np.min(ts_u))
+    emit(f"routing/static_fused/{n}", t_fused / n * 1e6,
+         "static FROID, scheduler fuse=True")
+    emit(f"routing/static_unfused/{n}", t_unfused / n * 1e6,
+         "static FROID, scheduler fuse=False")
+    t_routed = float(np.min(ts_r))
+    # gate ratios are the median of per-round ratios: a load spike hits
+    # one round's triple, not the aggregate
+    vs_best = float(np.median([r / min(f, u) for f, u, r
+                               in zip(ts_f, ts_u, ts_r)]))
+    vs_worst = float(np.median([r / max(f, u) for f, u, r
+                                in zip(ts_f, ts_u, ts_r)]))
+    cs = db.cost_stats
+    emit(
+        f"routing/routed/{n}", t_routed / n * 1e6,
+        f"routed_vs_best={vs_best:.4f} "
+        f"routed_vs_worst={vs_worst:.4f} "
+        f"host_cpus={os.cpu_count()} "
+        f"waves_fused={cs['waves_fused']} waves_unfused={cs['waves_unfused']} "
+        f"decisions={cs['decisions']} parity=ok",
+    )
+
+    # routing overhead: cache-resident execute_many, static vs routed —
+    # the delta is pure router bookkeeping (choose_policy + choose_bucket)
+    k = MANY_K_QUICK if quick else MANY_K
+    params = [{"lo": int(i % 200), "scale": 1.5} for i in range(k)]
+    s_static = froid_stmts[1]
+    s_routed = routed_stmts[1]
+    s_static.execute_many(params)  # warm the bucket
+    s_routed.execute_many(params)
+
+    # interleaved A/B pairs, best-of each: the delta under test is pure
+    # host-side bookkeeping, so drift between two back-to-back blocks
+    # would otherwise dominate the ratio
+    ts_s, ts_r = [], []
+    rs_s = rs_r = None
+    for _ in range(15):
+        t0 = time.perf_counter()
+        rs_s = s_static.execute_many(params)
+        ts_s.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        rs_r = s_routed.execute_many(params)
+        ts_r.append(time.perf_counter() - t0)
+    t_s, t_r = float(np.min(ts_s)), float(np.min(ts_r))
+    overhead = float(np.median([r / s for s, r in zip(ts_s, ts_r)]))
+    _check_identical([r.masked for r in rs_s], [r.masked for r in rs_r])
+    emit(f"routing/overhead/{k}", t_r / k * 1e6,
+         f"overhead={overhead:.4f} static_us={t_s / k * 1e6:.1f} parity=ok")
+
+    # CSE d-bucketing: a drifting distinct-binding count (9, 10, 11, …).
+    # Exact pools compile a fresh fused program for every new d; bucketed
+    # pools ride one padded 16-slot program for the whole drift
+    d_list = tuple(range(9, 15 if quick else 17))
+    n_waves = len(d_list)
+    t_exact, rec_exact, *_ = _cse_arm(quick, 1 << 20, d_list)
+    emit(f"routing/cse_exact_d/{n_waves}", t_exact / n_waves * 1e6,
+         f"recompiles={rec_exact} d_drift={list(d_list)}")
+    t_bucket, rec_bucket, bdb, b1, b2 = _cse_arm(quick, None, d_list)
+    emit(f"routing/cse_bucketed_d/{n_waves}", t_bucket / n_waves * 1e6,
+         f"recompiles={rec_bucket} d_drift={list(d_list)} "
+         f"churn_speedup={t_exact / t_bucket:.2f}")
+    assert rec_exact == n_waves, (rec_exact, n_waves)  # one compile per d
+    assert rec_bucket == 1, rec_bucket  # one 16-slot program for the drift
+
+    # padded-pool overhead at a fixed d: the bucketed program evaluates 16
+    # pool slots where the exact one evaluates 9 — measure what the
+    # padding costs per wave (parity asserted against serial)
+    wave9 = _cse_wave(b1, b2, 9, tickets_per=8)
+    _, _, edb, e1, e2 = _cse_arm(quick, 1 << 20, (9,))
+    ewave9 = _cse_wave(e1, e2, 9, tickets_per=8)
+
+    def _wave_time(sess, wave, iters=5):
+        ts, rs = [], None
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            rs = sess.execute_fused(wave)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), rs
+
+    t_pad, rs_pad = _wave_time(bdb, wave9)
+    t_ex, _ = _wave_time(edb, ewave9)
+    serial = [s.execute(params=p).masked for s, p in wave9]
+    _check_identical(serial, [r.masked for r in rs_pad])
+    assert rs_pad[0].stats["cse_pool_slots"] == 16
+    assert rs_pad[0].stats["cse_bindings"] == 9
+    emit(f"routing/cse_padded_wave/{len(wave9)}", t_pad / len(wave9) * 1e6,
+         f"padded_overhead={t_pad / t_ex:.4f} pool_slots=16 bindings=9 "
+         f"parity=ok")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

@@ -44,7 +44,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
                          "table5,prepared,execmany,shardmany,fused,"
-                         "cursorloop,resilience")
+                         "cursorloop,resilience,routing")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -56,6 +56,7 @@ def main() -> None:
     from benchmarks import (
         bench_batchmode,
         bench_compile,
+        bench_cost_routing,
         bench_cursor_loops,
         bench_execute_many,
         bench_factor,
@@ -84,6 +85,7 @@ def main() -> None:
         "fused": bench_fused.run,          # multi-statement fusion
         "cursorloop": bench_cursor_loops.run,  # loop-to-scan rewrite
         "resilience": bench_resilience.run,  # ladder overhead + demotions
+        "routing": bench_cost_routing.run,  # cost-based routing + d-bucketing
     }
     only = args.only.split(",") if args.only else list(suites)
 

@@ -1,0 +1,110 @@
+"""Cost-routing walkthrough: static estimates → measured wave costs →
+the router picking the cheapest configuration, all observable through
+``Session.cost_stats``.
+
+    PYTHONPATH=src python examples/cost_routing.py
+
+The PR-8 Cobra-style routing layer in four acts:
+
+  1. Opt in with the ``ROUTED`` preset (or ``policy.routed()``): before
+     anything is measured the router falls back to the static cost
+     model — estimates per candidate policy, exploration only on a
+     clear estimated win.
+  2. First waves train the model: every ``execute_many`` chunk, serial
+     execute and fused drain feeds an EMA of measured wave seconds into
+     the router; ``cost_stats`` shows the measured configurations and
+     the decision log.
+  3. The fuse axis: a mixed-statement drain explores the fused arm,
+     then the unfused arm, then locks the measured winner (with
+     hysteresis — near-tie arms don't flip-flop on noise).
+  4. The bucket axis: a ragged batch rides an already-warm larger
+     bucket instead of cold-compiling its natural one whenever the
+     measured warm cost undercuts the estimated compile+run cost.
+
+Samples observed while the resilience ladder is degrading a wave or a
+breaker is open are excluded automatically — fault-time costs never
+train the model.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import FROID, ROUTED, Session, col, param, scan
+from repro.serve.scheduler import CoalescingScheduler
+
+
+def fresh(n=512):
+    db = Session()
+    rng = np.random.default_rng(7)
+    db.create_table("T", a=rng.integers(0, 200, n))
+    q1 = (scan("T").filter(col("a") >= param("lo"))
+          .compute(w=col("a") * param("scale")).project("a", "w"))
+    q2 = scan("T").compute(y=col("a") + param("off")).project("a", "y")
+    return db, db.prepare(q1, ROUTED), db.prepare(q2, ROUTED)
+
+
+# ---------------------------------------------------------------- act 1
+print("== act 1: ROUTED preset, estimates before measurements ==")
+db, s1, s2 = fresh()
+print(f"  ROUTED is FROID + route flag: {ROUTED.name}, "
+      f"same plan fingerprint: "
+      f"{ROUTED.fingerprint() == FROID.fingerprint()}")
+r = db._ensure_router()
+cands = r._policy_candidates(s1)
+for cand, _ in cands:
+    print(f"  estimate[{cand.name}] = "
+          f"{r.estimate_policy_s(s1, cand):.2e} s")
+res = s1.execute(params={"lo": 50, "scale": 2.0})
+print(f"  first execute routed fine: {res.table.num_rows} rows, "
+      f"cost_stats['samples']={db.cost_stats['samples']}")
+
+# ---------------------------------------------------------------- act 2
+print("== act 2: waves train the measured model ==")
+for wave in range(3):
+    s1.execute_many([{"lo": i % 40, "scale": 1.5} for i in range(16)])
+cs = db.cost_stats
+print(f"  samples={cs['samples']}, measured configs:")
+for label, rec in cs["measured"].items():
+    print(f"    {label}: wave_s={rec['wave_s']:.2e} (n={rec['n']})")
+
+# ---------------------------------------------------------------- act 3
+print("== act 3: fuse axis — explore both arms, lock the winner ==")
+db, s1, s2 = fresh()
+sched = CoalescingScheduler(max_batch=64, window_s=1e9, fuse=True)
+for wave in range(4):
+    tickets = [sched.submit(s1, {"lo": 10 + i, "scale": 1.5})
+               for i in range(4)]
+    tickets += [sched.submit(s2, {"off": 3 + i}) for i in range(4)]
+    sched.flush()
+    assert all(t.done() and t.result() is not None for t in tickets)
+cs = db.cost_stats
+fuse_log = [d for d in cs["decision_log"] if d["axis"] == "fuse"]
+for d in fuse_log:
+    print(f"  wave verdict: fuse={d['choice']} ({d['why']})")
+print(f"  waves_fused={cs['waves_fused']}, "
+      f"waves_unfused={cs['waves_unfused']}")
+
+# ---------------------------------------------------------------- act 4
+print("== act 4: bucket axis — ride a warm bucket ==")
+db, s1, _ = fresh()
+# warm the 8-bucket organically (several waves — the first wave's EMA
+# carries the compile cost and decays 0.6x per wave), then offer a
+# ragged 3-ticket batch: its natural bucket is 4, but riding the warm 8
+# beats cold-compiling 4 once the measurement says so.
+for w in range(8):
+    s1.execute_many([{"lo": i + w, "scale": 1.0} for i in range(8)])
+got = s1.execute_many([{"lo": i, "scale": 1.0} for i in range(3)])
+cs = db.cost_stats
+rides = [d for d in cs["decision_log"] if d["axis"] == "bucket"]
+print(f"  3-ticket batch ran in bucket "
+      f"{got[0].stats['batch_bucket']} "
+      f"(bucket_rides={cs['bucket_rides']})")
+if rides:
+    d = rides[-1]
+    print(f"  decision: natural={d['natural']} -> rode {d['choice']} "
+          f"(warm {d['warm_wave_s']:.2e}s vs cold est "
+          f"{d['cold_est_s']:.2e}s)")
+else:
+    print("  (cold estimate beat the warm wave here — the ride only "
+          "happens when measurement says it pays)")

@@ -54,6 +54,22 @@ if [ "${VERIFY_RESILIENCE:-1}" != "0" ]; then
       --run-id verify-resilience --json-dir /tmp
 fi
 
+# cost routing: routed-vs-oracle parity tests (plain + forced 8-device
+# mesh for the sharded/fused-sharding regressions) + the routing perf
+# smoke — the CI gates hold routed within the host-aware bars and the
+# cache-resident bookkeeping overhead <= 1.05.  VERIFY_ROUTING=0 skips.
+if [ "${VERIFY_ROUTING:-1}" != "0" ]; then
+  echo "--- cost routing: pytest tests/test_cost_routing.py"
+  python -m pytest -q tests/test_cost_routing.py
+  echo "--- cost routing (8-device mesh): routing + fused-sharding regressions"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_cost_routing.py tests/test_fused.py
+  echo "--- routing perf smoke: benchmarks.run --quick --only routing"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only routing \
+      --run-id verify-routing --json-dir /tmp
+fi
+
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then
   echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

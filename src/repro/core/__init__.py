@@ -12,6 +12,7 @@ from repro.core.policy import (
     HEKATON,
     INTERPRETED,
     PRESETS,
+    ROUTED,
     ExecutionPolicy,
     resolve_policy,
 )
@@ -80,6 +81,6 @@ __all__ = [
     "explain", "optimize",
     # prepare/execute API
     "Session", "PreparedStatement", "QueryResult", "AsyncResult",
-    "ExecutionPolicy", "FROID", "INTERPRETED", "HEKATON", "PRESETS",
+    "ExecutionPolicy", "FROID", "INTERPRETED", "HEKATON", "ROUTED", "PRESETS",
     "resolve_policy", "plan_fingerprint", "param_signature", "batch_bucket",
 ]

@@ -87,6 +87,16 @@ class ExecutionPolicy:
     #: back to the per-statement path)
     max_fused_statements: int = dataclasses.field(default=8, compare=False)
 
+    # -- cost-routing knob (tuning like the rest: never part of plan or
+    # executable identity — the router may *re-prepare* a statement under a
+    # differently-fingerprinted policy, but a routed and an unrouted FROID
+    # statement share every cache tier) ------------------------------------
+    #: let the session's CostRouter steer this statement: FROID/HEKATON
+    #: choice per statement, batch-bucket riding, fuse-or-not per drain
+    #: wave.  Decisions are visible in ``Session.cost_stats``; results are
+    #: guaranteed unchanged (``check_routing_oracle``)
+    route: bool = dataclasses.field(default=False, compare=False)
+
     def __post_init__(self):
         if self.udf_mode not in ("python", "scan"):
             raise ValueError(f"udf_mode must be python|scan, got {self.udf_mode!r}")
@@ -98,11 +108,19 @@ class ExecutionPolicy:
             )
 
     def fingerprint(self) -> tuple:
-        """Hashable identity for plan/executable cache keys (name excluded)."""
-        return (
-            self.inline_udfs, self.udf_mode, self.optimize,
-            self.jit_statements, self.pallas_agg, self.compile_plan,
-        )
+        """Hashable identity for plan/executable cache keys (name excluded).
+
+        Cached on the (frozen) instance: the router compares fingerprints
+        on every routed call, and rebuilding the tuple each time showed up
+        in the cache-resident overhead budget."""
+        fp = self.__dict__.get("_fp")
+        if fp is None:
+            fp = (
+                self.inline_udfs, self.udf_mode, self.optimize,
+                self.jit_statements, self.pallas_agg, self.compile_plan,
+            )
+            object.__setattr__(self, "_fp", fp)
+        return fp
 
     def eager(self) -> "ExecutionPolicy":
         """The same policy with whole-plan compilation off."""
@@ -145,6 +163,12 @@ class ExecutionPolicy:
                                   else max_fused_statements),
         )
 
+    def routed(self, route: bool = True) -> "ExecutionPolicy":
+        """The same policy with cost-based routing toggled."""
+        if route == self.route:
+            return self
+        return dataclasses.replace(self, name=self.name, route=route)
+
     def shard_devices(self) -> int:
         """Data-parallel shard count batched execution may spread over:
         the mesh's data-axis product when sharding is on, else 1."""
@@ -162,10 +186,14 @@ class ExecutionPolicy:
         different device set or shape re-specializes)."""
         if self.shard_devices() <= 1:
             return ()
-        mesh = self.mesh
-        axes = tuple((str(a), int(s)) for a, s in mesh.shape.items())
-        devices = tuple(int(d.id) for d in mesh.devices.flat)
-        return (axes, devices)
+        tok = self.__dict__.get("_shard_tok")
+        if tok is None:
+            mesh = self.mesh
+            axes = tuple((str(a), int(s)) for a, s in mesh.shape.items())
+            devices = tuple(int(d.id) for d in mesh.devices.flat)
+            tok = (axes, devices)
+            object.__setattr__(self, "_shard_tok", tok)
+        return tok
 
     @classmethod
     def from_kwargs(
@@ -199,8 +227,12 @@ INTERPRETED = ExecutionPolicy(
     max_batch=64, allow_async=False,
 )
 HEKATON = ExecutionPolicy(name="hekaton", inline_udfs=False, udf_mode="scan")
+#: FROID knobs + cost-based routing: the session's CostRouter may move the
+#: statement to a cheaper configuration (measured + estimated costs) without
+#: changing results
+ROUTED = dataclasses.replace(FROID, name="routed", route=True)
 
-PRESETS = {p.name: p for p in (FROID, INTERPRETED, HEKATON)}
+PRESETS = {p.name: p for p in (FROID, INTERPRETED, HEKATON, ROUTED)}
 
 
 def resolve_policy(policy) -> ExecutionPolicy:

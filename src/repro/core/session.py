@@ -396,6 +396,30 @@ def batch_bucket(n: int, max_batch: int) -> int:
     return max(1, min(b, max_batch))
 
 
+#: distinct-binding counts at or below this threshold keep exact template
+#: pools; above it the pool pads to the next power of two.  Small pools
+#: re-jit rarely and padding them is pure waste; large growing binding
+#: populations would otherwise re-specialize the fused program once per
+#: distinct d (the CSE d-churn bug) — bucketing bounds that to O(log d).
+#: Benchmarks monkeypatch this to measure both arms (BENCH_pr8 justifies
+#: the cutoff with the padded-pool overhead numbers).
+CSE_EXACT_D = 8
+
+
+def _pool_pad(d: int) -> int:
+    """Template-pool slot count for ``d`` distinct bindings: exact at or
+    below :data:`CSE_EXACT_D`, the next power of two above it.  Padded
+    slots repeat the last real binding and are computed-then-ignored,
+    exactly like batch-bucket padding rows — no ticket's slot index ever
+    references one."""
+    if d <= CSE_EXACT_D:
+        return d
+    b = 1
+    while b < d:
+        b <<= 1
+    return b
+
+
 def _stack_params(params_list: list[dict]) -> dict:
     """Stack same-signature param dicts into one batched argument pytree:
     name -> (data (B, …), valid (B, …)).  Scalars take the numpy fast path
@@ -507,9 +531,11 @@ def _plan_template_groups(merged, members, params_by_member):
     member_tmaps, slot_maps, template_token)`` where ``member_tmaps[i]``
     maps occurrence ``node_id -> group index`` for member ``i``,
     ``slot_maps[i]`` maps ``node_id -> [slot per ticket]``, and
-    ``template_token`` — ``((fp, sig, d), ...)`` in group order — is the
-    template identity the fused cache key incorporates (members arrive
-    canonically sorted, so the token is arrival-order independent)."""
+    ``template_token`` — ``((fp, sig, pool_pad(d)), ...)`` in group order —
+    is the template identity the fused cache key incorporates (members
+    arrive canonically sorted, so the token is arrival-order independent;
+    ``d`` is bucketed by :func:`_pool_pad` so a growing distinct-binding
+    population re-specializes O(log d) times, not per distinct d)."""
     from repro.fuse.merge import CONST_BIND
 
     def hole_value(bind_h, pdict):
@@ -576,7 +602,10 @@ def _plan_template_groups(merged, members, params_by_member):
                 smap[n.node_id] = slots
         member_tmaps.append(tmap)
         slot_maps.append(smap)
-    token = tuple((g.fp, g.sig, len(g.bindings)) for g in groups)
+    # the cache token carries the *padded* pool size: binding counts that
+    # land in the same d-bucket share one fused specialization (the exact
+    # count still rides per-wave as cse_bindings in the stats)
+    token = tuple((g.fp, g.sig, _pool_pad(len(g.bindings))) for g in groups)
     return groups, member_tmaps, slot_maps, token
 
 
@@ -704,6 +733,26 @@ class Session:
         # object with .check(site, statements)) installed by chaos tests;
         # None in production — the seams below are no-ops then
         self.fault_injector = None
+        # cost-routing seam: a repro.cost.CostRouter, created lazily the
+        # first time a routed statement is prepared (None until then — the
+        # sampling seams below are no-ops and unrouted sessions pay nothing)
+        self.cost_router = None
+
+    def _ensure_router(self):
+        if self.cost_router is None:
+            from repro.cost.router import CostRouter
+
+            self.cost_router = CostRouter(self)
+        return self.cost_router
+
+    @property
+    def cost_stats(self) -> dict:
+        """The cost router's view: counters, measured per-configuration
+        wave costs (EMA), and the recent decision log.  ``{"enabled":
+        False}`` until a routed statement has been prepared."""
+        if self.cost_router is None:
+            return {"enabled": False}
+        return self.cost_router.snapshot()
 
     def _fault(self, site: str, statements: tuple = ()) -> None:
         """Fault-injection seam: named executor sites call this with the
@@ -737,11 +786,13 @@ class Session:
         key = (plan_fingerprint(node), policy.fingerprint(),
                policy.max_batch, policy.coalesce_window_s, policy.allow_async,
                policy.max_inflight, policy.shard_batches, policy.shard_token(),
-               policy.fuse, policy.max_fused_statements)
+               policy.fuse, policy.max_fused_statements, policy.route)
         ps = self._prepared.get(key)
         if ps is None:
             ps = PreparedStatement(self, node, policy)
             self._prepared[key] = ps
+        if policy.route:
+            self._ensure_router()
         ps._ensure_plan()  # cold: bind + optimize now
         return ps
 
@@ -1204,16 +1255,30 @@ class Session:
         devices = policy.shard_devices()
         shard = False
         if devices > 1:
-            from repro.dist.sharding import pick_data_axes
+            from repro.dist.sharding import data_axis_size, pick_data_axes
 
-            # one program, one placement: shard only when every batched
-            # member's bucket divides the data axes (else whole program
-            # replicates; parameter-free members are unbatched and always
-            # ride replicated)
-            shard = all(
+            # one program, one placement: shard whenever ANY batched
+            # member's bucket divides the data axes.  A non-dividing
+            # batched member no longer demotes the whole program to
+            # replicated — its bucket pads up to the next multiple of the
+            # data-axis product (padding repeats the last ticket, exactly
+            # like power-of-two bucket padding) so every batched member
+            # shards under one placement.  The cap is max_batch × devices
+            # — itself a multiple of the axis product — so a padded
+            # bucket never exceeds it.  Only when NO batched member
+            # divides (or none is batched) does the program replicate;
+            # parameter-free members are unbatched and always replicate.
+            batched = [m for m in members if m.sig]
+            shard = any(
                 pick_data_axes(policy.mesh, m.bucket) is not None
-                for m in members if m.sig
-            ) and any(m.sig for m in members)
+                for m in batched
+            )
+            if shard:
+                n = data_axis_size(policy.mesh)
+                for m in batched:
+                    if pick_data_axes(policy.mesh, m.bucket) is None:
+                        m.bucket += (-m.bucket) % n
+                        m.key = (m.key[0], m.key[1], m.bucket)
         # cross-statement CSE: plan the template binding pools from the
         # wave's actual ticket values (the merge maps are cached; only the
         # binding dedup runs per wave)
@@ -1252,7 +1317,16 @@ class Session:
                     pargs[slot_param(nid)] = (
                         jnp.asarray(slots[0], jnp.int32), jnp.asarray(True))
                 pargs_tuple.append(pargs)
-        targs_tuple = tuple(_stack_params(g.bindings) for g in groups)
+        # binding pools pad to their d-bucket (repeat the last binding):
+        # the stacked leading axis is what the fused closure specializes
+        # on, so all counts in one bucket share the jitted program; padded
+        # slots are evaluated and never referenced by any ticket's slot
+        targs_tuple = tuple(
+            _stack_params(
+                g.bindings
+                + [g.bindings[-1]] * (_pool_pad(len(g.bindings))
+                                      - len(g.bindings)))
+            for g in groups)
         wave_fps = tuple(m.key[0] for m in members)
         self._fault("dispatch", wave_fps)
         outs = entry.fn(tuple(pargs_tuple), targs_tuple, env_token[0])
@@ -1266,15 +1340,25 @@ class Session:
         # distinct bindings) and the covered-node total
         t_refs = sum(len(s) for smap in slot_maps for s in smap.values())
         t_evals = sum(len(g.bindings) for g in groups)
+        t_slots = sum(_pool_pad(len(g.bindings)) for g in groups)
         m_stats = merged.stats
         # subtrahend is the distinct *maximal* fingerprint count — the pool
         # also holds nested entries, which are not separate evaluations the
-        # per-statement path would have paid
+        # per-statement path would have paid.  Template savings subtract
+        # the *padded* slot count: padded pool slots are real device
+        # evaluations, so counting them as avoided would overstate sharing
         self.cache_stats["cse_hits"] += (
             max(0, m_stats["shared_refs"] - m_stats["shared_maximal_subtrees"])
-            + max(0, t_refs - t_evals)
+            + max(0, t_refs - t_slots)
         )
         self.cache_stats["cse_shared_nodes"] += m_stats["cse_shared_nodes"]
+        n_tickets = sum(len(by_key[k]["idxs"]) for k in order)
+        router = self.cost_router
+        if router is not None:
+            router.observe_fused(
+                wave_fps, elapsed, n_tickets,
+                meta={"cse_bindings": t_evals, "cse_pool_slots": t_slots,
+                      "cse_ticket_refs": t_refs})
         fused_explain = merged.explain()
         for j, (m, k) in enumerate(zip(members, order)):
             ent = by_key[k]
@@ -1289,7 +1373,14 @@ class Session:
                 # ride in from entry.stats via the merge pass)
                 "cse_template_groups": len(groups),
                 "cse_bindings": t_evals,
+                "cse_pool_slots": t_slots,
                 "cse_template_ticket_refs": t_refs,
+                # wave-level figures (dispatch_s/sync_s/cse_*) are COPIED
+                # into every ticket's result in this wave; aggregators
+                # summing across results must divide by wave_tickets or
+                # they double-count the wave (the router samples once at
+                # the seam instead)
+                "wave_tickets": n_tickets,
                 "fused_explain": fused_explain,
             }
             if shard:
@@ -1413,6 +1504,20 @@ class PreparedStatement:
             )
         return interp
 
+    # -- cost routing ------------------------------------------------------
+    def _route_target(self) -> "PreparedStatement":
+        """The statement the cost router currently picks for this routed
+        statement — ``self`` when the incumbent policy wins, else a
+        delegate prepared under the chosen policy.  The delegate's policy
+        has ``route=False`` (one routing decision per call, never a
+        chain), but its samples still train the router — it is the
+        session's router, keyed by policy fingerprint."""
+        router = self.session._ensure_router()
+        pol = router.choose_policy(self)
+        if pol.fingerprint() == self.policy.fingerprint():
+            return self
+        return self.session.prepare(self.node, pol.routed(False))
+
     # -- execution ---------------------------------------------------------
     def __call__(self, params: dict | None = None):
         """Raw call: device outputs only (see class docstring)."""
@@ -1425,6 +1530,10 @@ class PreparedStatement:
         return entry.fn(params, env_token[0])
 
     def execute(self, params: dict | None = None) -> QueryResult:
+        if self.policy.route and self.policy.compile_plan:
+            target = self._route_target()
+            if target is not self:
+                return target.execute(params=params)
         if self.policy.compile_plan:
             return self._execute_compiled(params)
         return self._execute_eager(params)
@@ -1462,6 +1571,10 @@ class PreparedStatement:
         params_list = [dict(p) if p else {} for p in params_list]
         if not params_list:
             return []
+        if self.policy.route and self.policy.compile_plan:
+            target = self._route_target()
+            if target is not self:
+                return target.execute_many(params_list)
         if not self.policy.compile_plan:
             # eager policies have no device program to batch; stay serial
             return [self.execute(params=p) for p in params_list]
@@ -1501,7 +1614,16 @@ class PreparedStatement:
         """Dispatch one chunk (no sync) and append its record to
         ``pending`` for the caller's end-of-call barrier."""
         k = len(plist)
-        bucket = batch_bucket(k, cap if cap is not None else self.policy.max_batch)
+        cap_b = cap if cap is not None else self.policy.max_batch
+        bucket = batch_bucket(k, cap_b)
+        router = self.session.cost_router
+        if router is not None and self.policy.route:
+            # bucket routing: ride an already-measured larger bucket when
+            # that beats cold-compiling the natural one (bucket ≥ k always
+            # holds — rides only go up, and padding repeats the last set)
+            bucket = router.choose_bucket(
+                self, sig, k, bucket, cap_b,
+                shard=self.policy.shard_devices() > 1)
         devices = self.policy.shard_devices()
         shard = False
         if devices > 1:
@@ -1550,7 +1672,7 @@ class PreparedStatement:
             "idxs": idxs, "entry": entry, "hit": hit, "mask": mask,
             "cols": cols, "k": k, "bucket": bucket, "shard": shard,
             "devices": devices, "t0": t0, "dispatch_s": t_dispatch,
-            "synced": False,
+            "synced": False, "sig": sig,
         })
 
     def _finalize_batch(self, rec: dict, results: list,
@@ -1570,10 +1692,19 @@ class PreparedStatement:
             "dispatch_s": rec["dispatch_s"],
             "sync_s": elapsed - rec["dispatch_s"],
             "pipelined_chunks": pipelined,
+            # chunk-level timings are copied into every ticket's result in
+            # this chunk; aggregators summing across results must divide
+            # by wave_tickets or they double-count the chunk
+            "wave_tickets": rec["k"],
         }
         if rec["shard"]:
             stats["sharded"] = True
             stats["shard_devices"] = rec["devices"]
+        router = self.session.cost_router
+        if router is not None:
+            router.observe_many(self._query_fp, self.policy, rec["sig"],
+                                rec["bucket"], elapsed, rec["k"],
+                                shard=rec["shard"])
 
         def materialize(j: int) -> MaskedTable:
             table = Table(
@@ -1603,6 +1734,10 @@ class PreparedStatement:
         on the oldest unsynced one (and ``AsyncResult.result()`` releases
         its slot), so a producer outrunning the device stalls instead of
         queueing unbounded work."""
+        if self.policy.route and self.policy.compile_plan:
+            target = self._route_target()
+            if target is not self:
+                return target.execute_async(params=params)
         if not (self.policy.compile_plan and self.policy.allow_async):
             return AsyncResult(self.execute(params=params))
         self.session._admit_async(self.policy.max_inflight)
@@ -1653,6 +1788,9 @@ class PreparedStatement:
         self.session._fault("sync", (self._query_fp,))
         jax.block_until_ready(mask)
         elapsed = time.perf_counter() - t0
+        router = self.session.cost_router
+        if router is not None:
+            router.observe_serial(self._query_fp, self.policy, elapsed)
         table = Table(
             {n: Column(data, valid, entry.out_dicts.get(n))
              for n, (data, valid) in cols.items()}

@@ -1,0 +1,28 @@
+"""Cost-based routing (Cobra-style): a static cardinality/roofline cost
+model plus an online router that records measured wave costs and steers
+each prepared statement and each drain wave through the cheapest
+configuration — FROID/HEKATON choice, fuse-or-not, fusion-group chunking,
+batch bucket.  The conformance harness (``check_routing_oracle``)
+guarantees routing never changes results, only which path computes them.
+"""
+from repro.cost.model import (
+    COMPILE_S_PER_NODE,
+    DISPATCH_OVERHEAD_S,
+    PlanProfile,
+    estimate_compile_s,
+    estimate_node_s,
+    estimate_plan,
+    estimate_statement_s,
+)
+from repro.cost.router import CostRouter
+
+__all__ = [
+    "COMPILE_S_PER_NODE",
+    "DISPATCH_OVERHEAD_S",
+    "CostRouter",
+    "PlanProfile",
+    "estimate_compile_s",
+    "estimate_node_s",
+    "estimate_plan",
+    "estimate_statement_s",
+]

@@ -27,6 +27,7 @@ from repro.fuse.analysis import (
     fusion_group_key,
     is_fusable,
     partition_calls,
+    shareable_fingerprint_costs,
     shareable_fingerprints,
 )
 from repro.fuse.merge import (
@@ -59,6 +60,7 @@ __all__ = [
     "partition_calls",
     "plan_is_pure",
     "rewrite_params",
+    "shareable_fingerprint_costs",
     "shareable_fingerprints",
     "slot_param",
     "subtree_is_constant",

@@ -82,21 +82,52 @@ def shareable_fingerprints(stmt) -> frozenset:
     return out
 
 
-def _overlap_order(order: list, fp_sets: dict, cap: int) -> list:
+def shareable_fingerprint_costs(session, stmt) -> dict:
+    """``fp -> estimated per-execution seconds`` of each shareable subtree
+    of the statement's plan — the cost model's chunking weight: sharing an
+    aggregate over a big scan saves real work, sharing a literal filter
+    saves almost none, and the greedy splitter should know the
+    difference.  Memoized per plan object like the fingerprint set."""
+    plan = stmt._ensure_plan()
+    cached = getattr(stmt, "_fuse_fpw", None)
+    if cached is not None and cached[0] is plan:
+        return cached[1]
+    from repro.cost.model import estimate_node_s
+
+    weights: dict = {}
+    for n in R.walk_plan_deep(plan):
+        if subtree_shape(n) is not None:
+            fp = parametric_fingerprint(n)[0]
+            if fp not in weights:
+                weights[fp] = estimate_node_s(n, session.catalog)
+    stmt._fuse_fpw = (plan, weights)
+    return weights
+
+
+def _overlap_order(order: list, fp_sets: dict, cap: int,
+                   weights: dict | None = None) -> list:
     """Reorder distinct-statement fingerprints so overlap-sharing
     statements chunk together: greedy — seed each chunk with the earliest
     unplaced statement, then repeatedly pull the unplaced statement with
     the largest fingerprint overlap against the chunk's accumulated set
-    (earliest arrival breaks ties, keeping the result deterministic)."""
+    (earliest arrival breaks ties, keeping the result deterministic).
+    With ``weights`` (fp → estimated seconds), overlap is scored by the
+    estimated work the sharing avoids instead of a bare fingerprint
+    count — two statements sharing one expensive aggregate chunk together
+    ahead of two sharing three trivial literals."""
     remaining = list(order)
     out: list = []
     while remaining:
         chunk = [remaining.pop(0)]
         acc = set(fp_sets.get(chunk[0], ()))
         while len(chunk) < cap and remaining:
-            best_i, best_n = 0, -1
+            best_i, best_n = 0, -1.0
             for i, fp in enumerate(remaining):
-                n = len(acc & fp_sets.get(fp, frozenset()))
+                shared = acc & fp_sets.get(fp, frozenset())
+                if weights is not None:
+                    n = sum(weights.get(f, 0.0) for f in shared)
+                else:
+                    n = len(shared)
                 if n > best_n:
                     best_i, best_n = i, n
             pick = remaining.pop(best_i)
@@ -152,10 +183,18 @@ def partition_calls(session, calls):
         cap = max(1, min(s.policy.max_fused_statements for _, s, _ in items))
         if len(order) > cap:
             # the group must split: chunk overlap-sharing statements
-            # together so the CSE engine has something to dedup per program
+            # together so the CSE engine has something to dedup per
+            # program, weighing each shared fingerprint by its estimated
+            # cost (cost-aware chunking — see shareable_fingerprint_costs)
             fp_sets = {fp: shareable_fingerprints(by_fp[fp][0][1])
                        for fp in order}
-            order = _overlap_order(order, fp_sets, cap)
+            weights: dict = {}
+            for fp in order:
+                for f, w in shareable_fingerprint_costs(
+                        session, by_fp[fp][0][1]).items():
+                    if f not in weights:
+                        weights[f] = w
+            order = _overlap_order(order, fp_sets, cap, weights)
         for s in range(0, len(order), cap):
             chunk_fps = order[s:s + cap]
             chunk = [it for fp in chunk_fps for it in by_fp[fp]]

@@ -36,6 +36,7 @@ counted in the ``counters`` dict the scheduler shares (see
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any, Callable
@@ -114,6 +115,10 @@ class WaveGroup:
     counted: bool = False
     #: group was part of a fused wave that failed (legacy isolation stats)
     from_fused: bool = False
+    #: group is running under a fault window (open breaker skipped its
+    #: fused tier, or it was demoted): the cost router must not learn
+    #: from its timings
+    suppress_samples: bool = False
 
     def key(self):
         return self.stmt._query_fp
@@ -170,6 +175,16 @@ class DegradationLadder:
                 live.append(it)
         return live
 
+    def _sample_guard(self, session, suppress: bool = True):
+        """Context excluding cost-router samples while held — retries,
+        demoted tiers, and breaker-skip fallout run inside it so
+        fault-window timings never train the cost model.  A no-op when
+        the session has no router (or ``suppress`` is False)."""
+        router = getattr(session, "cost_router", None)
+        if router is None or not suppress:
+            return contextlib.nullcontext()
+        return router.suppress()
+
     def _backoff(self, attempt: int) -> None:
         d = self.config.retry.delay(attempt)
         if d > 0:
@@ -198,6 +213,10 @@ class DegradationLadder:
                 eligible.append(g)
             else:
                 self._bump("breaker_open_skips")
+                # this group runs per-statement *because a breaker is
+                # open* — a fault window, not a routing decision; its
+                # timings must not train the cost model
+                g.suppress_samples = True
         if len(eligible) < 2:
             return  # a lone group fuses with nobody; per-group path
         # wave-level accounting (legacy drain counters: one fused wave is
@@ -218,7 +237,9 @@ class DegradationLadder:
         retry = self.config.retry
         for attempt in range(1, retry.max_attempts + 1):
             try:
-                with lock:
+                # retries are fault-window runs (something already failed
+                # once); only the first attempt may train the cost model
+                with lock, self._sample_guard(session, attempt > 1):
                     results = session.execute_fused(calls)
                 if len(results) != len(calls):
                     raise WaveResultMismatch(len(calls), len(results),
@@ -251,9 +272,18 @@ class DegradationLadder:
         if not g.unresolved():
             return
         self._count_group(g)
-        self._tier_many(g, lock)
-        self._tier_serial(g, lock)
-        self._tier_interp(g, lock)
+        session = g.stmt.session
+        # a group that reaches the many tier through demotion or an open
+        # breaker is degradation work end-to-end; a group that starts here
+        # (unfused wave) is the normal path and may train the cost model
+        with self._sample_guard(session,
+                                g.from_fused or g.suppress_samples):
+            self._tier_many(g, lock)
+        # serial/interp only ever see items a higher tier failed —
+        # demotion-only tiers never train the cost model
+        with self._sample_guard(session):
+            self._tier_serial(g, lock)
+            self._tier_interp(g, lock)
         # ladder exhausted (or fallback disabled): surface the last error
         for it in g.unresolved():
             it.error = it.last_error if it.last_error is not None else \
@@ -272,7 +302,7 @@ class DegradationLadder:
         retry = self.config.retry
         for attempt in range(1, retry.max_attempts + 1):
             try:
-                with lock:
+                with lock, self._sample_guard(g.stmt.session, attempt > 1):
                     results = g.stmt.execute_many([it.params for it in live])
                 if len(results) != len(live):
                     raise WaveResultMismatch(len(live), len(results),

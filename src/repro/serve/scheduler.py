@@ -36,6 +36,7 @@ instant retry-backoff tests.
 """
 from __future__ import annotations
 
+import contextlib
 import threading
 import time
 from typing import Any, Callable
@@ -180,6 +181,9 @@ class CoalescingScheduler:
             "flush_full": 0, "flush_window": 0, "flush_forced": 0,
             "fused_batches": 0, "fused_statements": 0,
             "fused_isolated_retries": 0, "fused_isolated_errors": 0,
+            # waves whose fuse-or-not choice came from the cost router
+            # (mixed-statement waves of routed statements only)
+            "routed_waves": 0,
         }
         self.ladder: DegradationLadder | None = None
         if resilience:
@@ -324,23 +328,46 @@ class CoalescingScheduler:
             self.stats["flush_forced"] += 1
         self._drain_all([group])
 
+    def _route_fuse(self, groups: list[_Group]) -> bool:
+        """Wave-level fuse-or-not routing.  When fusion drain mode is on,
+        the wave is mixed-statement, and every member statement is routed
+        (``policy.route``) on one shared session, the session's cost
+        router picks between the fused wave and per-statement drains from
+        measured wave costs (each arm explored once, then the cheaper
+        wins).  Any unrouted member — or a single-statement wave — keeps
+        the scheduler's static ``fuse`` knob."""
+        if not (self.fuse and len(groups) >= 2):
+            return self.fuse
+        stmts = [g.stmt for g in groups]
+        if not all(s.policy.route for s in stmts):
+            return self.fuse
+        sess = stmts[0].session
+        if any(s.session is not sess for s in stmts[1:]):
+            return self.fuse
+        router = sess._ensure_router()
+        self.stats["routed_waves"] += 1
+        return router.choose_fuse([(g.stmt, len(g.params)) for g in groups])
+
     def _drain_all(self, groups: list[_Group]) -> None:
         """Drain a set of batches that tripped together: through the
         degradation ladder under resilience (one fused wave when fusion
         drain mode is on and the wave is mixed-statement, demoting on
-        failure), else the bare single-tier drains."""
+        failure), else the bare single-tier drains.  Routed waves may
+        override the fuse choice per wave (``_route_fuse``)."""
         if not groups:
             return
+        fuse = self._route_fuse(groups)
         if self.ladder is not None:
-            self._drain_ladder(groups)
+            self._drain_ladder(groups, fuse)
             return
-        if self.fuse and len(groups) >= 2:
+        if fuse and len(groups) >= 2:
             self._drain_fused(groups)
             return
         for g in groups:
             self._drain(g)
 
-    def _drain_ladder(self, groups: list[_Group]) -> None:
+    def _drain_ladder(self, groups: list[_Group],
+                      fuse: bool | None = None) -> None:
         """Ladder-backed drain: hand the wave to the resilience layer,
         then map every WorkItem outcome onto its ticket.  The ladder
         resolves every item with a result or a typed/raw error; an
@@ -352,7 +379,8 @@ class CoalescingScheduler:
             for g in groups
         ]
         try:
-            self.ladder.drain(wave, fuse=self.fuse, lock=self._drain_lock)
+            self.ladder.drain(wave, fuse=self.fuse if fuse is None else fuse,
+                              lock=self._drain_lock)
         except BaseException as e:
             for g, wg in zip(groups, wave):
                 for t, it in zip(g.tickets, wg.items):
@@ -404,12 +432,16 @@ class CoalescingScheduler:
                     t._result = next(it)
         except Exception:
             # the wave failed as a unit; re-run each group alone so the
-            # failure lands only on the tickets that earn it
+            # failure lands only on the tickets that earn it.  These are
+            # fault-window runs: the cost router must not learn from them
+            router = getattr(groups[0].stmt.session, "cost_router", None)
+            suppress = (router.suppress if router is not None
+                        else contextlib.nullcontext)
             try:
                 for g in groups:
                     self.stats["fused_isolated_retries"] += 1
                     try:
-                        with self._drain_lock:
+                        with self._drain_lock, suppress():
                             rs = g.stmt.execute_many(g.params)
                         if len(rs) != len(g.tickets):
                             raise WaveResultMismatch(len(g.tickets), len(rs),

@@ -21,6 +21,10 @@ Oracles (both element-wise):
   serial loop, element-wise, across policies and sharding, including
   mixed-signature tickets, parameter-free tickets, non-fusable fallbacks,
   and DDL landing between submit and drain.
+* **Routing oracle** — the same queue drained repeatedly under the
+  ``ROUTED`` preset (the cost router free to flip policy, bucket, and
+  fuse-or-not between waves) == the static FROID serial oracle on every
+  wave: routing changes costs, never results.
 """
 from __future__ import annotations
 
@@ -564,6 +568,66 @@ def check_chaos_oracle(seed: int, n_rows: int, fault_specs=(), *,
         "resilience": sched.resilience_stats,
         "injector": fi,
     }
+
+
+# --------------------------------------------------------------------------
+# routing oracle (ISSUE-8: cost-based routing) — whatever configuration the
+# router picks, results must equal the FROID serial oracle element-wise
+# --------------------------------------------------------------------------
+
+
+def check_routing_oracle(seed: int, n_rows: int, *, fuse: bool = True,
+                         shard: bool = False, waves: int = 3,
+                         calls_spec=None, queries=None) -> dict:
+    """Cost-based routing never changes results, only costs.
+
+    Two same-seed sessions: the **oracle** session executes every call of
+    the mixed-statement queue serially under static FROID; the **routed**
+    session prepares the same statements under the ``ROUTED`` preset and
+    drains the same queue ``waves`` times through a scheduler (fusion
+    drain mode per ``fuse``, sharded over the live mesh per ``shard``).
+    Repeated waves matter: the router flips configuration as measurements
+    accrue (explore-fused → explore-unfused → measured winner; policy and
+    bucket reroutes), and *every* wave must match the oracle element-wise
+    regardless of which arm it landed on.  A final serial ``execute``
+    pass exercises the per-statement policy-routing axis the scheduler
+    path does not.  Returns the routed session's ``cost_stats`` for extra
+    caller assertions (decision log, sample counters)."""
+    from repro.core import ROUTED
+    from repro.serve.scheduler import CoalescingScheduler
+
+    qs = queries if queries is not None else fusion_queries()
+    spec = calls_spec if calls_spec is not None else fusion_calls_spec()
+
+    oracle = make_session(seed, n_rows)
+    oracle.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    o_stmts = [oracle.prepare(q, FROID) for q in qs]
+    expected = [o_stmts[i].execute(params=p) for i, p in spec]
+
+    db = make_session(seed, n_rows)
+    db.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    policy = ROUTED
+    if shard:
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        policy = ROUTED.sharded(mesh)
+    stmts = [db.prepare(q, policy) for q in qs]
+    sched = CoalescingScheduler(max_batch=256, window_s=10.0,
+                                clock=lambda: 0.0, fuse=fuse)
+    for w in range(waves):
+        tickets = [sched.submit(stmts[i], p) for i, p in spec]
+        sched.flush()
+        for j, t in enumerate(tickets):
+            assert_rows_equal(expected[j], t.result(),
+                              f"routed[wave {w}][{j}] vs FROID serial oracle")
+    for j, (i, p) in enumerate(spec):
+        assert_rows_equal(expected[j], stmts[i].execute(params=p),
+                          f"routed serial[{j}] vs FROID serial oracle")
+    cs = db.cost_stats
+    assert cs.get("enabled"), f"router never attached: {cs}"
+    assert cs["samples"] >= 1, f"router saw no samples: {cs}"
+    return cs
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

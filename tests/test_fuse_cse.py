@@ -443,6 +443,77 @@ def test_template_cache_respecializes_on_binding_count(db):
     assert rs[0].stats["cse_bindings"] == 2
 
 
+def test_template_cache_d_bucketing_above_threshold(db):
+    """Regression (ISSUE-8 bugfix): above ``CSE_EXACT_D`` the pool pads
+    ``d`` to the next power of two, so a drifting distinct-binding count
+    (9 → 10, both inside the 16-slot bucket) reuses the compiled fused
+    program instead of recompiling per wave — while ``cse_bindings``
+    stays the *exact* distinct count and ``cse_pool_slots`` reports the
+    padded pool actually evaluated."""
+    from repro.core.session import CSE_EXACT_D, _pool_pad
+
+    assert CSE_EXACT_D == 8 and _pool_pad(9) == _pool_pad(10) == 16
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    # wave 1: d = 9 distinct bindings (5 via s1 + 4 via s2)
+    wave1 = ([(s1, {"x": float(10 * i)}) for i in range(5)]
+             + [(s2, {"y": float(10 * i + 5)}) for i in range(4)])
+    r1 = db.execute_fused(wave1)
+    misses = db.cache_stats["fuse_misses"]
+    assert r1[0].stats["cse_bindings"] == 9
+    assert r1[0].stats["cse_pool_slots"] == 16
+    # wave 2: d = 10, same per-member batch buckets — must be a fuse HIT
+    wave2 = ([(s1, {"x": float(7 * i + 1)}) for i in range(6)]
+             + [(s2, {"y": float(7 * i + 3)}) for i in range(4)])
+    r2 = db.execute_fused(wave2)
+    assert db.cache_stats["fuse_misses"] == misses and r2[0].cache_hit
+    assert r2[0].stats["cse_bindings"] == 10  # exact, not padded
+    assert r2[0].stats["cse_pool_slots"] == 16
+    _assert_same([s.execute(params=p) for s, p in wave2], r2)
+
+
+def test_template_cache_exact_d_below_threshold(db):
+    """At or below ``CSE_EXACT_D`` the pool stays exact: d = 8 → 9
+    crosses the threshold and recompiles (8 exact slots vs a padded 16),
+    so small pools never pay padding overhead."""
+    from repro.core.session import _pool_pad
+
+    assert _pool_pad(8) == 8 and _pool_pad(9) == 16
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    wave8 = ([(s1, {"x": float(10 * i)}) for i in range(5)]
+             + [(s2, {"y": float(10 * i + 5)}) for i in range(3)])
+    r8 = db.execute_fused(wave8)
+    assert r8[0].stats["cse_bindings"] == 8
+    assert r8[0].stats["cse_pool_slots"] == 8  # no padding below threshold
+    misses = db.cache_stats["fuse_misses"]
+    wave9 = ([(s1, {"x": float(10 * i)}) for i in range(5)]
+             + [(s2, {"y": float(10 * i + 5)}) for i in range(4)])
+    r9 = db.execute_fused(wave9)
+    assert db.cache_stats["fuse_misses"] == misses + 1
+    assert r9[0].stats["cse_pool_slots"] == 16
+    _assert_same([s.execute(params=p) for s, p in wave9], r9)
+
+
+def test_d_bucketing_threshold_is_tunable(db, monkeypatch):
+    """``CSE_EXACT_D`` is a module knob: dropping it to 2 makes d = 3 → 4
+    share one padded 4-slot program (the bench's padded-overhead arm
+    tunes it the same way)."""
+    from repro.core import session as sess_mod
+
+    monkeypatch.setattr(sess_mod, "CSE_EXACT_D", 2)
+    s1 = db.prepare(_q_template("x", "v1"), FROID)
+    s2 = db.prepare(_q_template("y", "v2"), FROID)
+    r3 = db.execute_fused([(s1, {"x": 10.0}), (s1, {"x": 20.0}),
+                           (s2, {"y": 30.0})])
+    assert r3[0].stats["cse_bindings"] == 3
+    assert r3[0].stats["cse_pool_slots"] == 4
+    misses = db.cache_stats["fuse_misses"]
+    r4 = db.execute_fused([(s1, {"x": 11.0}), (s1, {"x": 21.0}),
+                           (s2, {"y": 31.0})])
+    assert db.cache_stats["fuse_misses"] == misses and r4[0].cache_hit
+
+
 # ---------------------------------------------------------------------------
 # explain + session stats surfacing
 # ---------------------------------------------------------------------------

@@ -423,6 +423,34 @@ def test_fusion_oracle_sharded():
         assert st.get("sharded") and st["shard_devices"] == len(jax.devices())
 
 
+def test_fusion_oracle_sharded_mixed_divisibility():
+    """Regression (ISSUE-8 bugfix): one batched member's bucket divides
+    the data axes (8 tickets) and another's does not (3 tickets → bucket
+    4 on the forced-8-device CI mesh).  The wave must still shard — the
+    non-dividing member pads its parameter axis up to the next multiple
+    of the data-axis size instead of demoting the whole fused program to
+    replicated — and results stay element-wise equal to the serial loop
+    (the padding rows are discarded, exactly like power-of-two bucket
+    padding)."""
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    spec = ([(0, {"cut": int(k % 6), "shift": 0.5}) for k in range(8)]
+            + [(1, {"minq": int(k % 4), "scale": 2.0}) for k in range(3)]
+            + [(2, None) for _ in range(2)])
+    fused = check_fusion_oracle(17, 23, FROID.sharded(mesh), spec)
+    if n_dev > 1:
+        sts = [r.stats for r in fused if r.stats.get("fused")]
+        # every fused ticket ran in the one sharded program
+        assert all(st.get("sharded") and st["shard_devices"] == n_dev
+                   for st in sts), sts[0]
+        # the 3-ticket member's bucket padded up to a mesh multiple
+        member1 = fused[8].stats
+        assert member1["batch_bucket"] % n_dev == 0, member1
+        assert member1["batch_bucket"] >= 3
+        # the dividing member kept its natural bucket
+        assert fused[0].stats["batch_bucket"] == 8
+
+
 # ---------------------------------------------------------------------------
 # serving pass-through
 # ---------------------------------------------------------------------------

@@ -46,6 +46,7 @@ from conformance_util import (
     check_invocation_oracle,
     check_loop_oracle,
     check_mode_oracle,
+    check_routing_oracle,
     overlap_queue,
 )
 from repro.core import FROID, HEKATON, Database, case, col, lit, param, scan, udf, var
@@ -335,6 +336,29 @@ def test_fusion_queue_equals_serial_loop_oracle(specs, values, seed, n_rows,
         policy = FROID if policy_kind == "froid" else HEKATON
     check_fusion_oracle(seed, n_rows, policy, calls, queries=queries,
                         ddl=ddl, expect_fused="auto")
+
+
+# --------------------------------------------------------------------------
+# routing oracle, generative layer (ISSUE-8): random overlap queues drained
+# repeatedly under the ROUTED preset — whatever configuration the cost
+# router flips to between waves, results equal the static FROID serial
+# oracle element-wise
+# --------------------------------------------------------------------------
+
+
+@settings(max_examples=40, **ORACLE_SETTINGS)
+@given(specs=_overlap_specs, values=_ticket_values, seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]),
+       fuse=st.booleans(), shard=st.booleans(),
+       waves=st.integers(1, 3))
+def test_routing_oracle_random_queues(specs, values, seed, n_rows, fuse,
+                                      shard, waves):
+    """Routing oracle, generative layer: for any overlap queue, any wave
+    count (routes flip as measurements accrue), fused or unfused drains,
+    sharded or not — cost-based routing changes costs, never results."""
+    queries, calls = overlap_queue(specs, values)
+    check_routing_oracle(seed, n_rows, fuse=fuse, shard=shard, waves=waves,
+                         calls_spec=calls, queries=queries)
 
 
 # --------------------------------------------------------------------------
