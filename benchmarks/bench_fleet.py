@@ -1,0 +1,184 @@
+"""Fleet serving over the persistent plan tier: cold vs warm startup and
+multi-tenant drain latency/throughput.
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet [--quick]
+
+Rows:
+    fleet/cold_first_call/<s>  — fresh store: first execute of every
+                                 statement (trace + AOT compile + save)
+    fleet/warm_first_call/<s>  — fresh session, populated store: the same
+                                 first calls load compiled executables
+    fleet/single_engine/<k>    — one warm session + scheduler draining a
+                                 replayed multi-tenant trace
+    fleet/drain_1w/<k>         — FleetEngine, 1 worker, same trace
+    fleet/drain_2w/<k>         — FleetEngine, 2 workers, threaded drains
+
+The warm row's ``derived`` carries ``warm_speedup`` (cold first-call time
+over warm — the persistent tier's whole value proposition; the CI gate
+requires >= 10x on this >= 12-statement population) and ``persist_hits``
+(must cover every statement: nothing re-traced).  The drain rows carry
+``p50_ms``/``p99_ms`` submit-to-fill latency percentiles from
+``Ticket.latency_s`` and ``throughput_rps``; the 2-worker row's
+``vs_single`` ratio gates host-aware — warm-hit fleet throughput must not
+fall below the single-engine drain (full bar on >= 8-CPU hosts, relaxed
+where two workers contend for two cores).  Parity against the serial
+oracle is asserted in-bench on every arm.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import FROID, Session, col, param, scan
+from repro.serve import CoalescingScheduler, FleetEngine
+
+N_STMTS = 12
+N_T, TRACE_K = 2_000, 96
+N_T_QUICK, TRACE_K_QUICK = 500, 48
+
+
+def _populate(s: Session, n_rows: int) -> None:
+    rng = np.random.default_rng(0)
+    s.create_table("T", a=rng.integers(0, 400, n_rows))
+
+
+def _query(i: int):
+    """Statement ``i`` of the population: distinct filter/compute shapes
+    (and output names) so every statement has its own plan fingerprint."""
+    q = scan("T")
+    q = (q.filter(col("a") < param("lo")) if i % 2 == 0
+         else q.filter(col("a") >= param("lo")))
+    if i % 3 == 0:
+        q = q.compute(**{f"w{i}": col("a") * param("scale")})
+    elif i % 3 == 1:
+        q = q.compute(**{f"w{i}": col("a") + param("scale") * float(i + 1)})
+    else:
+        q = q.compute(**{f"w{i}": col("a") * 1.0 - param("scale") / float(i)})
+    return q.project("a", f"w{i}")
+
+
+def _setup_factory(n_rows: int):
+    def setup(session: Session) -> dict:
+        _populate(session, n_rows)
+        return {f"s{i}": session.prepare(_query(i), FROID)
+                for i in range(N_STMTS)}
+
+    return setup
+
+
+def _trace(k: int) -> list[tuple[str, dict]]:
+    """Replayed multi-tenant trace: k requests round-robin-ish over the
+    statement population with varied parameters (deterministic)."""
+    rng = np.random.default_rng(5)
+    return [
+        (f"s{int(rng.integers(0, N_STMTS))}",
+         {"lo": int(rng.integers(0, 400)),
+          "scale": float(round(rng.uniform(0.5, 2.0), 2))})
+        for _ in range(k)
+    ]
+
+
+def _first_calls(store, n_rows: int):
+    """Fresh session over ``store``: seconds for the first execute of every
+    statement in the population, plus the session (for stats/parity)."""
+    s = Session(store=store)
+    stmts = _setup_factory(n_rows)(s)
+    params = {"lo": 200, "scale": 1.5}
+    t0 = time.perf_counter()
+    rs = [stmts[f"s{i}"].execute(params=params) for i in range(N_STMTS)]
+    return time.perf_counter() - t0, rs, s
+
+
+def _check_identical(expected, got):
+    for e, g in zip(expected, got):
+        em, gm = e.masked, g.masked
+        m = np.asarray(em.mask)
+        np.testing.assert_array_equal(m, np.asarray(gm.mask))
+        for n, c in em.table.columns.items():
+            np.testing.assert_allclose(
+                np.asarray(gm.table.columns[n].data)[m],
+                np.asarray(c.data)[m], rtol=1e-5)
+
+
+def run(quick: bool = False):
+    n_rows = N_T_QUICK if quick else N_T
+    k = TRACE_K_QUICK if quick else TRACE_K
+    root = tempfile.mkdtemp(prefix="bench_fleet_")
+    cpus = os.cpu_count()
+
+    # -- cold vs warm first-call startup ------------------------------------
+    t_cold, rs_cold, s_cold = _first_calls(root, n_rows)
+    assert s_cold.persist_stats["saves"] >= N_STMTS, s_cold.persist_stats
+    emit(f"fleet/cold_first_call/{N_STMTS}", t_cold / N_STMTS * 1e6,
+         f"statements={N_STMTS} host_cpus={cpus}")
+
+    t_warm, rs_warm, s_warm = _first_calls(root, n_rows)
+    hits = s_warm.cache_stats["persist_hits"]
+    assert hits >= N_STMTS, s_warm.cache_stats  # nothing re-traced
+    _check_identical(rs_cold, rs_warm)
+    emit(f"fleet/warm_first_call/{N_STMTS}", t_warm / N_STMTS * 1e6,
+         f"warm_speedup={t_cold / t_warm:.1f}x persist_hits={hits} "
+         f"statements={N_STMTS} host_cpus={cpus} parity=ok")
+
+    # -- multi-tenant trace drains ------------------------------------------
+    trace = _trace(k)
+    oracle = Session()
+    o_stmts = _setup_factory(n_rows)(oracle)
+    expected = [o_stmts[name].execute(params=p) for name, p in trace]
+
+    # single engine: one warm session + one scheduler (the pre-fleet shape)
+    single = Session(store=root)
+    stmts = _setup_factory(n_rows)(single)
+    sched = CoalescingScheduler(max_batch=1024, window_s=10.0)
+    ts_single, got = [], None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        tickets = [sched.submit(stmts[name], p) for name, p in trace]
+        sched.flush()
+        got = [t.result() for t in tickets]
+        ts_single.append(time.perf_counter() - t0)
+    t_single = float(np.min(ts_single))
+    _check_identical(expected, got)
+    emit(f"fleet/single_engine/{k}", t_single / k * 1e6,
+         f"throughput_rps={k / t_single:.0f} parity=ok")
+
+    # fleet arms: workers warm-start from the shared store; one un-timed
+    # drain absorbs the store loads, then best-of timed warm-hit drains
+    for workers in (1, 2):
+        fleet = FleetEngine(_setup_factory(n_rows), workers=workers,
+                            store=root, parallel=workers > 1)
+        for name, p in trace:
+            fleet.submit(name, p)
+        fleet.drain()  # warm-up: persistent-tier loads happen here
+        ts, got = [], None
+        for _ in range(3):
+            n0 = len(fleet.latencies_s)
+            t0 = time.perf_counter()
+            for name, p in trace:
+                fleet.submit(name, p)
+            got = fleet.drain()
+            ts.append(time.perf_counter() - t0)
+            lat = np.asarray(fleet.latencies_s[n0:])
+        t_fleet = float(np.min(ts))
+        _check_identical(expected, got)
+        p50, p99 = (float(np.percentile(lat, q)) * 1e3 for q in (50, 99))
+        emit(
+            f"fleet/drain_{workers}w/{k}", t_fleet / k * 1e6,
+            f"p50_ms={p50:.2f} p99_ms={p99:.2f} "
+            f"throughput_rps={k / t_fleet:.0f} "
+            f"vs_single={t_single / t_fleet:.2f} "
+            f"workers={workers} host_cpus={cpus} parity=ok",
+        )
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    run(quick=args.quick)

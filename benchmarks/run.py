@@ -44,7 +44,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
                          "table5,prepared,execmany,shardmany,fused,"
-                         "cursorloop,resilience,routing")
+                         "cursorloop,resilience,routing,fleet")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -60,6 +60,7 @@ def main() -> None:
         bench_cursor_loops,
         bench_execute_many,
         bench_factor,
+        bench_fleet,
         bench_fused,
         bench_invocations,
         bench_native,
@@ -86,6 +87,7 @@ def main() -> None:
         "cursorloop": bench_cursor_loops.run,  # loop-to-scan rewrite
         "resilience": bench_resilience.run,  # ladder overhead + demotions
         "routing": bench_cost_routing.run,  # cost-based routing + d-bucketing
+        "fleet": bench_fleet.run,          # persistent tier + worker fleet
     }
     only = args.only.split(",") if args.only else list(suites)
 

@@ -70,6 +70,23 @@ if [ "${VERIFY_ROUTING:-1}" != "0" ]; then
       --run-id verify-routing --json-dir /tmp
 fi
 
+# persistent plan tier + fleet serving: store/key/session persistence
+# tests, the fleet conformance oracle (plain + forced 8-device mesh for
+# sharded-entry round-trips), and the cold-vs-warm startup smoke — the CI
+# gate requires warm first-call >= 10x faster than cold with every
+# statement served from the store.  VERIFY_PERSIST=0 skips.
+if [ "${VERIFY_PERSIST:-1}" != "0" ]; then
+  echo "--- persistent tier: pytest tests/test_persist.py tests/test_fleet.py"
+  python -m pytest -q tests/test_persist.py tests/test_fleet.py
+  echo "--- fleet oracle (8-device mesh): sharded persistent-entry round-trips"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_persist.py tests/test_fleet.py
+  echo "--- fleet startup + drain smoke: benchmarks.run --quick --only fleet"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only fleet \
+      --run-id verify-fleet --json-dir /tmp
+fi
+
 if [ "${VERIFY_BENCH:-1}" != "0" ]; then
   echo "--- perf smoke: benchmarks.run --quick --only prepared,table4,execmany"
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

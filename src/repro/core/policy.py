@@ -97,6 +97,15 @@ class ExecutionPolicy:
     #: guaranteed unchanged (``check_routing_oracle``)
     route: bool = dataclasses.field(default=False, compare=False)
 
+    # -- persistence knob (tuning like the rest: never part of plan or
+    # executable identity — the persistent tier keys on the same identity
+    # tuples the in-memory tiers use, so opting out only skips the store
+    # round-trip, never changes what executes) -----------------------------
+    #: let this statement use the session's persistent plan store (when one
+    #: is attached): executables load from / save to disk across processes.
+    #: False pins the statement to in-process caches only
+    persist: bool = dataclasses.field(default=True, compare=False)
+
     def __post_init__(self):
         if self.udf_mode not in ("python", "scan"):
             raise ValueError(f"udf_mode must be python|scan, got {self.udf_mode!r}")
@@ -168,6 +177,12 @@ class ExecutionPolicy:
         if route == self.route:
             return self
         return dataclasses.replace(self, name=self.name, route=route)
+
+    def persisted(self, persist: bool = True) -> "ExecutionPolicy":
+        """The same policy with the persistent plan tier toggled."""
+        if persist == self.persist:
+            return self
+        return dataclasses.replace(self, name=self.name, persist=persist)
 
     def shard_devices(self) -> int:
         """Data-parallel shard count batched execution may spread over:

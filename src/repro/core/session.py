@@ -25,6 +25,7 @@ import dataclasses
 import hashlib
 import itertools
 import time
+import warnings
 from collections import OrderedDict, deque
 from typing import Any
 
@@ -299,6 +300,44 @@ def _stamp(obj) -> int:
     return s
 
 
+def _table_content_digest(t: Table) -> str:
+    """Value digest of one table: per-column name/dtype/shape/vocab plus the
+    raw data and validity bytes.  Cached on the table object — the same
+    invalidation model as :func:`_stamp` (replace the Table, get a fresh
+    digest), but the digest is *content-derived*, so two processes loading
+    identical data agree on it.  This is what makes persistent cache keys
+    meaningful across workers: a stamp says "some table object #17", a
+    digest says "this exact data"."""
+    d = getattr(t, "_content_digest", None)
+    if d is None:
+        h = hashlib.sha1()
+        for name, col in sorted(t.columns.items()):
+            arr = np.asarray(col.data)
+            h.update(repr((name, str(arr.dtype), arr.shape,
+                           _vocab(col.dictionary))).encode())
+            h.update(arr.tobytes())
+            h.update(np.asarray(col.validity()).tobytes())
+        d = h.hexdigest()
+        try:
+            t._content_digest = d
+        except AttributeError:
+            pass
+    return d
+
+
+def _udf_content_digest(u: UdfDef) -> str:
+    """Structural digest of a UDF definition (via :func:`_norm`), cached on
+    the object; the registry half of the content-derived env token."""
+    d = getattr(u, "_content_digest", None)
+    if d is None:
+        d = hashlib.sha1(repr(_norm(u)).encode()).hexdigest()
+        try:
+            u._content_digest = d
+        except AttributeError:
+            object.__setattr__(u, "_content_digest", d)
+    return d
+
+
 class _BoundedCache(OrderedDict):
     """Insertion-ordered dict evicting the least-recently-used entry past
     ``cap`` — per-tick table reloads would otherwise grow the plan and
@@ -444,6 +483,21 @@ def _stack_params(params_list: list[dict]) -> dict:
             continue
         out[name] = (data, jnp.ones((len(vs),), bool))
     return out
+
+
+def _batched_avals(params0: dict, bucket: int) -> dict:
+    """Abstract (shape, dtype) pytree of a :func:`_stack_params` batch of
+    ``bucket`` tickets shaped like ``params0`` — what the persistent tier's
+    AOT lower runs against, without materializing ``bucket`` param copies.
+    Stacking two copies (not one) keeps every leaf's per-ticket trailing
+    shape explicit, then the leading axis is rewritten to the bucket."""
+    if not params0:
+        return {}
+    ex = _stack_params([params0, params0])
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct((bucket,) + tuple(x.shape[1:]),
+                                       x.dtype),
+        ex)
 
 
 def _vocab(dictionary) -> tuple | None:
@@ -703,7 +757,7 @@ class Session:
     CACHE_CAP = 256
 
     def __init__(self, constraints: InlineConstraints | None = None,
-                 cache_cap: int | None = None):
+                 cache_cap: int | None = None, store=None):
         self.catalog: dict[str, Table] = {}
         self.registry: dict[str, UdfDef] = {}
         self.constraints = constraints or InlineConstraints()
@@ -714,6 +768,18 @@ class Session:
         self._shard_execs: _BoundedCache = _BoundedCache(cap)
         self._fuse_execs: _BoundedCache = _BoundedCache(cap)
         self._prepared: _BoundedCache = _BoundedCache(cap)
+        # persistent plan tier: a repro.persist.PlanStore (or a directory
+        # path — coerced here).  None = in-process caches only.  The store
+        # is consulted on in-memory misses and written behind on compiles;
+        # every store failure degrades to recompile (see _persist_load)
+        if store is not None and not hasattr(store, "get"):
+            from repro.persist.store import PlanStore
+
+            store = PlanStore(store)
+        self.store = store
+        self._persist_extra = {
+            "saves": 0, "save_errors": 0, "costs_loaded": 0, "costs_saved": 0,
+        }
         self.cache_stats = {
             "plan_hits": 0, "plan_misses": 0,
             "exec_hits": 0, "exec_misses": 0,
@@ -725,6 +791,11 @@ class Session:
             # distinct bindings), and total plan nodes covered by a shared
             # evaluation, both accumulated per fused wave
             "cse_hits": 0, "cse_shared_nodes": 0,
+            # persistent tier: hits (loaded a compiled executable from the
+            # store), misses (no entry), rejects (entry present but stale/
+            # corrupt/unloadable — recompiled).  Monotone like every other
+            # tier's counters
+            "persist_hits": 0, "persist_misses": 0, "persist_rejects": 0,
         }
         # dispatched-but-unsynced AsyncResults, oldest first (backpressure)
         self._inflight: deque = deque()
@@ -743,7 +814,60 @@ class Session:
             from repro.cost.router import CostRouter
 
             self.cost_router = CostRouter(self)
+            if self.store is not None:
+                self._load_costs()
         return self.cost_router
+
+    def _load_costs(self) -> int:
+        """Warm-start the router's measured cost model from the store (no-op
+        on a clean miss; stale/corrupt tables degrade to an empty model)."""
+        from repro.persist import costs as _costs
+        from repro.persist.store import PlanCacheError
+
+        try:
+            n = _costs.load_costs(self.store, self._content_env_token(),
+                                  self.cost_router)
+        except PlanCacheError:
+            self.cache_stats["persist_rejects"] += 1
+            return 0
+        if n:
+            self._persist_extra["costs_loaded"] += n
+        return n
+
+    def save_costs(self) -> bool:
+        """Persist the cost router's measured wave-cost EMAs so a fresh
+        worker routes warm.  Fault-window samples were excluded at intake
+        (``CostRouter.suppress``), so the saved table is clean by
+        construction.  Returns True when a table was written."""
+        if self.store is None or self.cost_router is None:
+            return False
+        from repro.persist import costs as _costs
+
+        try:
+            ok = _costs.save_costs(self.store, self._content_env_token(),
+                                   self.cost_router)
+        except Exception:
+            self._persist_extra["save_errors"] += 1
+            return False
+        if ok:
+            self._persist_extra["costs_saved"] += 1
+        return ok
+
+    @property
+    def persist_stats(self) -> dict:
+        """The persistent tier's view: hit/miss/reject counters, write
+        counts, cost-table traffic, and the store's on-disk footprint.
+        ``{"enabled": False}`` when no store is attached."""
+        if self.store is None:
+            return {"enabled": False}
+        return {
+            "enabled": True,
+            "hits": self.cache_stats["persist_hits"],
+            "misses": self.cache_stats["persist_misses"],
+            "rejects": self.cache_stats["persist_rejects"],
+            **self._persist_extra,
+            "store": self.store.stats(),
+        }
 
     @property
     def cost_stats(self) -> dict:
@@ -832,6 +956,117 @@ class Session:
     def _env_token(self) -> tuple:
         return (self._catalog_token(), self._registry_token(),
                 self._constraints_token())
+
+    def _content_env_token(self) -> tuple:
+        """The cross-process rendering of :meth:`_env_token`: stamps (valid
+        only in this process) are replaced by content digests, so two
+        workers that loaded identical catalogs/registries produce identical
+        persistent cache keys.  Memoized against the stamp-based token —
+        the digests are recomputed only when DDL actually changed
+        something, not per lookup."""
+        env = self._env_token()
+        cached = getattr(self, "_content_env_cache", None)
+        if cached is not None and cached[0] == env:
+            return cached[1]
+        token = (
+            tuple((name, t.num_rows, tuple(t.columns),
+                   _table_content_digest(t))
+                  for name, t in sorted(self.catalog.items())),
+            tuple((name, _udf_content_digest(u))
+                  for name, u in sorted(self.registry.items())),
+            self._constraints_token(),
+        )
+        self._content_env_cache = (env, token)
+        return token
+
+    # -- persistent plan tier ----------------------------------------------
+    def _persist_store(self, policy: ExecutionPolicy):
+        """The store an executable-tier miss should consult, or None (no
+        store attached / the policy opted out via ``persist=False``)."""
+        s = self.store
+        return s if (s is not None and policy.persist) else None
+
+    def _persist_key(self, kind: str, query_fp, policy: ExecutionPolicy,
+                     sig: tuple = (), bucket: int = 0,
+                     shard_token: tuple = (), template: tuple = ()) -> tuple:
+        """The five-tier cache identity as one self-describing stable tuple:
+        plan fingerprint x policy fingerprint x param signature x batch
+        bucket x shard token x fused/CSE template tuple, plus the content
+        env token.  ``assert_stable_key`` is the enforcement point — any
+        process-local value (an ``id()``, a stamp, a live object) smuggled
+        into a component raises here instead of silently degrading the
+        cross-worker hit rate."""
+        from repro.persist.keys import assert_stable_key
+
+        key = ("plan", kind, query_fp, policy.fingerprint(), sig, bucket,
+               shard_token, template, self._content_env_token())
+        assert_stable_key(key)
+        return key
+
+    def _persist_load(self, store, key: tuple):
+        """``(compiled_callable, meta) | None`` — typed degradation ladder:
+        version-stamp mismatch and load failures count as rejects, damaged
+        entries additionally warn (:class:`~repro.persist.PlanCacheWarning`)
+        and are evicted.  Every failure path returns None: the caller
+        recompiles, results are never wrong and never late by more than
+        one compile."""
+        from repro.persist import codec
+        from repro.persist.store import (
+            PlanCacheCorruptError,
+            PlanCacheVersionError,
+            PlanCacheWarning,
+        )
+
+        try:
+            got = store.get(key)
+        except PlanCacheVersionError:
+            self.cache_stats["persist_rejects"] += 1
+            return None
+        except PlanCacheCorruptError as e:
+            self.cache_stats["persist_rejects"] += 1
+            warnings.warn(
+                f"dropping damaged persistent plan entry ({e}); recompiling",
+                PlanCacheWarning, stacklevel=3)
+            store.delete(key)
+            return None
+        if got is None:
+            self.cache_stats["persist_misses"] += 1
+            return None
+        meta, blob = got
+        try:
+            loaded = codec.load_compiled(blob)
+        except Exception as e:  # native deserialize: anything can surface
+            self.cache_stats["persist_rejects"] += 1
+            warnings.warn(
+                f"persistent plan entry failed to load "
+                f"({type(e).__name__}: {e}); recompiling",
+                PlanCacheWarning, stacklevel=3)
+            store.delete(key)
+            return None
+        self.cache_stats["persist_hits"] += 1
+        return loaded, meta
+
+    def _persist_save(self, store, key: tuple, compiled, *, out_dicts,
+                      stats, extra: dict | None = None) -> bool:
+        """Write-behind save of a freshly-compiled executable; failures are
+        counted, never raised (persistence is an optimization, not a
+        correctness dependency)."""
+        from repro.persist import codec
+
+        try:
+            blob = codec.pack_compiled(compiled)
+            meta = {
+                "out_dicts": codec.encode_dicts(out_dicts),
+                "stats": codec.jsonable_stats(stats),
+            }
+            if extra:
+                meta.update(extra)
+            store.put(key, meta, blob)
+        except Exception:
+            self._persist_extra["save_errors"] += 1
+            return False
+        self._persist_extra["saves"] += 1
+        return True
 
     # -- planning ----------------------------------------------------------
     def _build_plan(self, node: R.RelNode, policy: ExecutionPolicy) -> R.RelNode:
@@ -957,7 +1192,39 @@ class Session:
             cols = {n: (c.data, c.validity()) for n, c in out.table.columns.items()}
             return out.mask, cols
 
-        jitted = jax.jit(raw)
+        # persistent tier: on an in-memory miss, try loading the compiled
+        # executable from the store before tracing; on a store miss, AOT
+        # lower+compile once (which runs the trace and fills the capture
+        # dicts) and write the artifact behind.  Either way `target` below
+        # is called with the same (catalog_args, pargs) pytree the jitted
+        # path would see — content-env-token keying guarantees shapes match.
+        from repro.persist import codec as _codec
+
+        store = self._persist_store(policy)
+        target = None
+        if store is not None:
+            pkey = self._persist_key("exec", query_fp, policy, sig=sig)
+            loaded = self._persist_load(store, pkey)
+            if loaded is not None:
+                target, pmeta = loaded
+                out_dicts.update(_codec.decode_dicts(pmeta.get("out_dicts"))
+                                 or {})
+                trace_stats.update(pmeta.get("stats") or {})
+            else:
+                try:
+                    pargs0 = {}
+                    for pname, x in (params or {}).items():
+                        v = _param_value(x)
+                        pargs0[pname] = (v.data, v.validity())
+                    target = jax.jit(raw).lower(
+                        self._catalog_args(), pargs0).compile()
+                    self._persist_save(store, pkey, target,
+                                       out_dicts=out_dicts, stats=trace_stats)
+                except Exception:
+                    self._persist_extra["save_errors"] += 1
+                    target = None
+        if target is None:
+            target = jax.jit(raw)
 
         def fn(param_values: dict | None = None,
                catalog_token: tuple | None = None):
@@ -965,7 +1232,7 @@ class Session:
             for pname, x in (param_values or {}).items():
                 v = _param_value(x)
                 pargs[pname] = (v.data, v.validity())
-            return jitted(self._catalog_args(catalog_token), pargs)
+            return target(self._catalog_args(catalog_token), pargs)
 
         entry = _Executable(fn, plan, out_dicts, trace_stats, raw=raw)
         self._execs[key] = entry
@@ -994,10 +1261,36 @@ class Session:
         # capture dicts so warm execute() and execute_many() agree on
         # output dictionaries/stats regardless of which traced first
         base, _, _ = self._executable(node, query_fp, policy, params0, env_token)
-        vfn = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
+
+        # persistent tier: the batched program persists independently of the
+        # base executable (its own bucket-keyed entry).  On a store miss the
+        # AOT compile traces base.raw under vmap — filling the shared
+        # capture dicts exactly like the jit path would.
+        store = self._persist_store(policy)
+        target = None
+        if store is not None:
+            pkey = self._persist_key("batch", query_fp, policy, sig=sig,
+                                     bucket=bucket)
+            loaded = self._persist_load(store, pkey)
+            if loaded is not None:
+                target, _pmeta = loaded
+            else:
+                try:
+                    target = jax.jit(
+                        jax.vmap(base.raw, in_axes=(None, 0))).lower(
+                        self._catalog_args(),
+                        _batched_avals(params0, bucket)).compile()
+                    self._persist_save(store, pkey, target,
+                                       out_dicts=base.out_dicts,
+                                       stats=base.stats)
+                except Exception:
+                    self._persist_extra["save_errors"] += 1
+                    target = None
+        if target is None:
+            target = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
 
         def fn(batched_pargs: dict, catalog_token: tuple | None = None):
-            return vfn(self._catalog_args(catalog_token), batched_pargs)
+            return target(self._catalog_args(catalog_token), batched_pargs)
 
         entry = _BatchedExecutable(fn, base.plan, base.out_dicts, base.stats,
                                    bucket)
@@ -1057,16 +1350,48 @@ class Session:
             raise ValueError(
                 f"bucket {bucket} is not divisible by the mesh data axes"
             )
-        # one leading-axis spec serves every stacked-param leaf (trailing
-        # dims replicate); catalog args broadcast whole
-        vfn = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
+        # persistent tier: the sharded program can only round-trip when its
+        # input shardings are explicit (a serialized executable is
+        # specialized to placements, not just avals), so the AOT path jits
+        # with in_shardings = (replicated catalog, sharded param axis) —
+        # exactly the placements fn below commits its inputs to.  Any
+        # failure (lowering, serialization, a store reject) falls back to
+        # the inference-jitted path.
+        from repro.dist.sharding import replicated_sharding
+
+        store = self._persist_store(policy)
+        target = None
+        if store is not None:
+            pkey = self._persist_key("shard", query_fp, policy, sig=sig,
+                                     bucket=bucket, shard_token=shard_token)
+            loaded = self._persist_load(store, pkey)
+            if loaded is not None:
+                target, _pmeta = loaded
+            else:
+                try:
+                    target = jax.jit(
+                        jax.vmap(base.raw, in_axes=(None, 0)),
+                        in_shardings=(replicated_sharding(mesh),
+                                      parg_sharding)).lower(
+                        self._catalog_args(),
+                        _batched_avals(params0, bucket)).compile()
+                    self._persist_save(store, pkey, target,
+                                       out_dicts=base.out_dicts,
+                                       stats=base.stats)
+                except Exception:
+                    self._persist_extra["save_errors"] += 1
+                    target = None
+        if target is None:
+            # one leading-axis spec serves every stacked-param leaf
+            # (trailing dims replicate); catalog args broadcast whole
+            target = jax.jit(jax.vmap(base.raw, in_axes=(None, 0)))
 
         def fn(batched_pargs: dict, catalog_token: tuple | None = None):
             cats = self._catalog_args_replicated(
                 mesh, catalog_token if catalog_token is not None
                 else self._catalog_token(), shard_token)
             pargs = jax.device_put(batched_pargs, parg_sharding)
-            return vfn(cats, pargs)
+            return target(cats, pargs)
 
         entry = _ShardedExecutable(fn, base.plan, base.out_dicts, base.stats,
                                    bucket, policy.shard_devices())
@@ -1083,11 +1408,11 @@ class Session:
         The key includes the member plans' identities: the sharing maps
         are ``node_id``-keyed, so a plan rebuilt after a ``_plans``-cache
         eviction (same env token, fresh node ids) must get a fresh merge,
-        not a stale FusedPlan whose marks match nothing.  A live cache
-        entry pins its plans through ``FusedPlan.members``, so a recycled
-        ``id()`` can never collide with a live key."""
+        not a stale FusedPlan whose marks match nothing.  Plan identity is
+        the session stamp (monotonic, never recycled) — unlike a raw
+        ``id()`` it cannot alias a dead plan's key even after eviction."""
         key = (tuple(m.key for m in members), env_token,
-               tuple(id(m.plan) for m in members))
+               tuple(_stamp(m.plan) for m in members))
         cache = getattr(self, "_merge_cache", None)
         if cache is None:
             cache = self._merge_cache = _BoundedCache(64)
@@ -1102,7 +1427,8 @@ class Session:
     def _fused_executable(self, members: list, policy: ExecutionPolicy,
                           shard: bool, env_token: tuple, merged,
                           groups: list, member_tmaps: list,
-                          template_token: tuple
+                          template_token: tuple,
+                          example_args: tuple | None = None
                           ) -> tuple[_FusedExecutable, bool]:
         """(fused executable, fuse-cache-hit).  One jitted program carrying
         every member: the merge pass's shared subtrees execute once, each
@@ -1119,16 +1445,51 @@ class Session:
         # plan identity rides the key alongside the member keys: the slot
         # protocol and member_tmaps are node_id-keyed, so a plan rebuilt
         # after a _plans-cache eviction must re-specialize here too (a
-        # stale entry would silently answer no template occurrence).  The
-        # entry pins its plans, so a recycled id can't collide while live.
+        # stale entry would silently answer no template occurrence).  Plan
+        # identity is the session stamp — monotonic and never recycled, so
+        # unlike raw id() an evicted plan's key can never alias a live one.
         key = (tuple(m.key for m in members),
-               tuple(id(m.plan) for m in members), policy.fingerprint(),
+               tuple(_stamp(m.plan) for m in members), policy.fingerprint(),
                env_token, shard, shard_token, template_token)
         entry = self._fuse_execs.get(key)
         if entry is not None:
             self.cache_stats["fuse_hits"] += 1
             return entry, True
         self.cache_stats["fuse_misses"] += 1
+        # persistent tier (template-free, unsharded waves only): template
+        # pools gather through ``__cse_slot_<node_id>`` reserved parameters
+        # whose node ids are process-local, so a program carrying them
+        # cannot round-trip across workers until slot naming is
+        # canonicalized (ROADMAP follow-up); sharded fused programs fall
+        # back to their members' shard-tier entries instead.  The persist
+        # key itself is always fully stable: member (fingerprint, sig,
+        # bucket) keys + the template token — no plan stamps, no ids.
+        from repro.persist import codec as _codec
+
+        store = self._persist_store(policy)
+        persistable = (store is not None and not shard and not groups
+                       and example_args is not None)
+        if persistable:
+            pkey = self._persist_key(
+                "fused", tuple(m.key for m in members), policy,
+                template=template_token)
+            loaded = self._persist_load(store, pkey)
+            if loaded is not None:
+                compiled, pmeta = loaded
+                out_dicts = [_codec.decode_dicts(d) or {}
+                             for d in pmeta.get("out_dicts_list") or ()]
+                trace_stats = dict(pmeta.get("stats") or {})
+
+                def fn(pargs_tuple, targs_tuple,
+                       catalog_token: tuple | None = None):
+                    return compiled(self._catalog_args(catalog_token),
+                                    pargs_tuple, targs_tuple)
+
+                entry = _FusedExecutable(
+                    fn, [m.plan for m in members], out_dicts, trace_stats,
+                    members, merged, {})
+                self._fuse_execs[key] = entry
+                return entry, False
         self._fault("compile", tuple(m.key[0] for m in members))
         from repro.fuse.program import build_fused_raw
 
@@ -1136,6 +1497,17 @@ class Session:
             self, members, policy, merged, [g.spec() for g in groups],
             member_tmaps)
         jitted = jax.jit(raw)
+        if persistable:
+            try:
+                compiled = jitted.lower(self._catalog_args(),
+                                        *example_args).compile()
+                self._persist_save(
+                    store, pkey, compiled, out_dicts=None, stats=trace_stats,
+                    extra={"out_dicts_list":
+                           [_codec.encode_dicts(d) for d in out_dicts]})
+                jitted = compiled  # single compile: reuse the AOT artifact
+            except Exception:
+                self._persist_extra["save_errors"] += 1
         if shard:
             from repro.dist.sharding import batch_sharding, replicated_sharding
 
@@ -1288,9 +1660,10 @@ class Session:
         groups, member_tmaps, slot_maps, template_token = \
             _plan_template_groups(merged, members,
                                   [by_key[k]["params"] for k in order])
-        entry, hit = self._fused_executable(
-            members, policy, shard, env_token, merged, groups, member_tmaps,
-            template_token)
+        # ticket params stack BEFORE the executable lookup: the persistent
+        # tier AOT-lowers against these exact argument pytrees on a cold
+        # save.  Stacking time still counts into the wave's elapsed (t0 is
+        # rewound by stack_s below); compile time still does not.
         pargs_tuple = []
         t0 = time.perf_counter()
         for m, k, smap in zip(members, order, slot_maps):
@@ -1327,6 +1700,11 @@ class Session:
                 + [g.bindings[-1]] * (_pool_pad(len(g.bindings))
                                       - len(g.bindings)))
             for g in groups)
+        stack_s = time.perf_counter() - t0
+        entry, hit = self._fused_executable(
+            members, policy, shard, env_token, merged, groups, member_tmaps,
+            template_token, example_args=(tuple(pargs_tuple), targs_tuple))
+        t0 = time.perf_counter() - stack_s
         wave_fps = tuple(m.key[0] for m in members)
         self._fault("dispatch", wave_fps)
         outs = entry.fn(tuple(pargs_tuple), targs_tuple, env_token[0])

@@ -39,6 +39,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import hashlib
+import json
 from collections import deque
 
 from repro.core.policy import ExecutionPolicy
@@ -387,6 +388,64 @@ class CostRouter:
                      unfused_s=unfused_s)
         self.stats["waves_fused" if take_fused else "waves_unfused"] += 1
         return take_fused
+
+    # -- persistence ---------------------------------------------------------
+    def export_state(self) -> dict:
+        """JSON-safe snapshot of the measured cost model for the persistent
+        tier (``repro/persist/costs.py``).  Fault-window samples were
+        already excluded at intake — :meth:`suppress` drops them before
+        they can reach ``measured``/``per_ticket`` — so a save can never
+        leak degraded-wave costs into a fresh worker's warm start."""
+
+        def rows(table):
+            out = []
+            for key, ema in table.items():
+                meta = getattr(ema, "meta", None)
+                if meta is not None:
+                    try:
+                        json.dumps(meta)
+                    except (TypeError, ValueError):
+                        meta = None
+                out.append([repr(key), ema.wave_s, ema.n, ema.last_s, meta])
+            return out
+
+        return {"measured": rows(self.measured),
+                "per_ticket": rows(self.per_ticket)}
+
+    def import_state(self, state: dict, *, replace: bool = False) -> int:
+        """Warm-start the measured model from :meth:`export_state` output.
+
+        Locally-observed evidence wins over imported records unless
+        ``replace`` (a live EMA reflects *this* process's actual costs).
+        Returns the number of records adopted.  Malformed rows are skipped
+        — a cost table can only ever steer routing, never break results.
+        """
+        from repro.persist.keys import parse_key
+
+        adopted = 0
+        for attr in ("measured", "per_ticket"):
+            table = getattr(self, attr)
+            for row in state.get(attr, ()):
+                try:
+                    key = parse_key(row[0])
+                    wave_s, n, last_s = float(row[1]), int(row[2]), float(row[3])
+                except (ValueError, SyntaxError, TypeError, IndexError):
+                    continue
+                if not replace and key in table:
+                    continue
+                ema = _Ema(wave_s, n=n, last_s=last_s)
+                meta = row[4] if len(row) > 4 else None
+                if meta and attr == "measured":
+                    ema.meta = dict(meta)  # type: ignore[attr-defined]
+                table[key] = ema
+                adopted += 1
+                if attr == "measured" and key and key[0] == "many":
+                    self._warm_many.setdefault(key[:-1], {})[key[-1]] = ema
+                elif attr == "per_ticket":
+                    # imported coarse evidence can change a policy verdict,
+                    # exactly like a freshly-observed key would
+                    self._pt_new += 1
+        return adopted
 
     # -- introspection -------------------------------------------------------
     def snapshot(self) -> dict:

@@ -1,0 +1,45 @@
+"""Persistent compiled-plan tier.
+
+Froid algebrizes and optimizes a UDF-bearing statement *once* so every later
+invocation reuses the compiled plan; this package extends that reuse across
+process boundaries.  A :class:`PlanStore` is an on-disk (or shared-volume)
+cache of serialized XLA executables keyed by the same five-tier identity the
+in-memory session caches use — plan fingerprint x policy fingerprint x param
+signature x batch bucket x shard token x fused template tuple — plus a
+content-derived catalog/registry token so DDL invalidates entries by value,
+not by process-local stamp.
+
+Guarantees:
+
+* writes are atomic (temp file + ``os.replace``), so concurrent writers and
+  readers never observe a partial entry;
+* every entry is version-stamped (repro schema, jax/jaxlib versions, backend,
+  device count) and a stale stamp is rejected — the session recompiles;
+* a truncated or corrupt entry raises a typed :class:`PlanCacheCorruptError`
+  inside the store, which the session converts into a
+  :class:`PlanCacheWarning` plus a silent recompile — never wrong results,
+  never a crash.
+"""
+from repro.persist.keys import assert_stable_key, key_digest, parse_key
+from repro.persist.store import (
+    PERSIST_SCHEMA_VERSION,
+    PlanCacheCorruptError,
+    PlanCacheError,
+    PlanCacheVersionError,
+    PlanCacheWarning,
+    PlanStore,
+    runtime_stamp,
+)
+
+__all__ = [
+    "PERSIST_SCHEMA_VERSION",
+    "PlanCacheCorruptError",
+    "PlanCacheError",
+    "PlanCacheVersionError",
+    "PlanCacheWarning",
+    "PlanStore",
+    "assert_stable_key",
+    "key_digest",
+    "parse_key",
+    "runtime_stamp",
+]

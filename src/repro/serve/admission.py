@@ -141,8 +141,10 @@ class AdmissionPolicy:
                  policy: ExecutionPolicy | str | None = None,
                  scheduler: CoalescingScheduler | None = None,
                  mesh=None, fuse: bool = False, adaptive: bool = False,
-                 timeout_s: float | None = None):
-        self.session = Session()
+                 timeout_s: float | None = None, store=None):
+        # store: persistent plan store (PlanStore or path) — warm-starts the
+        # per-request admission statement across engine restarts
+        self.session = Session(store=store)
         default_rules(self.session)
         if policy is None:
             policy = FROID if froid else INTERPRETED
@@ -157,7 +159,7 @@ class AdmissionPolicy:
         # per-request path: a second session sharing the rule registry but
         # with an empty catalog, so the compiled request statement's cache
         # key is immune to the tick path's queue-table reloads
-        self._request_session = Session()
+        self._request_session = Session(store=self.session.store)
         self._request_session.registry = self.session.registry
         self._request_stmt = None
         # fuse: mixed-statement waves (e.g. custom rule statements sharing

@@ -53,7 +53,8 @@ class ServeEngine:
                  admission_scheduler: CoalescingScheduler | None = None,
                  admission_mesh=None, admission_fuse: bool = False,
                  admission_adaptive: bool = False,
-                 admission_timeout_s: float | None = None):
+                 admission_timeout_s: float | None = None,
+                 admission_store=None):
         self.model = model
         self.params = params
         self.slots = slots
@@ -68,11 +69,13 @@ class ServeEngine:
         # with the coalescing window; admission_timeout_s deadlines each
         # admission ticket — an expired or resilience-failed ticket
         # completes as "shed" instead of hanging or crashing the drain.
+        # admission_store (PlanStore or path) warm-starts the compiled
+        # admission statement across engine restarts.
         self.admission = AdmissionPolicy(
             froid=froid_admission, policy=admission_policy,
             scheduler=admission_scheduler, mesh=admission_mesh,
             fuse=admission_fuse, adaptive=admission_adaptive,
-            timeout_s=admission_timeout_s,
+            timeout_s=admission_timeout_s, store=admission_store,
         )
         self.shed: list[Completed] = []  # resilience-shed completions
         self.key = jax.random.PRNGKey(seed)

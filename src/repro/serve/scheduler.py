@@ -57,15 +57,22 @@ class Ticket:
     ``_result`` uses a dedicated unset sentinel: a legitimate result may
     be any object, so ``None`` must not mean "pending"."""
 
-    __slots__ = ("_sched", "_group", "_result", "_error", "_deadline")
+    __slots__ = ("_sched", "_group", "_result", "_error", "_deadline",
+                 "submitted_at", "latency_s")
 
     def __init__(self, sched: "CoalescingScheduler", group: "_Group",
-                 deadline: float | None = None):
+                 deadline: float | None = None,
+                 submitted_at: float | None = None):
         self._sched = sched
         self._group = group
         self._result: Any = _UNSET
         self._error: BaseException | None = None
         self._deadline = deadline
+        #: scheduler-clock submit time / submit-to-fill seconds, stamped
+        #: when the ticket's drain completes — the fleet bench's p50/p99
+        #: source (deterministic under an injected clock)
+        self.submitted_at = submitted_at
+        self.latency_s: float | None = None
 
     def done(self) -> bool:
         return self._result is not _UNSET or self._error is not None
@@ -267,7 +274,7 @@ class CoalescingScheduler:
             if g is None:
                 g = _Group(stmt, now)
                 self._groups[id(stmt)] = g
-            t = Ticket(self, g, deadline)
+            t = Ticket(self, g, deadline, submitted_at=now)
             g.params.append(dict(params) if params else {})
             g.deadlines.append(deadline)
             g.tickets.append(t)
@@ -400,7 +407,7 @@ class CoalescingScheduler:
                         t._result = it.result
         finally:
             for g in groups:
-                g.done_evt.set()
+                self._finish(g)
 
     # -- bare drains (resilience=False) --------------------------------------
     def _drain_fused(self, groups: list[_Group]) -> None:
@@ -465,7 +472,16 @@ class CoalescingScheduler:
             raise
         finally:
             for g in groups:
-                g.done_evt.set()
+                self._finish(g)
+
+    def _finish(self, group: _Group) -> None:
+        """Stamp submit-to-fill latency on the group's tickets and release
+        their waiters (every drain path funnels through here)."""
+        now = self.clock()
+        for t in group.tickets:
+            if t.submitted_at is not None:
+                t.latency_s = now - t.submitted_at
+        group.done_evt.set()
 
     def _drain(self, group: _Group) -> None:
         self.stats["batches"] += 1
@@ -486,7 +502,7 @@ class CoalescingScheduler:
                 t._error = e         # the interrupt reach the caller
             raise
         finally:
-            group.done_evt.set()
+            self._finish(group)
 
 
 __all__ = ["CoalescingScheduler", "Ticket"]

@@ -47,6 +47,12 @@ class DictEncoding:
     def decode(self, code: int) -> str:
         return self._from_code[int(code)]
 
+    @property
+    def vocab(self) -> tuple[str, ...]:
+        """The code -> string table, in code order (round-trips the
+        encoding: ``DictEncoding(enc.vocab)`` assigns identical codes)."""
+        return tuple(self._from_code)
+
     def __len__(self) -> int:
         return len(self._from_code)
 

@@ -69,18 +69,27 @@ AGGS = {
 }
 
 
-def make_session(seed: int, n_rows: int = N_ROWS) -> Session:
-    """Session over random data; ``n_rows=0`` is the empty-table case."""
+def facts_data(seed: int, n_rows: int = N_ROWS) -> dict:
+    """The harness's ``facts`` columns for a seed (deterministic)."""
     rng = np.random.default_rng(seed)
-    s = Session()
-    s.create_table(
-        "facts",
+    return dict(
         fk=rng.integers(0, N_KEYS, n_rows),
         val=np.round(rng.uniform(-10, 10, n_rows), 2).astype(np.float32),
         qty=rng.integers(0, 9, n_rows),
     )
+
+
+def populate_session(s: Session, seed: int, n_rows: int = N_ROWS) -> Session:
+    """Load the harness tables into an existing session — the fleet path:
+    worker sessions are constructed by the engine, data arrives by setup."""
+    s.create_table("facts", **facts_data(seed, n_rows))
     s.create_table("keys", k=np.arange(N_KEYS))
     return s
+
+
+def make_session(seed: int, n_rows: int = N_ROWS) -> Session:
+    """Session over random data; ``n_rows=0`` is the empty-table case."""
+    return populate_session(Session(), seed, n_rows)
 
 
 def build_udf(ops) -> UdfBuilder:
@@ -628,6 +637,89 @@ def check_routing_oracle(seed: int, n_rows: int, *, fuse: bool = True,
     assert cs.get("enabled"), f"router never attached: {cs}"
     assert cs["samples"] >= 1, f"router saw no samples: {cs}"
     return cs
+
+
+# --------------------------------------------------------------------------
+# fleet oracle (ISSUE-9: persistent plan tier + multi-worker serving) — a
+# fleet drain over N workers sharing one plan store == the single-worker
+# serial drain of the same queue, element-wise, whatever the persistent tier
+# served (hits, misses, stale stamps, corrupt entries) and wherever each
+# request landed
+# --------------------------------------------------------------------------
+
+
+def fleet_setup(seed: int, n_rows: int, policy):
+    """A :class:`~repro.serve.fleet.FleetEngine` setup callback closing over
+    the harness data: every worker loads the same tables/UDF (so their
+    content-derived persist keys agree) and exposes the fusion-oracle
+    statements as ``q0``/``q1``/``q2``."""
+
+    def setup(session):
+        populate_session(session, seed, n_rows)
+        session.create_function(
+            build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+        return {f"q{i}": session.prepare(q, policy)
+                for i, q in enumerate(fusion_queries())}
+
+    return setup
+
+
+def check_fleet_oracle(seed: int, n_rows: int, *, workers: int = 2,
+                       store=None, policy=None, calls_spec=None,
+                       ddl: bool = False, fault_specs=(), waves: int = 1,
+                       parallel: bool = False) -> dict:
+    """Fleet drain == single-worker serial drain, element-wise.
+
+    The **oracle** is one plain session (no store) executing every call of
+    the mixed-statement queue serially under static FROID.  The **fleet**
+    is a :class:`FleetEngine` of ``workers`` workers over ``store`` (a
+    PlanStore, a path, or None) running the same queue round-robin;
+    ``drain()`` returns arrival order, so results compare positionally.
+    The store's state is the caller's axis: pre-populated (warm-start),
+    stale-stamped, or corrupted stores must all still yield oracle-equal
+    answers — the persistent tier may only change *costs*.
+
+    ``ddl=True`` lands a ``facts`` reload on every worker (``broadcast``)
+    *and* the oracle between submit and drain of the first wave — the
+    drain must see the new catalog state on every worker.  ``fault_specs``
+    installs a deterministic :class:`FaultInjector` per worker session
+    (non-interp sites: the resilient drain must still produce the oracle
+    answer on every ticket).  Returns ``FleetEngine.stats`` for extra
+    caller assertions (persist traffic, drained counts)."""
+    from repro.serve.fleet import FleetEngine
+
+    policy = policy if policy is not None else FROID
+    spec = calls_spec if calls_spec is not None else fusion_calls_spec()
+
+    oracle = make_session(seed, n_rows)
+    oracle.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    o_stmts = [oracle.prepare(q, FROID) for q in fusion_queries()]
+
+    fleet = FleetEngine(fleet_setup(seed, n_rows, policy), workers=workers,
+                        store=store, parallel=parallel)
+    if fault_specs:
+        from repro.resilience import FaultInjector
+
+        for w in fleet.workers:
+            FaultInjector(list(fault_specs)).install(w.session)
+
+    for wave in range(waves):
+        for i, p in spec:
+            fleet.submit(f"q{i}", p)
+        if ddl and wave == 0:
+            data = facts_data(seed + 1, max(n_rows, 1))
+            fleet.broadcast(lambda s: s.create_table("facts", **data))
+            oracle.create_table("facts", **data)
+        got = fleet.drain()
+        expected = [o_stmts[i].execute(params=p) for i, p in spec]
+        assert len(got) == len(expected)
+        for j, (e, g) in enumerate(zip(expected, got)):
+            assert_rows_equal(
+                e, g, f"fleet[wave {wave}][{j}] vs single-worker serial")
+    stats = fleet.stats
+    assert stats["fleet"]["drained"] >= len(spec) * waves, stats["fleet"]
+    return stats
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

@@ -326,7 +326,8 @@ def test_stats_audit_monotone_and_consistent():
                  "policy_reroutes", "bucket_rides", "waves_fused",
                  "waves_unfused")
     cache_keys = ("fuse_hits", "fuse_misses", "cse_hits",
-                  "cse_shared_nodes")
+                  "cse_shared_nodes", "persist_hits", "persist_misses",
+                  "persist_rejects")
     prev_cost = {k: 0 for k in mono_keys}
     prev_cache = {k: 0 for k in cache_keys}
     prev_sched = {"demote_fused_to_many": 0, "demote_many_to_serial": 0,

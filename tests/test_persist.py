@@ -1,0 +1,352 @@
+"""Persistent plan-cache tier: store format, key stability, session
+integration, and cost-table persistence.
+
+The tier's contract is *costs only*: whatever the store serves — a hit, a
+miss, a stale stamp, a truncated file, a concurrent writer — the session
+answers identically to a store-less run.  Every degradation path here
+asserts both the typed signal (counter/warning/exception) and result
+parity.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from conformance_util import (
+    FIXED_PROGRAMS,
+    assert_rows_equal,
+    build_udf,
+    make_session,
+    param_query,
+    populate_session,
+)
+from repro.core import FROID, ROUTED, Session
+from repro.persist import (
+    PERSIST_SCHEMA_VERSION,
+    PlanCacheCorruptError,
+    PlanCacheVersionError,
+    PlanCacheWarning,
+    PlanStore,
+    assert_stable_key,
+    parse_key,
+    runtime_stamp,
+)
+
+PARAMS = {"cut": 5, "shift": 0.5}
+
+
+def _session(tmp_path, seed=7, n_rows=23, store=True):
+    s = Session(store=str(tmp_path) if store else None)
+    populate_session(s, seed, n_rows)
+    s.create_function(build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    return s
+
+
+# ---------------------------------------------------------------------------
+# store unit tests: entry format, atomicity, typed degradation
+# ---------------------------------------------------------------------------
+
+
+def test_store_put_get_roundtrip(tmp_path):
+    st = PlanStore(str(tmp_path))
+    key = ("plan", "exec", ("fp",), (True, "python"), (), 0)
+    st.put(key, {"kind": "exec"}, b"payload-bytes")
+    got = st.get(key)
+    assert got is not None
+    meta, blob = got
+    assert meta["kind"] == "exec" and blob == b"payload-bytes"
+    assert st.get(("plan", "other")) is None  # clean miss
+    assert st.stats()["entries"] == 1
+
+
+def test_store_corrupt_entry_raises_typed(tmp_path):
+    st = PlanStore(str(tmp_path))
+    key = ("k", 1)
+    st.put(key, {}, b"x" * 64)
+    path = st.path_for(key)
+    # truncation at several depths: magic, header length, header, blob
+    for size in (3, 10, 12, 70):
+        with open(path, "r+b") as f:
+            f.truncate(size)
+        with pytest.raises(PlanCacheCorruptError):
+            st.get(key)
+        st.put(key, {}, b"x" * 64)  # restore for next depth
+    # flipped payload byte: digest mismatch
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[:-1] + bytes([raw[-1] ^ 0xFF]))
+    with pytest.raises(PlanCacheCorruptError):
+        st.get(key)
+
+
+def test_store_version_stamp_mismatch(tmp_path):
+    st = PlanStore(str(tmp_path))
+    st.put(("k",), {}, b"blob")
+    stale = PlanStore(str(tmp_path),
+                      stamp={**runtime_stamp(), "jax": "0.0.0"})
+    with pytest.raises(PlanCacheVersionError):
+        stale.get(("k",))
+    # same-stamp reader still loads
+    assert PlanStore(str(tmp_path)).get(("k",)) is not None
+
+
+def test_store_concurrent_writers_atomic(tmp_path):
+    """N threads racing puts on one key: readers always see a complete
+    entry (one writer's whole blob, never a torn mix)."""
+    st = PlanStore(str(tmp_path))
+    key = ("contended",)
+    payloads = [bytes([i]) * 4096 for i in range(8)]
+    errs = []
+
+    def write(i):
+        try:
+            for _ in range(20):
+                st.put(key, {"w": i}, payloads[i])
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=write, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for _ in range(50):
+        got = st.get(key)
+        if got is not None:
+            meta, blob = got
+            assert blob == payloads[meta["w"]]
+    for t in threads:
+        t.join()
+    assert not errs
+    meta, blob = st.get(key)
+    assert blob == payloads[meta["w"]]
+    # no leaked tempfiles
+    assert not [p for p in os.listdir(tmp_path) if p.startswith("tmp")]
+
+
+def test_store_rejects_unstable_keys(tmp_path):
+    st = PlanStore(str(tmp_path))
+
+    class Opaque:
+        pass
+
+    for bad in ((Opaque(),), (("x", [1, 2]),), ({"a": 1},)):
+        with pytest.raises(TypeError):
+            st.put(bad, {}, b"")
+
+
+# ---------------------------------------------------------------------------
+# key stability: repr round-trip, cross-process determinism
+# ---------------------------------------------------------------------------
+
+
+def test_stable_key_scalars_and_nesting():
+    key = ("plan", 1, 2.5, True, None, b"b", ("nested", ("deeper", 0)))
+    assert_stable_key(key)
+    assert parse_key(repr(key)) == key
+
+
+def test_stable_key_rejects_process_local():
+    with pytest.raises(TypeError):
+        assert_stable_key((object(),))
+    with pytest.raises(TypeError):
+        assert_stable_key(("ok", ["lists", "are", "mutable"]))
+    with pytest.raises(TypeError):
+        assert_stable_key(({"dicts": "too"},))
+
+
+def test_persist_keys_identical_across_sessions(tmp_path):
+    """Two independently-built same-content sessions must produce
+    bit-identical persist identity — the whole point of the shared tier.
+    An ``id()``-derived or dict-order-dependent token would diverge here,
+    and the second session's store lookups would all miss."""
+    tokens = []
+    for _ in range(2):
+        s = _session(tmp_path, store=False)
+        tok = s._content_env_token()
+        assert_stable_key(tok)
+        assert parse_key(repr(tok)) == tok
+        tokens.append(tok)
+    assert tokens[0] == tokens[1]
+    # end-to-end: the second session's first execute hits the first's entry
+    a = _session(tmp_path)
+    a.execute(param_query(), FROID, params=PARAMS)
+    b = _session(tmp_path)
+    b.execute(param_query(), FROID, params=PARAMS)
+    assert b.cache_stats["persist_hits"] >= 1
+    assert b.cache_stats["persist_misses"] == 0
+
+
+def test_content_env_token_tracks_data(tmp_path):
+    s = _session(tmp_path, store=False)
+    t0 = s._content_env_token()
+    assert s._content_env_token() == t0  # memoized + stable
+    s.create_table("facts", fk=np.arange(4), val=np.ones(4, np.float32),
+                   qty=np.arange(4))
+    t1 = s._content_env_token()
+    assert t1 != t0  # data changed -> token changed
+    assert_stable_key(t1)
+
+
+# ---------------------------------------------------------------------------
+# session integration: hit/miss/invalidate, degradation parity
+# ---------------------------------------------------------------------------
+
+
+def test_session_cold_then_warm(tmp_path):
+    cold = _session(tmp_path)
+    q = param_query()
+    expected = cold.execute(q, FROID, params=PARAMS)
+    assert cold.cache_stats["persist_misses"] >= 1
+    assert cold.persist_stats["saves"] >= 1
+
+    warm = _session(tmp_path)
+    got = warm.execute(q, FROID, params=PARAMS)
+    assert_rows_equal(expected, got, "warm vs cold")
+    assert warm.cache_stats["persist_hits"] >= 1
+    assert warm.cache_stats["persist_misses"] == 0
+
+
+def test_session_invalidate_by_content(tmp_path):
+    cold = _session(tmp_path, seed=7)
+    cold.execute(param_query(), FROID, params=PARAMS)
+
+    other = _session(tmp_path, seed=8)  # different data, same store
+    other.execute(param_query(), FROID, params=PARAMS)
+    assert other.cache_stats["persist_hits"] == 0
+    assert other.cache_stats["persist_misses"] >= 1
+
+
+def test_session_corrupt_entry_recompiles_with_warning(tmp_path):
+    cold = _session(tmp_path)
+    q = param_query()
+    expected = cold.execute(q, FROID, params=PARAMS)
+    for p in glob.glob(os.path.join(str(tmp_path), "*.plan")):
+        with open(p, "r+b") as f:
+            f.truncate(16)
+    warm = _session(tmp_path)
+    with pytest.warns(PlanCacheWarning):
+        got = warm.execute(q, FROID, params=PARAMS)
+    assert_rows_equal(expected, got, "corrupt-store vs oracle")
+    assert warm.cache_stats["persist_rejects"] >= 1
+    assert warm.cache_stats["persist_hits"] == 0
+    assert warm.persist_stats["saves"] >= 1  # evicted + re-saved behind
+    # so a third session warm-starts from the repaired entry
+    third = _session(tmp_path)
+    third.execute(q, FROID, params=PARAMS)
+    assert third.cache_stats["persist_hits"] >= 1
+
+
+def test_session_stale_stamp_recompiles_silently(tmp_path):
+    cold = _session(tmp_path)
+    q = param_query()
+    expected = cold.execute(q, FROID, params=PARAMS)
+    stale = Session(store=PlanStore(
+        str(tmp_path), stamp={**runtime_stamp(), "schema": -1}))
+    populate_session(stale, 7, 23)
+    stale.create_function(
+        build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # version skew must NOT warn
+        got = stale.execute(q, FROID, params=PARAMS)
+    assert_rows_equal(expected, got, "stale-stamp vs oracle")
+    assert stale.cache_stats["persist_rejects"] >= 1
+
+
+def test_policy_opt_out(tmp_path):
+    s = _session(tmp_path)
+    s.execute(param_query(), FROID.persisted(False), params=PARAMS)
+    assert s.cache_stats["persist_misses"] == 0
+    assert s.persist_stats["saves"] == 0
+    # identity unchanged: opted-out and opted-in policies share caches
+    assert FROID.persisted(False).fingerprint() == FROID.fingerprint()
+
+
+def test_execute_many_warm_start(tmp_path):
+    cold = _session(tmp_path)
+    stmt = cold.prepare(param_query(), FROID)
+    plist = [{"cut": c, "shift": 0.5} for c in (3, 5, 6)]
+    expected = stmt.execute_many(plist)
+
+    warm = _session(tmp_path)
+    got = warm.prepare(param_query(), FROID).execute_many(plist)
+    for i, (e, g) in enumerate(zip(expected, got)):
+        assert_rows_equal(e, g, f"warm many[{i}]")
+    assert warm.cache_stats["persist_hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# cost-table persistence
+# ---------------------------------------------------------------------------
+
+
+def _route_waves(s, waves=2):
+    from conformance_util import fusion_calls_spec, fusion_queries
+    from repro.serve.scheduler import CoalescingScheduler
+
+    stmts = [s.prepare(q, ROUTED) for q in fusion_queries()]
+    sched = CoalescingScheduler(max_batch=256, window_s=10.0,
+                                clock=lambda: 0.0, fuse=True)
+    for _ in range(waves):
+        ts = [sched.submit(stmts[i], p) for i, p in fusion_calls_spec()]
+        sched.flush()
+        [t.result() for t in ts]
+
+
+def test_cost_tables_roundtrip(tmp_path):
+    s1 = _session(tmp_path)
+    _route_waves(s1)
+    assert s1.cost_stats["samples"] >= 1
+    assert s1.save_costs()
+    assert s1.persist_stats["costs_saved"] == 1
+
+    s2 = _session(tmp_path)
+    s2._ensure_router()
+    assert s2.persist_stats["costs_loaded"] >= 1
+    # measured tables arrived without any execution on s2
+    state = s2.cost_router.export_state()
+    assert state["measured"]
+    for key_repr, *_ in state["measured"]:
+        assert parse_key(key_repr)  # strict round-trip on every row
+
+
+def test_cost_tables_corrupt_degrades_to_empty(tmp_path):
+    s1 = _session(tmp_path)
+    _route_waves(s1)
+    assert s1.save_costs()
+    from repro.persist.costs import costs_key
+    path = s1.store.path_for(costs_key(s1._content_env_token()))
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:  # valid envelope, garbage JSON payload
+        f.write(raw[: len(raw) // 2])
+    s2 = _session(tmp_path)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", PlanCacheWarning)
+        s2._ensure_router()
+    assert s2.persist_stats["costs_loaded"] == 0
+    assert s2.persist_stats["rejects"] >= 1
+    # routing still works from scratch
+    _route_waves(s2, waves=1)
+    assert s2.cost_stats["samples"] >= 1
+
+
+def test_persist_stats_shape(tmp_path):
+    s = _session(tmp_path)
+    ps = s.persist_stats
+    assert ps["enabled"] and "store" in ps
+    assert {"hits", "misses", "rejects", "saves"} <= ps.keys()
+    assert Session().persist_stats == {"enabled": False}
+
+
+def test_schema_version_is_stamped(tmp_path):
+    s = _session(tmp_path)
+    s.execute(param_query(), FROID, params=PARAMS)
+    entry = glob.glob(os.path.join(str(tmp_path), "*.plan"))[0]
+    raw = open(entry, "rb").read()
+    hdr = json.loads(raw[12:12 + int.from_bytes(raw[8:12], "little")])
+    assert hdr["stamp"]["schema"] == PERSIST_SCHEMA_VERSION
+    assert hdr["stamp"]["jax"] == runtime_stamp()["jax"]

@@ -42,6 +42,7 @@ from conformance_util import (
     OVERLAP_PNAMES,
     build_udf,
     check_chaos_oracle,
+    check_fleet_oracle,
     check_fusion_oracle,
     check_invocation_oracle,
     check_loop_oracle,
@@ -359,6 +360,54 @@ def test_routing_oracle_random_queues(specs, values, seed, n_rows, fuse,
     queries, calls = overlap_queue(specs, values)
     check_routing_oracle(seed, n_rows, fuse=fuse, shard=shard, waves=waves,
                          calls_spec=calls, queries=queries)
+
+
+# --------------------------------------------------------------------------
+# fleet oracle, generative layer (ISSUE-9): random mixed-statement
+# multi-tenant queues over a fleet sharing one persistent plan store —
+# fleet drain == single-worker serial drain, wherever round-robin lands
+# each request and whatever the store serves
+# --------------------------------------------------------------------------
+
+#: mixed-statement queue over the fusion statements: q0 (UDF + params,
+#: int vs float ``cut`` re-specializes), q1 (arithmetic filter), q2
+#: (parameter-free) — multi-tenant in the sense that interleaved tenants'
+#: requests hit different statements with different signatures
+_fleet_calls = st.lists(
+    st.one_of(
+        st.tuples(st.just(0), st.fixed_dictionaries({
+            "cut": st.one_of(
+                st.integers(0, N_KEYS + 1),
+                st.floats(0, N_KEYS, allow_nan=False, width=32),
+            ),
+            "shift": st.floats(-2, 2, allow_nan=False, width=32),
+        })),
+        st.tuples(st.just(1), st.fixed_dictionaries({
+            "minq": st.integers(0, 8),
+            "scale": st.floats(-2, 2, allow_nan=False, width=32),
+        })),
+        st.tuples(st.just(2), st.none()),
+    ),
+    min_size=1, max_size=8,
+)
+
+
+@settings(max_examples=10, **ORACLE_SETTINGS)
+@given(calls=_fleet_calls, seed=st.integers(0, 3),
+       n_rows=st.sampled_from([0, N_ROWS]),
+       workers=st.integers(1, 3), waves=st.integers(1, 2),
+       ddl=st.booleans(), persist=st.booleans())
+def test_fleet_oracle_random_queues(calls, seed, n_rows, workers, waves,
+                                    ddl, persist):
+    """Fleet oracle, generative layer: any mixed-statement multi-tenant
+    queue, any worker count, with or without a shared persistent store,
+    with DDL broadcasts landing mid-wave — the fleet drain equals the
+    single-worker serial drain element-wise."""
+    import tempfile
+
+    store = tempfile.mkdtemp() if persist else None
+    check_fleet_oracle(seed, n_rows, workers=workers, store=store,
+                       calls_spec=calls, ddl=ddl, waves=waves)
 
 
 # --------------------------------------------------------------------------
