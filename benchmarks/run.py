@@ -44,7 +44,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig7,fig8,fig9,fig11,fig13,table4,"
                          "table5,prepared,execmany,shardmany,fused,"
-                         "cursorloop,resilience,routing,fleet")
+                         "cursorloop,decorr,resilience,routing,fleet")
     ap.add_argument("--run-id", default=None,
                     help="label baked into the BENCH_<run>.json filename "
                          "(default: local timestamp)")
@@ -58,6 +58,7 @@ def main() -> None:
         bench_compile,
         bench_cost_routing,
         bench_cursor_loops,
+        bench_decorrelate,
         bench_execute_many,
         bench_factor,
         bench_fleet,
@@ -85,6 +86,7 @@ def main() -> None:
         "shardmany": bench_sharded_many.run,  # mesh-sharded batches
         "fused": bench_fused.run,          # multi-statement fusion
         "cursorloop": bench_cursor_loops.run,  # loop-to-scan rewrite
+        "decorr": bench_decorrelate.run,   # correlated-subquery rewrite
         "resilience": bench_resilience.run,  # ladder overhead + demotions
         "routing": bench_cost_routing.run,  # cost-based routing + d-bucketing
         "fleet": bench_fleet.run,          # persistent tier + worker fleet

@@ -1,0 +1,186 @@
+"""Decorrelation walkthrough: a correlated scalar subquery rewritten into
+a keyed build + join, with parity against the per-row apply and the cost
+profile the router uses to know when NOT to bother.
+
+    PYTHONPATH=src python examples/decorrelation.py
+
+The PR-10 optimizer pass in four acts:
+
+  1. A correlated subquery (``SUM(val) over facts WHERE fk = outer.k``)
+     naively re-runs its body once per outer row.  ``explain()`` before
+     (decorrelation rules disabled) and after: the rewrite turns the
+     per-row apply into ONE keyed ``GroupAgg`` build over ``facts``
+     left-joined back on the correlation key.
+  2. Parity: the rewritten plan answers element-wise exactly like the
+     per-row apply — including NULL for outer rows whose binding matches
+     no group.  Non-rewritable shapes (non-equi correlation) keep the
+     per-row apply, never an error.
+  3. Shared-scan materialization: several subqueries over the same body
+     share ONE build and ONE join.
+  4. The cost model prices both arms honestly — per-row scales with
+     outer-N × body, the build with the fact scan + distinct-binding
+     cardinality d — so the routing layer's comparison collapses toward
+     per-row only when d ≈ N and the body is tiny.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.core import (FROID, Session, col, lit, param, scalar_subquery,
+                        scan, sum_)
+from repro.core import optimizer as O
+from repro.core import relalg as R
+from repro.core import scalar as S
+from repro.cost.model import estimate_plan
+
+#: the same optimizer stack with only the decorrelation rules removed —
+#: the honest "before" arm for both explain() and parity.
+PER_ROW_RULES = tuple(r for r in O.DEFAULT_RULES
+                      if r not in (O.decorrelate_in_computes,
+                                   O.decorrelate_filters))
+
+
+def fresh(n_facts=512, n_keys=64, domain=7, seed=3):
+    db = Session()
+    rng = np.random.default_rng(seed)
+    db.create_table("facts",
+                    fk=rng.integers(0, domain, n_facts),
+                    val=rng.normal(size=n_facts).astype(np.float32),
+                    qty=rng.integers(0, 9, n_facts))
+    db.create_table("keys", k=np.arange(n_keys) % domain)
+    return db
+
+
+def correlated_total(shift=0):
+    """Per outer key: total fact val where fk matches (k + shift)."""
+    pred = col("fk") == (S.Outer("k") + lit(shift) if shift
+                         else S.Outer("k"))
+    body = (scan("facts").filter(pred & (col("qty") >= param("minq")))
+            .agg(total=sum_(col("val"))))
+    return (scan("keys").compute(total=scalar_subquery(body, "total"))
+            .project("k", "total"))
+
+
+def per_row_plan(db, q):
+    node = q.node
+    wanted = set(R.output_columns(node, db.catalog))
+    return O.optimize(node, db.catalog, required=wanted,
+                      rules=PER_ROW_RULES)
+
+
+# ---------------------------------------------------------------- act 1
+print("== act 1: explain() before and after the rewrite ==")
+db = fresh()
+q = correlated_total()
+stmt = db.prepare(q, FROID)
+print("-- before (decorrelation rules disabled): per-row apply --")
+print(O.explain(per_row_plan(db, q)))
+print("-- after: keyed build + left join --")
+print(stmt.explain())
+
+# ---------------------------------------------------------------- act 2
+print("== act 2: parity with the per-row apply ==")
+from repro.core.executor import Executor
+from repro.core.session import _param_value
+
+
+def run_per_row(db, q, params):
+    return Executor(db.catalog).execute(
+        per_row_plan(db, q),
+        params={n: _param_value(v) for n, v in params.items()})
+
+
+def col_of(mt, name):
+    """(values, validity) of one column, masked rows excluded."""
+    c = mt.table.columns[name]
+    valid = np.asarray(c.valid) & np.asarray(mt.mask)
+    return np.asarray(c.data), valid
+
+
+params = {"minq": 4}
+dv, dm = col_of(stmt.execute(params=params).masked, "total")
+rv, rm = col_of(run_per_row(db, q, params), "total")
+assert np.array_equal(dm, rm)
+assert np.allclose(np.where(dm, dv, 0.0), np.where(rm, rv, 0.0), atol=1e-5)
+print(f"  decorrelated == per-row on {dv.shape[0]} rows "
+      f"({int((~dm).sum())} NULLs match too)")
+
+# shifting the key off the fk domain makes missing groups: NULL, like
+# the per-row apply aggregating an empty relation
+q_miss = correlated_total(shift=3)
+s_miss = db.prepare(q_miss, FROID)
+gv, gm = col_of(s_miss.execute(params=params).masked, "total")
+ev, em = col_of(run_per_row(db, q_miss, params), "total")
+assert np.array_equal(gm, em) and (~gm).any()
+print(f"  k+3 walks off the fk domain: {int((~gm).sum())} "
+      f"missing-group NULLs, identical to per-row")
+
+# non-equi correlation is not rewritable: the per-row apply stays, the
+# answer is still right
+q_ne = (scan("keys")
+        .compute(total=scalar_subquery(
+            scan("facts").filter(col("fk") <= S.Outer("k"))
+            .agg(total=sum_(col("val"))), "total"))
+        .project("k", "total"))
+s_ne = db.prepare(q_ne, FROID)
+assert "Join[left]" not in s_ne.explain()
+print(f"  non-equi body kept per-row (no join in explain), "
+      f"still answers: {s_ne.execute().table.num_rows} rows")
+
+# ---------------------------------------------------------------- act 3
+print("== act 3: shared-scan materialization ==")
+
+
+def body():
+    return (scan("facts").filter(col("fk") == S.Outer("k"))
+            .agg(s=sum_(col("val"))))
+
+
+q3 = (scan("keys")
+      .compute(a=scalar_subquery(body(), "s"),
+               b=scalar_subquery(body(), "s") * lit(2.0),
+               c=scalar_subquery(body(), "s") + lit(1.0))
+      .project("k", "a", "b", "c"))
+s3 = db.prepare(q3, FROID)
+joins = [n for n in R.walk_plan(s3.plan) if isinstance(n, R.Join)]
+builds = [n for n in R.walk_plan(s3.plan)
+          if isinstance(n, R.GroupAgg) and n.keys]
+print(f"  3 subqueries over one body -> {len(builds)} build, "
+      f"{len(joins)} join")
+
+# ---------------------------------------------------------------- act 4
+print("== act 4: the router's arm comparison, two regimes ==")
+
+
+def arms(db, q):
+    node = q.node
+    wanted = set(R.output_columns(node, db.catalog))
+    dec = O.optimize(node, db.catalog, required=wanted)
+    row = O.optimize(node, db.catalog, required=wanted, rules=PER_ROW_RULES)
+    return estimate_plan(dec, db.catalog), estimate_plan(row, db.catalog)
+
+
+# regime A: N=1024 outer rows, d=7 distinct bindings, 4096-row body —
+# the decorrelated build is cheaper by an algorithmic margin
+big = fresh(n_facts=4096, n_keys=1024, domain=7)
+e_dec, e_row = arms(big, correlated_total())
+print(f"  d=7 << N=1024:  per-row {e_row.flops:.2e} flops vs "
+      f"decorrelated {e_dec.flops:.2e}  "
+      f"({e_row.flops / e_dec.flops:.0f}x apart)")
+
+# regime B: every binding distinct (d == N) over a tiny body — the
+# margin collapses; this is where ROUTED keeps the per-row arm
+tiny = Session()
+tiny.create_table("facts",
+                  fk=np.arange(8),
+                  val=np.ones(8, np.float32),
+                  qty=np.zeros(8, np.int64))
+tiny.create_table("keys", k=np.arange(8))
+e_dec, e_row = arms(tiny, correlated_total())
+ratio = e_row.flops / e_dec.flops
+print(f"  d == N == 8, 8-row body:  per-row {e_row.flops:.2e} flops vs "
+      f"decorrelated {e_dec.flops:.2e}  ({ratio:.1f}x)")
+print("  the margin is what the cost router consumes: three orders of "
+      "magnitude at d << N, collapsing toward parity (where the fixed "
+      "dispatch overhead dominates and per-row is kept) as d -> N")

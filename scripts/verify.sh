@@ -40,6 +40,23 @@ if [ "${VERIFY_CURSORLOOP:-1}" != "0" ]; then
       --run-id verify-cursorloop --json-dir /tmp
 fi
 
+# decorrelation: the decorrelation conformance oracle (fixed grid, plain
+# + forced 8-device mesh for the sharded execute_many axis) plus the
+# correlated-subquery perf smoke — the CI gate requires the rewritten
+# plan >= 10x over the compiled per-row apply at N=1024 with three-way
+# parity asserted in-bench.  VERIFY_DECORR=0 skips.
+if [ "${VERIFY_DECORR:-1}" != "0" ]; then
+  echo "--- decorrelation oracle: pytest tests/test_decorrelate.py"
+  python -m pytest -q tests/test_decorrelate.py
+  echo "--- decorrelation oracle (8-device mesh): sharded decorrelated drains"
+  XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+    python -m pytest -q tests/test_decorrelate.py
+  echo "--- decorrelation perf smoke: benchmarks.run --quick --only decorr"
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --quick --only decorr \
+      --run-id verify-decorr --json-dir /tmp
+fi
+
 # resilience: chaos smoke on a forced 8-device mesh (ladder, breakers,
 # deadlines, chaos conformance oracle) + the ladder-overhead perf smoke —
 # the CI gate requires fault-free overhead <= 1.05 with in-bench parity.

@@ -82,6 +82,43 @@ def _sort_key_for(col: Column, mask: jnp.ndarray) -> jnp.ndarray:
     return jnp.where(ok, data.astype(jnp.int32), _I32_MAX)
 
 
+def _union_dense_rank(left: "MaskedTable", right: "MaskedTable", on):
+    """Composite-key equality via one synthetic int32 key per side.
+
+    Lexicographically sorts the *union* of both sides' key tuples
+    (stable argsort composition, least-significant key first), marks run
+    boundaries, and cumsums them into dense group ids — equal tuples get
+    equal ids regardless of side, so the ordinary single-key sort-merge
+    applies.  Rows with any masked/NULL key component map to the int32
+    sentinel and never match (matching single-key NULL semantics)."""
+    nl = left.num_rows
+    n = nl + right.num_rows
+    parts = []
+    lvalid = left.mask
+    rvalid = right.mask
+    for lc, rc in on:
+        lk = left.table.columns[lc]
+        rk = right.table.columns[rc]
+        lvalid = lvalid & lk.validity()
+        rvalid = rvalid & rk.validity()
+        parts.append(jnp.concatenate([
+            _sort_key_for(lk, left.mask), _sort_key_for(rk, right.mask),
+        ]))
+    order = jnp.arange(n)
+    for u in reversed(parts):
+        order = jnp.take(order, jnp.argsort(jnp.take(u, order), stable=True))
+    newgrp = jnp.zeros((n,), bool).at[0].set(True)
+    for u in parts:
+        su = jnp.take(u, order)
+        newgrp = newgrp | (su != jnp.roll(su, 1)).at[0].set(True)
+    gid = jnp.zeros((n,), jnp.int32).at[order].set(
+        jnp.cumsum(newgrp.astype(jnp.int32)) - 1
+    )
+    lkeys = jnp.where(lvalid, gid[:nl], _I32_MAX)
+    rkeys = jnp.where(rvalid, gid[nl:], _I32_MAX)
+    return lkeys, rkeys
+
+
 class Executor:
     """Evaluates relational plans over a catalog of named Tables."""
 
@@ -207,21 +244,20 @@ class Executor:
 
     # -- join --------------------------------------------------------------
     def _exec_join(self, node: R.Join, ctx, memo) -> MaskedTable:
-        if len(node.on) != 1:
-            raise NotImplementedError(
-                "multi-key joins: pre-Compute a packed key column (see DESIGN.md)"
-            )
-        lcol, rcol = node.on[0]
         left = self._exec(node.left, ctx, memo)
         right = self._exec(node.right, ctx, memo)
 
-        lk = left.table.columns[lcol]
-        rk = right.table.columns[rcol]
-        rkeys = _sort_key_for(rk, right.mask)
+        if len(node.on) == 1:
+            lcol, rcol = node.on[0]
+            lkeys = _sort_key_for(left.table.columns[lcol], left.mask)
+            rkeys = _sort_key_for(right.table.columns[rcol], right.mask)
+        else:
+            # composite keys: dense-rank the union of both sides' key
+            # tuples into one synthetic int32 key, then merge as usual
+            lkeys, rkeys = _union_dense_rank(left, right, node.on)
         perm = jnp.argsort(rkeys, stable=True)
         sorted_keys = jnp.take(rkeys, perm)
 
-        lkeys = _sort_key_for(lk, left.mask)
         pos = jnp.searchsorted(sorted_keys, lkeys)
         pos = jnp.clip(pos, 0, sorted_keys.shape[0] - 1)
         hit = (jnp.take(sorted_keys, pos) == lkeys) & (lkeys != _key_sentinel(lkeys))
@@ -234,10 +270,12 @@ class Executor:
 
         rgathered = right.table.gather(ridx, valid=hit)
         cols = dict(left.table.columns)
+        shared = {rc for lc, rc in node.on if lc == rc}
+        rkeycols = {rc for _, rc in node.on}
         for name, col in rgathered.columns.items():
-            if name == rcol and rcol == lcol:
+            if name in shared:
                 continue
-            if name in cols and name != rcol:
+            if name in cols and name not in rkeycols:
                 raise ValueError(f"join column collision: {name}")
             cols[name] = col
         mask = left.mask & hit if node.kind == "inner" else left.mask

@@ -29,6 +29,8 @@ import numpy as np
 
 from repro.core import relalg as R
 from repro.core import scalar as S
+from repro.core.fingerprint import _norm as _fp_norm
+from repro.core.fingerprint import plan_fingerprint
 
 # ---------------------------------------------------------------------------
 # small helpers
@@ -554,9 +556,8 @@ def prune_columns(plan: R.RelNode, catalog=None, required: set[str] | None = Non
 
 @dataclasses.dataclass
 class _CorrPattern:
-    table_plan: R.RelNode  # the uncorrelated (residual-filtered) child
-    key_col: str  # column of the inner table
-    outer_key: S.Scalar  # expression over the outer row (often plain Outer)
+    table_plan: R.RelNode  # the uncorrelated (residual) chain, rebuilt
+    keys: list  # [(inner key column, outer-row key expression), ...]
 
 
 def _split_conjuncts(pred: S.Scalar) -> list[S.Scalar]:
@@ -579,59 +580,117 @@ def _is_outer_key_expr(e: S.Scalar) -> bool:
     return True
 
 
+def _corr_digest(*parts) -> str:
+    """Six-hex-digit content digest naming decorrelated plumbing columns.
+    Content-derived (unlike ``_fresh``'s process-global counter), so the
+    same query rewrites to byte-identical column names in every process —
+    the rewritten plan fingerprints stably into all cache tiers and the
+    persistent store."""
+    import hashlib
+
+    return hashlib.sha1(repr(parts).encode()).hexdigest()[:6]
+
+
 def _match_corr_filter(plan: R.RelNode) -> _CorrPattern | None:
-    """Match Filter*(inner) whose conjuncts contain exactly one
-    ``ColRef(k) == g(Outer…)`` (g any pure outer-row expression, e.g. a
-    Cast inserted by the binder) and whose residual conjuncts are
-    uncorrelated.  ``inner`` itself must be uncorrelated."""
-    preds: list[S.Scalar] = []
+    """Match a ``[Filter|Compute|Project]*`` chain over an uncorrelated base
+    whose filter conjuncts contain one or more ``ColRef(k) == g(Outer…)``
+    equi-correlations (g any pure outer-row expression, e.g. a Cast the
+    binder inserted) and whose every other conjunct / interposed
+    computation is uncorrelated.
+
+    Returns the chain rebuilt with the correlated conjuncts removed plus
+    the (key column, outer expression) pairs.  A correlation key column
+    must survive to the chain's output unchanged — not overwritten by a
+    Compute nor dropped/renamed by a Project sitting above its Filter —
+    else the pattern does not apply (caller keeps the per-row apply)."""
+    spine: list[tuple[str, object]] = []  # top-down rebuild recipe
+    corr: list[tuple[str, S.Scalar, int]] = []  # (key col, outer expr, depth)
     node = plan
-    while isinstance(node, R.Filter):
-        preds += _split_conjuncts(node.pred)
-        node = node.child
+    while True:
+        if isinstance(node, R.Filter):
+            residual = []
+            for p in _split_conjuncts(node.pred):
+                if isinstance(p, S.Cmp) and p.op == "==":
+                    if isinstance(p.l, S.ColRef) and _is_outer_key_expr(p.r):
+                        corr.append((p.l.name, p.r, len(spine)))
+                        continue
+                    if isinstance(p.r, S.ColRef) and _is_outer_key_expr(p.l):
+                        corr.append((p.r.name, p.l, len(spine)))
+                        continue
+                if _expr_outer_refs(p):
+                    return None
+                residual.append(p)
+            spine.append(("filter", residual))
+            node = node.child
+            continue
+        if isinstance(node, R.Compute):
+            if any(_expr_outer_refs(e) for e in node.computed.values()):
+                return None
+            spine.append(("node", node))
+            node = node.child
+            continue
+        if isinstance(node, R.Project):
+            spine.append(("node", node))
+            node = node.child
+            continue
+        break
     from repro.core.executor import _plan_outer_refs
 
-    if _plan_outer_refs(node):
+    if not corr or _plan_outer_refs(node):
         return None
-    corr = []
-    residual = []
-    for p in preds:
-        if isinstance(p, S.Cmp) and p.op == "==":
-            if isinstance(p.l, S.ColRef) and _is_outer_key_expr(p.r):
-                corr.append((p.l.name, p.r))
+    for key, _, depth in corr:
+        for kind, nd in spine[:depth]:
+            if kind != "node":
                 continue
-            if isinstance(p.r, S.ColRef) and _is_outer_key_expr(p.l):
-                corr.append((p.r.name, p.l))
-                continue
-        if _expr_outer_refs(p):
-            return None
-        residual.append(p)
-    if len(corr) != 1:
-        return None
+            if isinstance(nd, R.Compute) and key in nd.computed:
+                return None
+            if isinstance(nd, R.Project) and nd.cols.get(key) != key:
+                return None
     inner = node
-    for p in residual:
-        inner = R.Filter(inner, p)
-    return _CorrPattern(inner, corr[0][0], corr[0][1])
+    for kind, payload in reversed(spine):
+        if kind == "filter":
+            for p in payload:
+                inner = R.Filter(inner, p)
+        else:
+            inner = payload.with_children([inner])
+    # dedupe repeated conjuncts, keeping first-seen (deterministic) order
+    keys, seen = [], set()
+    for key, expr, _ in corr:
+        sig = (key, _fp_norm(expr))
+        if sig not in seen:
+            seen.add(sig)
+            keys.append((key, expr))
+    return _CorrPattern(inner, keys)
 
 
-def _left_key_col(pat: _CorrPattern, child: R.RelNode):
-    """Return (child', key_col_name) for joining ``child`` on the pattern's
-    outer-key expression."""
-    if isinstance(pat.outer_key, S.Outer):
-        return child, pat.outer_key.name
-    kc = _fresh("jk")
-    expr = S.transform(
-        pat.outer_key,
-        lambda x: S.ColRef(x.name) if isinstance(x, S.Outer) else None,
-    )
-    return R.Compute(child, {kc: expr}), kc
+def _left_key_cols(pat: _CorrPattern, child: R.RelNode, tag: str):
+    """Return (child', [key col names]) for joining ``child`` on the
+    pattern's outer-key expressions: plain ``Outer(c)`` keys join on the
+    column directly, expression keys get computed under a content-derived
+    ``__dck`` name."""
+    cols: list[str] = []
+    computed: dict[str, S.Scalar] = {}
+    for j, (_, e) in enumerate(pat.keys):
+        if isinstance(e, S.Outer):
+            cols.append(e.name)
+            continue
+        kc = f"__dck{tag}_{j}"
+        computed[kc] = S.transform(
+            e, lambda x: S.ColRef(x.name) if isinstance(x, S.Outer) else None
+        )
+        cols.append(kc)
+    if computed:
+        child = R.Compute(child, computed)
+    return child, cols
 
 
-def _outer_key_available(pat: _CorrPattern, child: R.RelNode, catalog) -> bool:
+def _outer_keys_available(pat: _CorrPattern, child: R.RelNode, catalog) -> bool:
     """The correlation may reference a scope further out than ``child``
     (e.g. inside a not-yet-spliced region chain) — only decorrelate when
     every Outer ref resolves to a column ``child`` produces."""
-    names = S.free_outer(pat.outer_key)
+    names: set[str] = set()
+    for _, e in pat.keys:
+        names |= S.free_outer(e)
     if not names:
         return False
     try:
@@ -641,102 +700,229 @@ def _outer_key_available(pat: _CorrPattern, child: R.RelNode, catalog) -> bool:
     return names <= cols
 
 
+def _group_key(kind: str, pat: _CorrPattern) -> tuple:
+    """Shared-build identity: two occurrences with the same (uncorrelated
+    body, key columns, outer key expressions) materialize ONE build joined
+    back once — the shared-scan materialization step."""
+    return (
+        kind,
+        plan_fingerprint(pat.table_plan),
+        tuple(k for k, _ in pat.keys),
+        tuple(_fp_norm(e) for _, e in pat.keys),
+    )
+
+
 def decorrelate_in_computes(plan: R.RelNode, catalog=None):
     """Rewrite correlated ScalarSubquery/Exists inside Compute exprs into
     left joins against grouped/keyed builds — the step that turns iterative
-    nested evaluation into set-oriented joins (paper §5, Figure 5)."""
+    nested evaluation into set-oriented joins (paper §5, Figure 5).
+
+    The inner scan then runs once per *distinct binding* instead of once
+    per outer row.  Handled shapes: multi-aggregate ``GroupAgg`` bodies,
+    multi-key equi-correlations, pure Compute/Project chains between the
+    correlated filter and the aggregate, correlations on columns computed
+    in the *same* Compute (substituted into the join key), EXISTS (as a
+    ``count_star`` build), and projection lookups.  Occurrences sharing a
+    body+key identity share one materialized build (aggregates merge into
+    one keyed GroupAgg); anything that doesn't match keeps today's per-row
+    apply — never an error."""
     changed = [False]
 
     def rule(node: R.RelNode):
         if not isinstance(node, R.Compute):
             return None
         child = node.child
-        new_computed: dict[str, S.Scalar] = {}
-        did = [False]
 
-        def fix(e: S.Scalar) -> S.Scalar:
-            def f(x):
-                nonlocal child
-                if isinstance(x, S.ScalarSubquery):
-                    # pattern A: GroupAgg([], {a}) over correlated filter
-                    if (
-                        isinstance(x.plan, R.GroupAgg)
-                        and not x.plan.keys
-                        and len(x.plan.aggs) == 1
-                    ):
-                        pat = _match_corr_filter(x.plan.child)
-                        (aname, aspec), = x.plan.aggs.items()
-                        if (
-                            pat is not None
-                            and not _expr_outer_refs_safe(aspec.expr)
-                            and _outer_key_available(pat, child, catalog)
-                        ):
-                            gcol = _fresh(aname)
-                            kf = _fresh("k")
-                            grp = R.GroupAgg(
-                                pat.table_plan,
-                                [pat.key_col],
-                                {gcol: R.AggSpec(aspec.fn, aspec.expr)},
-                            )
-                            rt = R.Project(grp, {kf: pat.key_col, gcol: gcol})
-                            child, lk = _left_key_col(pat, child)
-                            child = R.Join(child, rt, [(lk, kf)], "left")
-                            did[0] = True
-                            ref: S.Scalar = S.ColRef(gcol)
-                            if aspec.fn in ("count", "count_star"):
-                                ref = S.Coalesce([ref, S.Const(0)])
-                            return ref
-                    # pattern B: projection lookup over correlated filter
-                    sub = x.plan
-                    proj_expr = None
-                    pat = None
-                    if isinstance(sub, R.Compute) and len(sub.computed) == 1:
-                        (pname, pexpr), = sub.computed.items()
-                        if (x.column or pname) == pname and not _expr_outer_refs_safe(pexpr):
-                            pat = _match_corr_filter(sub.child)
-                            if pat is not None and _outer_key_available(
-                                pat, child, catalog
-                            ):
-                                proj_expr = pexpr
-                    if proj_expr is not None:
-                        gcol = _fresh("lkp")
-                        kf = _fresh("k")
-                        rt = R.Project(
-                            R.Compute(pat.table_plan, {gcol: proj_expr}),
-                            {kf: pat.key_col, gcol: gcol},
-                        )
-                        child, lk = _left_key_col(pat, child)
-                        child = R.Join(child, rt, [(lk, kf)], "left")
-                        did[0] = True
-                        return S.ColRef(gcol)
-                    return None
-                if isinstance(x, S.Exists):
-                    pat = _match_corr_filter(x.plan)
-                    if pat is None or not _outer_key_available(pat, child, catalog):
+        groups: dict[tuple, dict] = {}
+        order: list[tuple] = []
+        repl: dict[int, tuple] = {}  # id(expr node) -> (group key, member)
+        defined_before: set[str] = set()
+        subst: dict[str, S.Scalar] = {}
+
+        def shallow(e: S.Scalar):
+            """Walk e without descending into subquery plans (mirrors what
+            ``S.transform`` visits, so collection and replacement agree)."""
+            stack = [e]
+            while stack:
+                v = stack.pop()
+                yield v
+                if not isinstance(v, (S.ScalarSubquery, S.Exists)):
+                    stack.extend(v.children())
+
+        def resolve_keys(pat: _CorrPattern) -> _CorrPattern | None:
+            """Outer refs naming columns computed earlier in this same
+            Compute shadow the child's columns — substitute their (pure)
+            definitions into the key expressions, to fixpoint, so the join
+            key computes over ``child``.  None when a shadowed name has no
+            substitutable definition."""
+            out = []
+            for key, e in pat.keys:
+                for _ in range(8):
+                    names = S.free_outer(e) & defined_before
+                    if not names:
+                        break
+                    if not names <= set(subst):
                         return None
-                    gcol = _fresh("cnt")
-                    kf = _fresh("k")
-                    grp = R.GroupAgg(
-                        pat.table_plan,
-                        [pat.key_col],
-                        {gcol: R.AggSpec("count_star", None)},
+                    e = S.transform(
+                        e,
+                        lambda x: subst[x.name]
+                        if isinstance(x, S.Outer) and x.name in subst
+                        else None,
                     )
-                    rt = R.Project(grp, {kf: pat.key_col, gcol: gcol})
-                    child, lk = _left_key_col(pat, child)
-                    child = R.Join(child, rt, [(lk, kf)], "left")
-                    did[0] = True
-                    hit = S.Coalesce([S.ColRef(gcol), S.Const(0)]) > S.Const(0)
-                    return S.BoolOp("not", [hit]) if x.negated else hit
-                return None
+                else:
+                    return None
+                if not _is_outer_key_expr(e):
+                    return None
+                out.append((key, e))
+            return _CorrPattern(pat.table_plan, out)
 
-            return S.transform(e, f)
+        def group_for(kind: str, pat: _CorrPattern) -> dict:
+            gk = _group_key(kind, pat)
+            g = groups.get(gk)
+            if g is None:
+                g = groups[gk] = {
+                    "key": gk, "pat": pat, "kind": kind,
+                    "slots": {}, "sigs": {},
+                }
+                order.append(gk)
+            return g
 
-        for name, expr in node.computed.items():
-            new_computed[name] = fix(expr)
-        if not did[0]:
+        def slot_for(g: dict, sig: tuple, payload) -> str:
+            """Content-deduped output slot within a shared build (two
+            identical aggregates over one body yield one column)."""
+            name = g["sigs"].get(sig)
+            if name is None:
+                name = f"a{len(g['slots'])}"
+                g["sigs"][sig] = name
+                g["slots"][name] = payload
+            return name
+
+        def register(x) -> None:
+            if isinstance(x, S.Exists):
+                pat = _match_corr_filter(x.plan)
+                if pat is not None:
+                    pat = resolve_keys(pat)
+                if pat is None or not _outer_keys_available(pat, child, catalog):
+                    return
+                g = group_for("agg", pat)
+                name = slot_for(g, ("count_star", None),
+                                R.AggSpec("count_star", None))
+                repl[id(x)] = (g["key"], ("exists", name, x.negated))
+                return
+            sub = x.plan
+            if isinstance(sub, R.GroupAgg) and not sub.keys and sub.aggs:
+                want = x.column
+                if want is None and len(sub.aggs) == 1:
+                    want = next(iter(sub.aggs))
+                if want is None or want not in sub.aggs:
+                    return
+                if any(_expr_outer_refs_safe(a.expr) for a in sub.aggs.values()):
+                    return
+                pat = _match_corr_filter(sub.child)
+                if pat is not None:
+                    pat = resolve_keys(pat)
+                if pat is None or not _outer_keys_available(pat, child, catalog):
+                    return
+                g = group_for("agg", pat)
+                spec = sub.aggs[want]
+                sig = (spec.fn,
+                       None if spec.expr is None else _fp_norm(spec.expr))
+                name = slot_for(g, sig, spec)
+                repl[id(x)] = (g["key"], ("agg", name, spec.fn))
+                return
+            if isinstance(sub, R.Compute) and len(sub.computed) == 1:
+                (pname, pexpr), = sub.computed.items()
+                if (x.column or pname) != pname or _expr_outer_refs_safe(pexpr):
+                    return
+                pat = _match_corr_filter(sub.child)
+                if pat is not None:
+                    pat = resolve_keys(pat)
+                if pat is None or not _outer_keys_available(pat, child, catalog):
+                    return
+                g = group_for("lkp", pat)
+                name = slot_for(g, (_fp_norm(pexpr),), pexpr)
+                repl[id(x)] = (g["key"], ("lkp", name))
+
+        # -- phase 1: collect occurrences, grouped by shared-build identity
+        for cname, e in node.computed.items():
+            for v in shallow(e):
+                if isinstance(v, (S.ScalarSubquery, S.Exists)) and id(v) not in repl:
+                    register(v)
+            pure = not any(
+                isinstance(w, (S.ScalarSubquery, S.Exists, S.UdfCall,
+                               S.Var, S.Outer))
+                for w in shallow(e)
+            )
+            if pure:
+                subst[cname] = S.transform(
+                    e,
+                    lambda x: S.Outer(x.name) if isinstance(x, S.ColRef)
+                    else None,
+                )
+            defined_before.add(cname)
+
+        if not repl:
             return None
+
+        # -- phase 2: one materialized build + left join per group
+        for gk in order:
+            g = groups[gk]
+            pat = g["pat"]
+            try:
+                existing = set(R.output_columns(child, catalog or {}))
+            except Exception:
+                existing = set()
+            salt = 0
+            while True:
+                tag = _corr_digest(gk) if not salt else _corr_digest(gk, salt)
+                named = [f"__dc{tag}_{s}" for s in g["slots"]]
+                named += [f"__dgk{tag}_{j}" for j in range(len(pat.keys))]
+                named += [f"__dck{tag}_{j}" for j in range(len(pat.keys))]
+                if not any(c in existing for c in named):
+                    break
+                salt += 1
+            g["tag"] = tag
+            kf = [f"__dgk{tag}_{j}" for j in range(len(pat.keys))]
+            proj = {kf[j]: pat.keys[j][0] for j in range(len(pat.keys))}
+            if g["kind"] == "agg":
+                aggs = {f"__dc{tag}_{s}": spec for s, spec in g["slots"].items()}
+                build: R.RelNode = R.GroupAgg(
+                    pat.table_plan, [k for k, _ in pat.keys], aggs
+                )
+                proj.update({c: c for c in aggs})
+            else:
+                projs = {f"__dc{tag}_{s}": ex for s, ex in g["slots"].items()}
+                build = R.Compute(pat.table_plan, projs)
+                proj.update({c: c for c in projs})
+            rt = R.Project(build, proj)
+            child, lks = _left_key_cols(pat, child, tag)
+            child = R.Join(child, rt, list(zip(lks, kf)), "left")
+
+        # -- phase 3: swap each occurrence for its build-output reference
+        def fix(x):
+            hit = repl.get(id(x))
+            if hit is None:
+                return None
+            gk, m = hit
+            tag = groups[gk]["tag"]
+            if m[0] == "agg":
+                _, sname, fn = m
+                ref: S.Scalar = S.ColRef(f"__dc{tag}_{sname}")
+                if fn in ("count", "count_star"):
+                    ref = S.Coalesce([ref, S.Const(0)])
+                return ref
+            if m[0] == "exists":
+                _, sname, negated = m
+                has = S.Coalesce(
+                    [S.ColRef(f"__dc{tag}_{sname}"), S.Const(0)]
+                ) > S.Const(0)
+                return S.BoolOp("not", [has]) if negated else has
+            return S.ColRef(f"__dc{tag}_{m[1]}")
+
         changed[0] = True
-        return R.Compute(child, new_computed)
+        return R.Compute(
+            child, {k: S.transform(e, fix) for k, e in node.computed.items()}
+        )
 
     return R.transform_plan(plan, rule), changed[0]
 
@@ -757,14 +943,18 @@ def decorrelate_filters(plan: R.RelNode, catalog=None):
         pred = node.pred
         if isinstance(pred, S.Exists):
             pat = _match_corr_filter(pred.plan)
-            if pat is None or not _outer_key_available(pat, node.child, catalog):
+            if pat is None or not _outer_keys_available(pat, node.child, catalog):
                 return None
-            kf = _fresh("k")
-            rt = R.Project(pat.table_plan, {kf: pat.key_col})
+            tag = _corr_digest(_group_key("semi", pat))
+            kf = [f"__dgk{tag}_{j}" for j in range(len(pat.keys))]
+            rt = R.Project(
+                pat.table_plan,
+                {kf[j]: pat.keys[j][0] for j in range(len(pat.keys))},
+            )
             changed[0] = True
             kind = "anti" if pred.negated else "semi"
-            child, lk = _left_key_col(pat, node.child)
-            return R.Join(child, rt, [(lk, kf)], kind)
+            child, lks = _left_key_cols(pat, node.child, tag)
+            return R.Join(child, rt, list(zip(lks, kf)), kind)
         return None
 
     return R.transform_plan(plan, rule), changed[0]

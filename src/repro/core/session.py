@@ -46,135 +46,20 @@ from repro.tables.table import Column, DictEncoding, Table
 
 
 # ---------------------------------------------------------------------------
-# structural fingerprints (cache keys)
+# structural fingerprints (cache keys) — canonical home is
+# repro.core.fingerprint (below the optimizer in the import graph, so the
+# decorrelation pass's shared-build dedup can fingerprint subtrees without a
+# cycle); the names stay re-exported here for the original import surface.
 # ---------------------------------------------------------------------------
 
-
-def _norm(v, special=None) -> Any:
-    """Normalize an attribute value into a hashable structure.
-
-    ``special(v) -> tuple | None`` pre-empts the default rules when it
-    returns non-None — :func:`parametric_fingerprint` uses it to replace
-    parameter/outer references with canonical slot holes while sharing the
-    rest of the structural normalization."""
-    if special is not None:
-        out = special(v)
-        if out is not None:
-            return out
-    if isinstance(v, S.Scalar):
-        return _expr_key(v, special)
-    if isinstance(v, R.RelNode):
-        return ("Rel:" + type(v).__name__,) + tuple(
-            (k, _norm(x, special)) for k, x in vars(v).items() if k != "node_id"
-        )
-    if isinstance(v, dict):
-        return ("dict",) + tuple((k, _norm(x, special)) for k, x in v.items())
-    if isinstance(v, (list, tuple)):
-        return ("seq",) + tuple(_norm(x, special) for x in v)
-    if dataclasses.is_dataclass(v) and not isinstance(v, type):
-        return (type(v).__name__,) + tuple(
-            (f.name, _norm(getattr(v, f.name), special))
-            for f in dataclasses.fields(v)
-        )
-    if isinstance(v, (str, int, float, bool, type(None))):
-        return v
-    if hasattr(v, "shape") and hasattr(v, "dtype"):
-        # array-valued constants: content digest, never repr (repr elides
-        # the middle of large arrays, collapsing distinct values)
-        arr = np.asarray(v)
-        return ("array", str(arr.dtype), arr.shape,
-                hashlib.sha1(arr.tobytes()).hexdigest())
-    return repr(v)
-
-
-def _expr_key(e: S.Scalar, special=None) -> tuple:
-    return (type(e).__name__,) + tuple(
-        (k, _norm(v, special)) for k, v in vars(e).items()
-    )
-
-
-def plan_fingerprint(node: R.RelNode) -> tuple:
-    """Identity-free structural fingerprint of a plan/query tree: two
-    independently-built trees of the same shape fingerprint equal."""
-    return _norm(node)
-
-
-def liftable_const(v) -> bool:
-    """True when a :class:`~repro.core.scalar.Const` may be *lifted* into a
-    template hole: re-injecting its value as a parameter binding reproduces
-    the constant's evaluation exactly.  int consts always evaluate int32
-    (matching ``_param_value``); float consts match only at the default
-    float32 dtype.  bool/str/NULL consts are structural (predication flags,
-    typed nulls, dictionary literals) and never lift."""
-    if not isinstance(v, S.Const):
-        return False
-    if isinstance(v.value, bool) or v.value is None:
-        return False
-    if isinstance(v.value, (int, np.integer)):
-        return True
-    if isinstance(v.value, (float, np.floating)):
-        return v.dtype is None or v.dtype == jnp.float32
-    return False
-
-
-def const_hole_key(value) -> tuple:
-    """Dtype-aware hole-numbering key of a liftable const's value (``5``
-    and ``5.0`` hash equal as plain dict keys but evaluate int32 vs
-    float32, so they must stay distinct holes)."""
-    if isinstance(value, (int, np.integer)):
-        return ("int", int(value))
-    return ("float", float(value))
-
-
-def parametric_fingerprint(node: R.RelNode,
-                           lift_consts: bool = False) -> tuple[tuple, tuple]:
-    """``(fingerprint, holes)`` with parameter slots canonicalized.
-
-    The fingerprint is :func:`plan_fingerprint` with every ``Param``/``Outer``
-    reference replaced by a numbered hole in first-encounter order, so two
-    subtrees equal *modulo parameter naming* fingerprint equal — the
-    unification test of the cross-statement CSE engine (repro.fuse.merge).
-    Hole numbering is per-name: ``Param(a) + Param(a)`` canonicalizes to
-    ``hole0 + hole0`` and therefore never unifies with ``Param(x) +
-    Param(y)`` (``hole0 + hole1``); param and outer references are distinct
-    hole kinds and never unify with each other.
-
-    With ``lift_consts=True``, :func:`liftable_const` constants additionally
-    become holes, and param/const holes share one hole tag — ``a < 5``
-    fingerprints equal to ``a < Param(x)``, the const-vs-param unification
-    key (numbering stays per-key: ``5 + 5`` is ``hole0 + hole0`` like
-    ``Param(a) + Param(a)``).  The lifted fingerprint lives in its own
-    namespace (tags differ from the plain form), so callers never mix the
-    two key spaces.
-
-    ``holes`` is the tuple of ``(kind, actual_name_or_value)`` in canonical
-    order — the subtree's slot signature, which callers combine with the
-    canonical hole spelling (``merge.hole_name``) to build per-occurrence
-    binding maps.  A hole-free subtree fingerprints identically to its
-    plain :func:`plan_fingerprint`."""
-    holes: list[tuple[str, Any]] = []
-    index: dict[tuple[str, Any], int] = {}
-
-    def special(v):
-        if isinstance(v, S.Param):
-            kind, name = "param", v.name
-        elif isinstance(v, S.Outer):
-            kind, name = "outer", v.name
-        elif lift_consts and liftable_const(v):
-            # dtype-aware key: int 5 and float 5.0 compare equal as dict
-            # keys, but evaluate at different dtypes — they must number as
-            # distinct holes within one subtree
-            kind, name = "const", const_hole_key(v.value)
-        else:
-            return None
-        k = (kind, name)
-        if k not in index:
-            index[k] = len(holes)
-            holes.append(k)
-        tag = "lifted" if (lift_consts and kind != "outer") else kind
-        return ("hole", tag, index[k])
-
-    return _norm(node, special), tuple(holes)
+from repro.core.fingerprint import (  # noqa: E402,F401  (re-exports)
+    _expr_key,
+    _norm,
+    const_hole_key,
+    liftable_const,
+    parametric_fingerprint,
+    plan_fingerprint,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -582,15 +467,20 @@ def _plan_template_groups(merged, members, params_by_member):
     (template fingerprint, binding signature) into a :class:`_PoolGroup`,
     dedup the tickets' hole-value tuples into the group's distinct-binding
     list, and record each ticket's pool slot.  Returns ``(groups,
-    member_tmaps, slot_maps, template_token)`` where ``member_tmaps[i]``
-    maps occurrence ``node_id -> group index`` for member ``i``,
-    ``slot_maps[i]`` maps ``node_id -> [slot per ticket]``, and
-    ``template_token`` — ``((fp, sig, pool_pad(d)), ...)`` in group order —
-    is the template identity the fused cache key incorporates (members
-    arrive canonically sorted, so the token is arrival-order independent;
-    ``d`` is bucketed by :func:`_pool_pad` so a growing distinct-binding
-    population re-specializes O(log d) times, not per distinct d)."""
-    from repro.fuse.merge import CONST_BIND
+    member_tmaps, slot_maps, slot_names, template_token)`` where
+    ``member_tmaps[i]`` maps occurrence ``node_id -> group index`` for
+    member ``i``, ``slot_maps[i]`` maps ``node_id -> [slot per ticket]``,
+    ``slot_names[i]`` maps ``node_id -> reserved slot-parameter name``
+    (the occurrence's *ordinal* within this walk — deterministic from the
+    plan structure, so the fused program's argument pytree spells
+    identically in every process and AOT-compiled programs round-trip
+    through the persistent tier), and ``template_token`` — ``((fp, sig,
+    pool_pad(d)), ...)`` in group order — is the template identity the
+    fused cache key incorporates (members arrive canonically sorted, so
+    the token is arrival-order independent; ``d`` is bucketed by
+    :func:`_pool_pad` so a growing distinct-binding population
+    re-specializes O(log d) times, not per distinct d)."""
+    from repro.fuse.merge import CONST_BIND, slot_param
 
     def hole_value(bind_h, pdict):
         """``(supplied, value)`` of one hole: const-bind markers carry the
@@ -606,9 +496,11 @@ def _plan_template_groups(merged, members, params_by_member):
     gindex: dict[tuple, int] = {}
     member_tmaps: list[dict] = []
     slot_maps: list[dict] = []
+    slot_names: list[dict] = []
     for m, plist in zip(members, params_by_member):
         tmap: dict[int, int] = {}
         smap: dict[int, list] = {}
+        names: dict[int, str] = {}
         # parameter-free members still pool occurrences whose holes are all
         # const-bound (lifted templates) — their slot rides as an unbatched
         # reserved parameter
@@ -654,13 +546,20 @@ def _plan_template_groups(merged, members, params_by_member):
                     slots.append(slot)
                 tmap[n.node_id] = gi
                 smap[n.node_id] = slots
+                # canonical spelling: the ordinal among this member's
+                # pooled occurrences (walk order is plan-structural and
+                # the pooled subset is a function of the member's param
+                # signature, so the name set — and with it the fused
+                # argument pytree — reproduces exactly across processes)
+                names[n.node_id] = slot_param(len(names))
         member_tmaps.append(tmap)
         slot_maps.append(smap)
+        slot_names.append(names)
     # the cache token carries the *padded* pool size: binding counts that
     # land in the same d-bucket share one fused specialization (the exact
     # count still rides per-wave as cse_bindings in the stats)
     token = tuple((g.fp, g.sig, _pool_pad(len(g.bindings))) for g in groups)
-    return groups, member_tmaps, slot_maps, token
+    return groups, member_tmaps, slot_maps, slot_names, token
 
 
 # ---------------------------------------------------------------------------
@@ -1427,7 +1326,7 @@ class Session:
     def _fused_executable(self, members: list, policy: ExecutionPolicy,
                           shard: bool, env_token: tuple, merged,
                           groups: list, member_tmaps: list,
-                          template_token: tuple,
+                          slot_names: list, template_token: tuple,
                           example_args: tuple | None = None
                           ) -> tuple[_FusedExecutable, bool]:
         """(fused executable, fuse-cache-hit).  One jitted program carrying
@@ -1456,18 +1355,20 @@ class Session:
             self.cache_stats["fuse_hits"] += 1
             return entry, True
         self.cache_stats["fuse_misses"] += 1
-        # persistent tier (template-free, unsharded waves only): template
-        # pools gather through ``__cse_slot_<node_id>`` reserved parameters
-        # whose node ids are process-local, so a program carrying them
-        # cannot round-trip across workers until slot naming is
-        # canonicalized (ROADMAP follow-up); sharded fused programs fall
-        # back to their members' shard-tier entries instead.  The persist
-        # key itself is always fully stable: member (fingerprint, sig,
-        # bucket) keys + the template token — no plan stamps, no ids.
+        # persistent tier (unsharded waves): template pools gather through
+        # reserved slot parameters spelled by occurrence *ordinal* (see
+        # _plan_template_groups), so the fused argument pytree — dict keys
+        # included — reproduces exactly in a fresh process and template
+        # waves round-trip through the store like template-free ones.
+        # Sharded fused programs fall back to their members' shard-tier
+        # entries instead.  The persist key itself is fully stable: member
+        # (fingerprint, sig, bucket) keys + the template token — no plan
+        # stamps, no ids (assert_stable_key enforces this, and rejects the
+        # pre-PR-10 node_id-shaped slot spellings outright).
         from repro.persist import codec as _codec
 
         store = self._persist_store(policy)
-        persistable = (store is not None and not shard and not groups
+        persistable = (store is not None and not shard
                        and example_args is not None)
         if persistable:
             pkey = self._persist_key(
@@ -1495,7 +1396,7 @@ class Session:
 
         raw, out_dicts, trace_stats, merged, eval_counts = build_fused_raw(
             self, members, policy, merged, [g.spec() for g in groups],
-            member_tmaps)
+            member_tmaps, slot_names)
         jitted = jax.jit(raw)
         if persistable:
             try:
@@ -1654,10 +1555,8 @@ class Session:
         # cross-statement CSE: plan the template binding pools from the
         # wave's actual ticket values (the merge maps are cached; only the
         # binding dedup runs per wave)
-        from repro.fuse.merge import slot_param
-
         merged = self._merged_for(members, env_token)
-        groups, member_tmaps, slot_maps, template_token = \
+        groups, member_tmaps, slot_maps, slot_names, template_token = \
             _plan_template_groups(merged, members,
                                   [by_key[k]["params"] for k in order])
         # ticket params stack BEFORE the executable lookup: the persistent
@@ -1666,7 +1565,7 @@ class Session:
         # rewound by stack_s below); compile time still does not.
         pargs_tuple = []
         t0 = time.perf_counter()
-        for m, k, smap in zip(members, order, slot_maps):
+        for m, k, smap, names in zip(members, order, slot_maps, slot_names):
             plist = by_key[k]["params"]
             if m.sig:
                 padded = plist + [plist[-1]] * (m.bucket - len(plist))
@@ -1676,7 +1575,7 @@ class Session:
                     # axis as a reserved parameter (padding repeats the
                     # last ticket's slot, matching the padded params)
                     s = slots + [slots[-1]] * (m.bucket - len(slots))
-                    pargs[slot_param(nid)] = (
+                    pargs[names[nid]] = (
                         jnp.asarray(np.asarray(s, np.int32)),
                         jnp.ones((m.bucket,), bool),
                     )
@@ -1687,7 +1586,7 @@ class Session:
                 # gather their pool slot through the reserved parameter
                 pargs = {}
                 for nid, slots in smap.items():
-                    pargs[slot_param(nid)] = (
+                    pargs[names[nid]] = (
                         jnp.asarray(slots[0], jnp.int32), jnp.asarray(True))
                 pargs_tuple.append(pargs)
         # binding pools pad to their d-bucket (repeat the last binding):
@@ -1703,7 +1602,8 @@ class Session:
         stack_s = time.perf_counter() - t0
         entry, hit = self._fused_executable(
             members, policy, shard, env_token, merged, groups, member_tmaps,
-            template_token, example_args=(tuple(pargs_tuple), targs_tuple))
+            slot_names, template_token,
+            example_args=(tuple(pargs_tuple), targs_tuple))
         t0 = time.perf_counter() - stack_s
         wave_fps = tuple(m.key[0] for m in members)
         self._fault("dispatch", wave_fps)

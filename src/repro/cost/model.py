@@ -28,6 +28,7 @@ import dataclasses
 
 from repro.core import relalg as R
 from repro.core import scalar as S
+from repro.core.executor import _plan_outer_refs
 from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 
 #: fixed launch cost of one device program dispatch (host → runtime →
@@ -99,11 +100,23 @@ def estimate_plan(plan: R.RelNode, catalog) -> PlanProfile:
     node types pass their child cardinality through and charge one op per
     row, so a new operator degrades the estimate, never the walk."""
     kids = [estimate_plan(c, catalog) for c in plan.children()]
-    embedded = [estimate_plan(p, catalog) for p in R.embedded_plans(plan)]
-    flops = sum(k.flops for k in kids) + sum(e.flops for e in embedded)
-    bytes_ = sum(k.bytes for k in kids) + sum(e.bytes for e in embedded)
-    nodes = 1 + sum(k.nodes for k in kids) + sum(e.nodes for e in embedded)
+    embedded = [(p, estimate_plan(p, catalog)) for p in R.embedded_plans(plan)]
+    flops = sum(k.flops for k in kids)
+    bytes_ = sum(k.bytes for k in kids)
+    nodes = 1 + sum(k.nodes for k in kids) + sum(e.nodes for _, e in embedded)
     in_rows = kids[0].rows if kids else 1.0
+    for p, e in embedded:
+        if _plan_outer_refs(p):
+            # correlated subquery the optimizer left in place: the per-row
+            # apply re-runs the body once per consuming row (vmap), so work
+            # and reads scale with this node's input cardinality — the
+            # honest price the decorrelated alternative (one keyed build of
+            # ~distinct-binding rows + a join) is compared against
+            flops += in_rows * max(1.0, e.flops)
+            bytes_ += in_rows * e.bytes
+        else:
+            flops += e.flops
+            bytes_ += e.bytes
 
     name = type(plan).__name__
     if name == "Scan":
@@ -134,8 +147,16 @@ def estimate_plan(plan: R.RelNode, catalog) -> PlanProfile:
     elif name == "GroupAgg":
         naggs = max(1, len(getattr(plan, "aggs", ()) or ()))
         flops += in_rows * naggs * 2.0 + _node_exprs_cost(plan, in_rows)
-        rows = min(in_rows, GROUP_CARDINALITY) if getattr(
-            plan, "keys", None) else 1.0
+        if getattr(plan, "keys", None):
+            # distinct-binding cardinality: statistics-derived capacity
+            # (annotate_group_stats) when present, else the System-R guess.
+            # This is what prices a decorrelated build: d distinct bindings
+            # flow into the join, so per-row wins only when d ≈ N and the
+            # body is tiny.
+            cap = getattr(plan, "capacity", None)
+            rows = min(in_rows, float(cap) if cap else GROUP_CARDINALITY)
+        else:
+            rows = 1.0
     elif name == "Sort":
         flops += in_rows * 16.0
         rows = in_rows
@@ -148,7 +169,7 @@ def estimate_plan(plan: R.RelNode, catalog) -> PlanProfile:
         # the relational semantics; the vectorized executor batches it,
         # but the work still scales with the outer cardinality
         inner = kids[1] if len(kids) > 1 else (
-            embedded[0] if embedded else None)
+            embedded[0][1] if embedded else None)
         if inner is not None:
             flops += in_rows * max(1.0, inner.flops / max(inner.rows, 1.0))
         rows = in_rows

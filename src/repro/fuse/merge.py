@@ -71,16 +71,24 @@ CONST_BIND = "__const__"
 CSE_HOLE = "__cse_s{}"
 
 #: reserved per-ticket parameter carrying a template occurrence's pool-slot
-#: index through the stacked parameter axis (one per occurrence node)
-SLOT_PARAM = "__cse_slot_{}"
+#: index through the stacked parameter axis (one per occurrence).  Spelled
+#: by the occurrence's *ordinal* within its member's canonical occurrence
+#: walk — a content-derived name, identical in every process, so fused
+#: programs carrying slot parameters round-trip through the persistent
+#: plan tier.  (The pre-PR-10 spelling embedded the occurrence's
+#: process-local ``node_id``; ``repro.persist.keys.assert_stable_key``
+#: now rejects that shape outright.)
+SLOT_PARAM = "__cse_slot_o{}"
 
 
 def hole_name(i: int) -> str:
     return CSE_HOLE.format(i)
 
 
-def slot_param(node_id: int) -> str:
-    return SLOT_PARAM.format(node_id)
+def slot_param(ordinal: int) -> str:
+    """Reserved slot-parameter name of occurrence ``ordinal`` (its index
+    in the member's deterministic maximal-occurrence walk)."""
+    return SLOT_PARAM.format(ordinal)
 
 
 def plan_is_pure(plan: R.RelNode) -> bool:

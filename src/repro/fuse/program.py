@@ -20,9 +20,10 @@ the session jits into the fused executable:
 4. ``vmap`` each member's plan over its own stacked parameter axis, with a
    :class:`SharedScanExecutor` that answers marked constant subtrees from
    the pool and marked template occurrences by gathering the ticket's
-   pool slot (a reserved ``__cse_slot_<node_id>`` parameter rides the
-   stacked axis); the executor propagates itself into subquery/apply
-   sub-evaluation, so sharing reaches *inside* correlated bodies;
+   pool slot (a reserved ordinal-spelled slot parameter — see
+   ``repro.fuse.merge.slot_param`` — rides the stacked axis); the
+   executor propagates itself into subquery/apply sub-evaluation, so
+   sharing reaches *inside* correlated bodies;
 5. return one ``(mask, columns)`` pair per member — the tagged fused
    result the session slices per-ticket.
 
@@ -40,7 +41,7 @@ from repro.core import relalg as R
 from repro.core import scalar as S
 from repro.core.executor import Executor, MaskedTable
 from repro.core.interpreter import Interpreter
-from repro.fuse.merge import merge_plans, slot_param
+from repro.fuse.merge import merge_plans
 from repro.tables.table import Column, Table
 
 #: reserved stacked-parameter name (filtered out before the executor binds
@@ -57,10 +58,13 @@ class SharedScanExecutor(Executor):
     ``shared_results`` the constant pool built in step 2 of the fused
     closure (passed by reference: during the pool build itself it is
     partially filled, which is what makes nested sharing work).
-    ``template_ids`` maps occurrence ``node_id -> pool-group index`` and
-    ``template_results`` holds the slot-stacked template pools; the
-    occurrence's slot index arrives through the reserved
-    ``__cse_slot_<node_id>`` parameter.  Any unmarked node executes
+    ``template_ids`` maps occurrence ``node_id -> pool-group index``,
+    ``template_results`` holds the slot-stacked template pools, and
+    ``slot_names`` maps occurrence ``node_id -> reserved slot-parameter
+    name`` (the canonical ordinal spelling the session computed — never
+    derived from the process-local node id, so persisted fused programs
+    re-bind correctly in fresh workers); the occurrence's slot index
+    arrives through that reserved parameter.  Any unmarked node executes
     normally — including everything *inside* a shared subtree, which only
     ever runs under the pool builder.
 
@@ -71,12 +75,13 @@ class SharedScanExecutor(Executor):
 
     def __init__(self, catalog, shared_ids, shared_results,
                  template_ids=None, template_results=None,
-                 eval_counts=None, **kwargs):
+                 slot_names=None, eval_counts=None, **kwargs):
         super().__init__(catalog, **kwargs)
         self._shared_ids = shared_ids
         self._shared_results = shared_results
         self._template_ids = template_ids or {}
         self._template_results = template_results if template_results is not None else {}
+        self._slot_names = slot_names or {}
         self.eval_counts = eval_counts if eval_counts is not None else {}
 
     def execute_pooled(self, key, node, params=None) -> MaskedTable:
@@ -92,6 +97,7 @@ class SharedScanExecutor(Executor):
             self.catalog, self._shared_ids, self._shared_results,
             template_ids=self._template_ids,
             template_results=self._template_results,
+            slot_names=self._slot_names,
             eval_counts=self.eval_counts,
             udf_column_evaluator=self.udf_column_evaluator,
             use_pallas_agg=self.use_pallas_agg,
@@ -101,7 +107,8 @@ class SharedScanExecutor(Executor):
         gi = self._template_ids.get(node.node_id)
         if gi is not None:
             hit = self._template_results.get(gi)
-            slot = ctx.params.get(slot_param(node.node_id))
+            name = self._slot_names.get(node.node_id)
+            slot = ctx.params.get(name) if name is not None else None
             if hit is not None and slot is not None:
                 mask_stack, col_stacks, dicts = hit
                 idx = slot.data
@@ -130,15 +137,17 @@ def _plans_have_udf_calls(plans) -> bool:
 
 
 def build_fused_raw(session, members, policy, merged=None, groups=(),
-                    member_tmaps=()):
+                    member_tmaps=(), slot_names=()):
     """Build the fused raw closure for ``members`` (see module docstring).
 
     ``groups`` are the session's template pool groups (canonical node,
-    hole names/dictionaries, one per (template, binding-signature)) and
+    hole names/dictionaries, one per (template, binding-signature)),
     ``member_tmaps`` maps each member's occurrence ``node_id`` to its
-    group index — both computed host-side in ``Session._run_fused`` from
-    the actual ticket bindings, so the closure only bakes in structure,
-    never values (the stacked binding arrays arrive as jit arguments).
+    group index, and ``slot_names`` maps it to its canonical reserved
+    slot-parameter name — all computed host-side in
+    ``Session._run_fused`` from the actual ticket bindings, so the
+    closure only bakes in structure, never values (the stacked binding
+    arrays arrive as jit arguments).
 
     Returns ``(raw, out_dicts, trace_stats, merged, eval_counts)``: the
     untraced closure, the per-member output-dictionary captures, the
@@ -222,6 +231,7 @@ def build_fused_raw(session, members, policy, merged=None, groups=(),
                 catalog, merged.shared_ids, shared_results,
                 template_ids=member_tmaps[i] if member_tmaps else {},
                 template_results=template_results,
+                slot_names=slot_names[i] if slot_names else {},
                 eval_counts=eval_counts,
                 udf_column_evaluator=hook, use_pallas_agg=policy.pallas_agg,
             )

@@ -17,13 +17,31 @@ from __future__ import annotations
 
 import ast
 import hashlib
+import re
 
 _SCALARS = (str, bytes, bool, int, float, type(None))
+
+#: the pre-PR-10 reserved slot-parameter spelling embedded the occurrence's
+#: process-local ``node_id`` (``__cse_slot_<digits>``) — a value that can
+#: never mean the same thing in two processes.  The canonical spelling is
+#: ordinal-based (``__cse_slot_o<digits>``, see ``repro.fuse.merge``) and
+#: deliberately does not match this shape.
+_ID_SHAPED = re.compile(r"^__cse_slot_\d+$")
 
 
 def assert_stable_key(obj: object, path: str = "key") -> None:
     """Raise ``TypeError`` naming the offending path unless *obj* is built
-    purely from persistable primitives (scalars and nested tuples)."""
+    purely from persistable primitives (scalars and nested tuples), none of
+    which spell a process-local identity (id()-shaped slot-parameter
+    names)."""
+    if isinstance(obj, str):
+        if _ID_SHAPED.match(obj):
+            raise TypeError(
+                f"unstable cache-key component at {path}: {obj!r} embeds a "
+                "process-local node id — use the canonical ordinal slot "
+                "spelling (repro.fuse.merge.slot_param)"
+            )
+        return
     if isinstance(obj, _SCALARS):
         return
     if isinstance(obj, tuple):

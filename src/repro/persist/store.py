@@ -78,10 +78,17 @@ class PlanStore:
     ``repro/persist/codec.py`` and ``repro/persist/costs.py``.
     """
 
-    def __init__(self, root: str | os.PathLike, *, stamp: dict | None = None):
+    def __init__(self, root: str | os.PathLike, *, stamp: dict | None = None,
+                 max_bytes: int | None = None):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self._stamp = dict(stamp) if stamp is not None else runtime_stamp()
+        #: byte budget for the whole directory (None = unbounded, the
+        #: historical behavior).  Every ``put`` sweeps back under budget by
+        #: evicting least-recently-*used* entries — ``get`` touches an
+        #: entry's mtime on a hit, so recency means reads, not just writes.
+        self.max_bytes = max_bytes
+        self.eviction_stats = {"evictions": 0, "evicted_bytes": 0, "sweeps": 0}
 
     # -- paths ------------------------------------------------------------
     def path_for(self, key: tuple) -> Path:
@@ -116,6 +123,7 @@ class PlanStore:
             except OSError:
                 pass
             raise
+        self._sweep(keep=path)
         return path
 
     def get(self, key: tuple) -> tuple[dict, bytes] | None:
@@ -156,6 +164,10 @@ class PlanStore:
                 f"entry {path.name} written under stamp {header.get('stamp')}, "
                 f"this runtime is {self._stamp}"
             )
+        try:
+            os.utime(path)  # LRU recency: a hit protects the entry
+        except OSError:
+            pass
         return header.get("meta", {}), blob
 
     def delete(self, key: tuple) -> bool:
@@ -164,6 +176,52 @@ class PlanStore:
             return True
         except OSError:
             return False
+
+    # -- eviction ----------------------------------------------------------
+    def sweep(self) -> int:
+        """Evict least-recently-used entries until the directory fits
+        ``max_bytes`` (no-op when unbudgeted).  Returns the entries
+        removed.
+
+        Collection is a plain ``unlink`` per victim — atomic at the
+        filesystem level, so a concurrent reader either opened the file
+        first (and reads the intact inode to the end) or opens after and
+        sees a clean miss.  A reader that does catch a torn view on a
+        non-POSIX filesystem gets the store's typed
+        :class:`PlanCacheCorruptError` and degrades to recompile — the
+        same contract as every other store failure; eviction can never
+        produce a wrong result, only a miss."""
+        return self._sweep()
+
+    def _sweep(self, keep: Path | None = None) -> int:
+        if not self.max_bytes:
+            return 0
+        entries = []
+        for p in self.root.glob("*.plan"):
+            try:
+                st = p.stat()
+            except OSError:
+                continue  # already collected by a concurrent sweep
+            entries.append((st.st_mtime, st.st_size, p))
+        total = sum(size for _, size, _ in entries)
+        if total <= self.max_bytes:
+            return 0
+        self.eviction_stats["sweeps"] += 1
+        evicted = 0
+        for _, size, p in sorted(entries, key=lambda e: (e[0], e[2].name)):
+            if total <= self.max_bytes:
+                break
+            if keep is not None and p == keep:
+                continue  # never evict the entry this put just wrote
+            try:
+                p.unlink()
+            except OSError:
+                continue  # lost the race to another worker's sweep
+            total -= size
+            evicted += 1
+            self.eviction_stats["evictions"] += 1
+            self.eviction_stats["evicted_bytes"] += size
+        return evicted
 
     # -- introspection ----------------------------------------------------
     def entries(self) -> list[Path]:
@@ -178,4 +236,6 @@ class PlanStore:
             "root": str(self.root),
             "entries": len(entries),
             "nbytes": sum(p.stat().st_size for p in entries),
+            "max_bytes": self.max_bytes,
+            **self.eviction_stats,
         }

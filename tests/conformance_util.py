@@ -54,7 +54,7 @@ from repro.core import (
     var,
 )
 from repro.core import scalar as S
-from repro.core.frontend import scalar_subquery
+from repro.core.frontend import exists, not_exists, scalar_subquery
 from repro.loops import classify
 
 N_ROWS = 23
@@ -720,6 +720,156 @@ def check_fleet_oracle(seed: int, n_rows: int, *, workers: int = 2,
     stats = fleet.stats
     assert stats["fleet"]["drained"] >= len(spec) * waves, stats["fleet"]
     return stats
+
+
+# --------------------------------------------------------------------------
+# decorrelation oracle (ISSUE-10) — the decorrelated plan (keyed GroupAgg
+# build + left/semi/anti join) == the per-row apply of the same correlated
+# statement, element-wise, across execution modes and invocation surfaces,
+# including empty inner relations and bindings with no matching group
+# (NULL-vs-empty-group semantics)
+# --------------------------------------------------------------------------
+
+#: correlated-statement shape axes.  kinds: scalar aggregate subquery in a
+#: Compute, EXISTS / NOT EXISTS in a Compute, EXISTS / NOT EXISTS as a
+#: Filter (semi/anti join).  keys: direct outer column, arithmetic
+#: expression of the outer column (shifts part of the key domain past the
+#: facts, so some bindings have NO matching group — the NULL-semantics
+#: case), two-key correlation through a computed outer column, and a
+#: non-equi correlated predicate (NOT rewritable: the pass must leave the
+#: per-row apply in place, never error).
+DECORR_KINDS = ("agg", "exists", "not_exists", "semi", "anti")
+DECORR_KEYSHAPES = ("direct", "expr", "multi", "nonequi")
+DECORR_AGGS = ("sum", "min", "max", "avg", "count")
+
+
+def decorr_query(kind: str, keyshape: str, agg: str = "sum"):
+    """One correlated statement from the compact spec.  The inner body
+    filters ``facts`` on the correlation predicate plus an uncorrelated
+    parameterized conjunct (``qty >= @minq``), so parameter sets change
+    results and the batched surfaces exercise real re-binding."""
+    outer = scan("keys")
+    if keyshape == "direct":
+        pred = col("fk") == S.Outer("k")
+    elif keyshape == "expr":
+        # k+3 walks keys 4..6 off the fk domain: missing groups -> NULL
+        pred = col("fk") == S.Outer("k") + lit(3)
+    elif keyshape == "multi":
+        outer = outer.compute(kk=col("k") + lit(1))
+        pred = (col("fk") == S.Outer("k")) & (col("qty") == S.Outer("kk"))
+    else:  # nonequi: correlated range predicate — not decorrelatable
+        pred = col("fk") <= S.Outer("k")
+    inner = scan("facts").filter(pred & (col("qty") >= param("minq")))
+    if kind == "agg":
+        body = inner.agg(s=AGGS[agg](col("val")))
+        return outer.compute(out=scalar_subquery(body, "s")).project("k", "out")
+    if kind == "exists":
+        return outer.compute(out=exists(inner)).project("k", "out")
+    if kind == "not_exists":
+        return outer.compute(out=not_exists(inner)).project("k", "out")
+    if kind == "semi":
+        return (outer.filter(exists(inner))
+                .compute(out=col("k") * 2.0).project("k", "out"))
+    return (outer.filter(not_exists(inner))
+            .compute(out=col("k") * 2.0).project("k", "out"))
+
+
+def _plan_has_correlated_subquery(plan) -> bool:
+    """True when any subquery plan anywhere in ``plan`` still references
+    outer-row columns — i.e. a per-row apply the rewrite left in place."""
+    from repro.core import relalg as R
+    from repro.core.executor import _plan_outer_refs
+
+    for n in R.walk_plan_deep(plan):
+        for e in n.exprs():
+            for s in S.walk(e):
+                if isinstance(s, (S.ScalarSubquery, S.Exists)) and \
+                        _plan_outer_refs(s.plan):
+                    return True
+    return False
+
+
+def _per_row_reference(db, q, params):
+    """Execute the statement with the decorrelation rules disabled — the
+    per-row apply baseline every decorrelated shape must match.  Returns
+    an object comparable by :func:`assert_rows_equal`."""
+    import types
+
+    from repro.core import optimizer as O
+    from repro.core import relalg as R
+    from repro.core.executor import Executor
+    from repro.core.session import _param_value
+
+    node = q.node
+    wanted = R.output_columns(node, db.catalog)
+    rules = tuple(r for r in O.DEFAULT_RULES
+                  if r not in (O.decorrelate_in_computes,
+                               O.decorrelate_filters))
+    plan = O.optimize(node, db.catalog, required=set(wanted), rules=rules)
+    if R.output_columns(plan, db.catalog) != wanted:
+        plan = R.Project(plan, wanted)
+    assert _plan_has_correlated_subquery(plan), (
+        "per-row baseline lost its correlated subquery — the oracle "
+        "would be comparing decorrelated against decorrelated")
+    pvals = {n: _param_value(v) for n, v in (params or {}).items()}
+    mt = Executor(db.catalog).execute(plan, params=pvals)
+    return types.SimpleNamespace(masked=mt)
+
+
+def check_decorrelation_oracle(kind: str, keyshape: str, agg: str,
+                               seed: int, n_rows: int,
+                               params_list=None, *, ddl: bool = False) -> None:
+    """Decorrelated == per-row, element-wise, everywhere.
+
+    Builds the spec's correlated statement, executes it under
+    FROID / INTERPRETED / HEKATON serially and through ``execute_many``
+    (unsharded and sharded over the live mesh), and compares every result
+    against the per-row apply baseline (same optimizer rules minus the
+    decorrelation passes, executed row-at-a-time semantics preserved).
+    Covers empty inner relations (``n_rows=0``), bindings with no
+    matching group ("expr" keyshape: NULL scalar / FALSE exists), and the
+    non-rewritable "nonequi" keyshape (per-row apply left in place, same
+    answers).  ``ddl=True`` reloads ``facts`` mid-oracle and re-checks —
+    the decorrelated build must re-specialize, not serve stale groups."""
+    db = make_session(seed, n_rows)
+    q = decorr_query(kind, keyshape, agg)
+    if params_list is None:
+        params_list = [{"minq": 0}, {"minq": 4}, {"minq": 9}]
+
+    stmt = db.prepare(q, FROID)
+    if keyshape == "nonequi":
+        assert _plan_has_correlated_subquery(stmt.plan), (
+            "non-equi correlation must keep the per-row apply")
+    else:
+        assert not _plan_has_correlated_subquery(stmt.plan), (
+            f"spec ({kind}, {keyshape}, {agg}) did not decorrelate:\n"
+            + stmt.explain())
+
+    def run_all(label_prefix: str) -> None:
+        serial = []
+        for i, p in enumerate(params_list):
+            expected = _per_row_reference(db, q, p)
+            got = stmt.execute(params=p)
+            assert_rows_equal(expected, got,
+                              f"{label_prefix}froid[{i}] vs per-row")
+            serial.append(got)
+        for policy in (INTERPRETED, HEKATON):
+            other = db.prepare(q, policy)
+            for i, p in enumerate(params_list):
+                assert_rows_equal(serial[i], other.execute(params=p),
+                                  f"{label_prefix}{policy.name}[{i}]")
+        mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+        for policy, label in ((FROID, "many"),
+                              (FROID.sharded(mesh), "sharded")):
+            batched = db.prepare(q, policy).execute_many(params_list)
+            assert len(batched) == len(serial)
+            for i, (s, b) in enumerate(zip(serial, batched)):
+                assert_rows_equal(s, b, f"{label_prefix}{label}[{i}]")
+
+    run_all("")
+    if ddl:
+        db.create_table("facts", **facts_data(seed + 1, max(n_rows, 1)))
+        run_all("post-ddl ")
 
 
 def check_invocation_oracle(ops, seed: int, n_rows: int,

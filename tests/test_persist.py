@@ -140,6 +140,80 @@ def test_store_rejects_unstable_keys(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# eviction: byte budget, LRU-by-recency, degradation-to-miss only
+# ---------------------------------------------------------------------------
+
+
+def test_store_eviction_lru_by_mtime(tmp_path):
+    st = PlanStore(str(tmp_path))  # unbudgeted writer: fill freely
+    for i in range(10):
+        p = st.put((f"k{i}",), {}, b"x" * 1024)
+        os.utime(p, (1000 + i, 1000 + i))  # deterministic recency order
+    full = st.nbytes()
+    budgeted = PlanStore(str(tmp_path), max_bytes=full // 2)
+    n = budgeted.sweep()
+    assert n >= 1
+    assert budgeted.nbytes() <= budgeted.max_bytes
+    # oldest-recency entries went first; the newest survived
+    assert budgeted.get(("k0",)) is None
+    assert budgeted.get(("k9",)) is not None
+    s = budgeted.stats()
+    assert s["evictions"] == n and s["sweeps"] == 1
+    assert s["evicted_bytes"] >= n * 1024
+    assert s["max_bytes"] == full // 2
+
+
+def test_store_get_refreshes_recency(tmp_path):
+    """A read protects an entry: the LRU victim is the *unread* old entry,
+    not the oldest-written one."""
+    st = PlanStore(str(tmp_path))
+    for i in range(4):
+        p = st.put((f"k{i}",), {}, b"x" * 1024)
+        os.utime(p, (1000 + i, 1000 + i))
+    assert st.get(("k0",)) is not None  # touch: k0 becomes most recent
+    budgeted = PlanStore(str(tmp_path), max_bytes=st.nbytes() - 1024)
+    assert budgeted.sweep() == 1
+    assert budgeted.get(("k0",)) is not None  # read-protected
+    assert budgeted.get(("k1",)) is None  # the true LRU victim
+
+
+def test_store_put_sweeps_back_under_budget(tmp_path):
+    st = PlanStore(str(tmp_path), max_bytes=4096)
+    for i in range(12):
+        p = st.put((f"k{i}",), {}, b"y" * 1024)
+        os.utime(p, (1000 + i, 1000 + i))
+    assert st.nbytes() <= 4096
+    assert st.get((f"k{11}",)) is not None  # a put never evicts itself
+    assert st.eviction_stats["evictions"] >= 1
+
+
+def test_session_budgeted_store_stays_correct(tmp_path):
+    """A budget tight enough to churn on every save still answers every
+    query identically to a store-less session — eviction degrades to
+    recompile, never to a wrong result — and the directory stays bounded."""
+    oracle = _session(tmp_path / "none", store=False)
+    q = param_query()
+
+    small = PlanStore(str(tmp_path / "s"), max_bytes=512)  # every entry over
+    s = Session(store=small)
+    populate_session(s, 7, 23)
+    s.create_function(build_udf(FIXED_PROGRAMS["uncorrelated_sum_case"]).build())
+    # distinct parameter signatures (int vs float cut) force distinct
+    # store entries, so each save churns the one before it out
+    for cut in (3, 5.5, 5):
+        params = {"cut": cut, "shift": 0.5}
+        got = s.execute(q, FROID, params=params)
+        assert_rows_equal(oracle.execute(q, FROID, params=params), got,
+                          f"budgeted-store vs oracle (cut={cut})")
+    # every entry alone exceeds the budget, so each save evicts all
+    # predecessors: at most the just-written (never-self-evicted) survives
+    assert len(small.entries()) <= 1
+    ps = s.persist_stats
+    assert ps["store"]["evictions"] >= 1
+    assert ps["store"]["max_bytes"] == 512
+
+
+# ---------------------------------------------------------------------------
 # key stability: repr round-trip, cross-process determinism
 # ---------------------------------------------------------------------------
 
@@ -157,6 +231,20 @@ def test_stable_key_rejects_process_local():
         assert_stable_key(("ok", ["lists", "are", "mutable"]))
     with pytest.raises(TypeError):
         assert_stable_key(({"dicts": "too"},))
+
+
+def test_stable_key_rejects_id_shaped_slot_names():
+    """The pre-PR-10 slot-parameter spelling embedded a process-local
+    ``node_id``; any key (or key component) carrying that shape must be
+    refused, while the canonical ordinal spelling passes."""
+    from repro.fuse.merge import slot_param
+
+    with pytest.raises(TypeError):
+        assert_stable_key("__cse_slot_140235678901234")
+    with pytest.raises(TypeError):
+        assert_stable_key(("fused", ("__cse_slot_7", "f32")))
+    assert_stable_key(slot_param(0))  # canonical: ordinal-spelled
+    assert_stable_key(("fused", (slot_param(3), "f32")))
 
 
 def test_persist_keys_identical_across_sessions(tmp_path):
@@ -264,6 +352,63 @@ def test_policy_opt_out(tmp_path):
     assert s.persist_stats["saves"] == 0
     # identity unchanged: opted-out and opted-in policies share caches
     assert FROID.persisted(False).fingerprint() == FROID.fingerprint()
+
+
+def _template_session(tmp_path):
+    """Session over shared tables sized so a fused wave pools a
+    parameter-unified template (same data every call: the content env
+    token must match across sessions for the store to answer)."""
+    s = Session(store=str(tmp_path))
+    rng = np.random.default_rng(0)
+    s.create_table(
+        "detail",
+        d_key=rng.integers(0, 40, 200),
+        d_val=rng.uniform(0, 100, 200).astype(np.float32),
+    )
+    s.create_table("T", a=rng.integers(0, 40, 30))
+    return s
+
+
+def _template_calls(s):
+    """Two distinct statements riding one parameter-unified aggregate
+    subquery (unifies modulo param naming), three distinct bindings."""
+    from repro.core.frontend import col, param, scalar_subquery, scan, sum_
+
+    def q(pname, out):
+        agg = (scan("detail").filter(col("d_val") > param(pname))
+               .agg(s=sum_(col("d_val"))))
+        return (scan("T")
+                .compute(**{out: scalar_subquery(agg.node, "s")
+                            + col("a") * 0.0})
+                .project("a", out))
+
+    s1 = s.prepare(q("x", "v1"), FROID)
+    s2 = s.prepare(q("y", "v2"), FROID)
+    return [(s1, {"x": 10.0}), (s2, {"y": 10.0}),
+            (s1, {"x": 20.0}), (s2, {"y": 30.0})]
+
+
+def test_fused_template_wave_roundtrips_fresh_session(tmp_path):
+    """A fused wave carrying pooled templates AOT-persists, and a FRESH
+    session serves the identical wave from the store.  This is the PR-9
+    regression: slot parameters spelled by process-local node id made the
+    fused argument pytree unreproducible, so template waves never
+    persisted (and would have mis-bound if they had)."""
+    cold = _template_session(tmp_path)
+    expected = cold.execute_fused(_template_calls(cold))
+    st = expected[0].stats
+    assert st["fused"] and st["cse_template_groups"] >= 1
+    assert st["cse_bindings"] == 3
+    assert cold.persist_stats["saves"] >= 1
+
+    warm = _template_session(tmp_path)
+    got = warm.execute_fused(_template_calls(warm))
+    gst = got[0].stats
+    assert gst["fused"] and gst["cse_template_groups"] >= 1
+    assert warm.cache_stats["persist_hits"] >= 1
+    assert warm.persist_stats["saves"] == 0  # nothing recompiled
+    for i, (e, g) in enumerate(zip(expected, got)):
+        assert_rows_equal(e, g, f"fused template warm[{i}]")
 
 
 def test_execute_many_warm_start(tmp_path):
